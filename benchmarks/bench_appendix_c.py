@@ -1,0 +1,31 @@
+"""Appendix C: C_16 via a width-3 grouped GHD (Figure 7a) vs the width-1
+chain GHD (Figure 8): ~3x fewer rounds for more communication — the
+round/communication tradeoff GYM exposes."""
+from __future__ import annotations
+
+from repro.core.gym import GymConfig, gym
+from repro.core.queries import chain_ghd, chain_ghd_grouped, chain_query
+from repro.data.synthetic import chain_data_sparse
+
+
+def run() -> list:
+    n = 16
+    q = chain_query(n)
+    # matching-database-style inputs keep intermediates O(|R|) (Appendix A)
+    data = chain_data_sparse(n, seed=7)
+
+    g1 = chain_ghd(n)  # width 1, depth 15
+    g3 = chain_ghd_grouped(n, 3)  # width 3, depth 5
+    r1, _, led1 = gym(q, data, ghd=g1, p=4, config=GymConfig(seed=5))
+    r3, _, led3 = gym(q, data, ghd=g3, p=4, config=GymConfig(seed=5))
+    assert {tuple(r) for r in r1} == {tuple(r) for r in r3}
+
+    out = [
+        dict(bench="appendix_c", ghd="width-1 (Fig 8)", width=1,
+             rounds=led1.rounds, comm=led1.comm_tuples),
+        dict(bench="appendix_c", ghd="width-3 grouped (Fig 7a)", width=3,
+             rounds=led3.rounds, comm=led3.comm_tuples),
+    ]
+    # the paper's 12c+6 vs 32c+16: grouped GHD uses ~n/group of the rounds
+    assert led3.rounds < led1.rounds, (led3.rounds, led1.rounds)
+    return out

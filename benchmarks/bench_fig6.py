@@ -1,0 +1,31 @@
+"""Figure 6: Log-GTA transformation trace on the TC_15 GHD (width 2,
+iw 1, depth 4 in our node-count convention) -> log-depth, width <= 3."""
+from __future__ import annotations
+
+import math
+
+from repro.core.loggta import log_gta
+from repro.core.queries import triangle_chain_ghd, triangle_chain_query
+
+
+def run() -> list:
+    q = triangle_chain_query(5)  # 15 relations
+    g = triangle_chain_ghd(5)
+    iw = g.intersection_width(q)
+    trace: list = []
+    out = log_gta(g.make_complete(q), q, check=True, trace=trace)
+    res = dict(
+        bench="fig6",
+        width_in=g.width,
+        iw_in=iw,
+        depth_in=g.depth,
+        width_out=out.width,
+        depth_out=out.depth,
+        iterations=len(trace),
+    )
+    assert out.width <= max(g.width, 3 * iw) == 3
+    assert out.depth <= 2 * math.ceil(math.log2(out.size())) + 2
+    out.validate(q)
+    return [res] + [
+        dict(bench="fig6_trace", **t) for t in trace
+    ]

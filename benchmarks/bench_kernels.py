@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks: correctness-at-size plus CPU wall time of the
+jnp reference paths (the Pallas kernels themselves are TPU-target; on CPU
+they run in interpret mode and are validated in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.semijoin_probe import semijoin_probe
+
+
+def _time(f, *args, n=3):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> list:
+    out = []
+    rng = np.random.default_rng(0)
+
+    # semijoin probe: interpret kernel == ref at benchmark size
+    q = jnp.asarray(rng.integers(0, 10_000, 4096), jnp.int32)
+    keys = jnp.asarray(np.sort(rng.integers(0, 10_000, 8192)), jnp.int32)
+    got = semijoin_probe(q, keys, interpret=True)
+    want = ref.semijoin_probe_ref(q, keys)
+    assert bool((got == want).all())
+    t = _time(jax.jit(ref.semijoin_probe_ref), q, keys)
+    out.append(dict(bench="kernel_probe", n=4096, m=8192, ref_ms=round(t * 1e3, 3)))
+
+    # flash attention: interpret kernel ~ ref at a serving-ish size
+    qq = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    got = flash_attention(qq, kk, vv, causal=True, blk_q=128, blk_k=128, interpret=True)
+    want = ref.attention_ref(qq, kk, vv, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5, rtol=3e-5)
+    t = _time(
+        jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, causal=True)), qq, kk, vv
+    )
+    out.append(dict(bench="kernel_attn", shape="1x4x256x64", ref_ms=round(t * 1e3, 3)))
+    return out

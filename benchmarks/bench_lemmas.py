@@ -1,0 +1,67 @@
+"""Lemmas 8-11 cost scaling: measured communication of the grid join,
+tree dedup, grid semijoin, and intersection primitives vs the paper's
+analytic forms."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.costs import B, lemma8_join_comm, lemma10_semijoin_comm
+from repro.relational.grid import grid_join, grid_semijoin, tree_dedup
+from repro.relational.ops import dist_intersect
+from repro.relational.spmd import SPMD
+from repro.relational.table import DTable
+
+
+def _table(rows: np.ndarray, schema, p: int) -> DTable:
+    return DTable.scatter_numpy(rows.astype(np.int32), schema, p)
+
+
+def run() -> list:
+    out = []
+    p = 8
+    spmd = SPMD(p)
+    rng = np.random.default_rng(0)
+
+    # Lemma 8: grid join comm ~ g_s|R| + g_r|S|
+    for sz in (32, 64, 128):
+        a = _table(rng.integers(0, 8, (sz, 2)), ("A", "B"), p)
+        b = _table(rng.integers(0, 8, (sz, 2)), ("B", "C"), p)
+        j, st = grid_join(spmd, a, b, out_cap=sz * sz)
+        out.append(
+            dict(bench="lemma8", n=sz, comm=st["sent"],
+                 analytic=int(lemma8_join_comm([sz, sz], M=sz, out=0)))
+        )
+        assert st["dropped"] == 0
+    # comm grows superlinearly in input (grid replication)
+    assert out[-1]["comm"] > 2 * out[0]["comm"]
+
+    # Lemma 9: tree dedup: log_fan(p) rounds, <= |S| comm per round
+    dup = np.repeat(rng.integers(0, 16, (16, 2)), 8, axis=0)
+    t = _table(dup, ("A", "B"), p)
+    d, st, rounds = tree_dedup(spmd, t, fan=2, seed=1)
+    n_unique = len({tuple(r) for r in dup})
+    assert int(np.asarray(d.valid).sum()) == n_unique
+    expected_rounds = int(np.ceil(np.log2(p)))
+    out.append(
+        dict(bench="lemma9", rounds=rounds, expected=expected_rounds,
+             comm=st["sent"])
+    )
+    assert rounds == expected_rounds
+
+    # Lemma 10: grid semijoin in O(1) rounds
+    s = _table(rng.integers(0, 6, (96, 2)), ("A", "B"), p)
+    r = _table(rng.integers(0, 6, (96, 2)), ("B", "C"), p)
+    sj, st, rounds = grid_semijoin(spmd, s, r, out_cap=96)
+    out.append(
+        dict(bench="lemma10", rounds=rounds, comm=st["sent"],
+             analytic=int(lemma10_semijoin_comm(96, 96, M=24)))
+    )
+    assert rounds <= 2 and st["dropped"] == 0
+
+    # Lemma 11: intersection in 1 round, |R| + |S| comm
+    a = _table(rng.integers(0, 4, (64, 2)), ("A", "B"), p)
+    b = _table(rng.integers(0, 4, (64, 2)), ("A", "B"), p)
+    i, st = dist_intersect(spmd, a, b, seed=2)
+    out.append(dict(bench="lemma11", comm=st["sent"], bound=128))
+    assert st["sent"] <= 128
+    return out

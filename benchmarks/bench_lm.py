@@ -1,0 +1,37 @@
+"""LM wing micro-benchmark: reduced-config train-step wall time and
+tokens/s on CPU for three representative families (dense / moe / hybrid)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import CONFIGS, get_model, make_smoke_batch, reduced_config
+from repro.train import OptConfig, TrainConfig, init_train_state, make_train_step
+
+
+def run() -> list:
+    out = []
+    for arch in ("smollm-360m", "grok-1-314b", "zamba2-7b"):
+        cfg = reduced_config(CONFIGS[arch])
+        model = get_model(cfg)
+        tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup=1))
+        params, opt = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+        batch = make_smoke_batch(cfg, jax.random.PRNGKey(1), b=4, s=64)
+        step = jax.jit(make_train_step(model, tcfg))
+        params, opt, m = step(params, opt, batch)  # compile
+        t0 = time.perf_counter()
+        n = 3
+        for _ in range(n):
+            params, opt, m = step(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / n
+        toks = 4 * 64
+        out.append(
+            dict(
+                bench="lm_train", arch=arch, family=cfg.family,
+                step_ms=round(dt * 1e3, 1), tokens_per_s=int(toks / dt),
+                loss=round(float(m["loss"]), 3),
+            )
+        )
+    return out

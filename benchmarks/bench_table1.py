@@ -1,0 +1,39 @@
+"""Table 1: widths, min-depth GHDs, and intersection widths of S_n, C_n,
+TC_n — computed from our GHD machinery, checked against the paper."""
+from __future__ import annotations
+
+from repro.core.queries import (
+    chain_ghd,
+    chain_query,
+    star_ghd,
+    star_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+
+
+def run() -> list:
+    rows = []
+    n = 12
+    # S_n: width 1, min-depth 1, iw 1
+    q = star_query(n)
+    g = star_ghd(n)
+    rows.append(("S_n", g.width, g.depth, g.intersection_width(q), (1, 1, 1)))
+    # C_n: width 1, depth n-1 (Theta(n)), iw 1
+    q = chain_query(n)
+    g = chain_ghd(n)
+    rows.append(("C_n", g.width, g.depth, g.intersection_width(q), (1, n - 1, 1)))
+    # TC_n: width 2, depth n/3-1 (Theta(n)), iw 1
+    t = n // 3
+    q = triangle_chain_query(t)
+    g = triangle_chain_ghd(t)
+    rows.append(("TC_n", g.width, g.depth, g.intersection_width(q), (2, t - 1, 1)))
+
+    out = []
+    for name, w, d, iw, (ew, ed, eiw) in rows:
+        ok = (w == ew) and (d == ed) and (iw == eiw)
+        out.append(
+            dict(bench="table1", query=name, width=w, depth=d, iw=iw, ok=ok)
+        )
+        assert ok, (name, w, d, iw)
+    return out

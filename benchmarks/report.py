@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md's §Dry-run and §Roofline tables from the dry-run
+JSONs (baseline + optimized).  Run after a sweep:
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def load(name):
+    with open(os.path.join(ROOT, name)) as f:
+        return json.load(f)
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(db, mesh):
+    rows = []
+    for k in sorted(db):
+        v = db[k]
+        if v.get("mesh") != mesh or v.get("status") != "ok":
+            continue
+        c = v.get("cost_per_device", {})
+        coll = sum(v.get("collective_bytes_global", {}).values())
+        rows.append(
+            f"| {v['arch']} | {v['shape']} | {v['chips']} | "
+            f"{v['n_params']/1e9:.2f}B | {fmt_bytes(v.get('bytes_per_device'))} | "
+            f"{c.get('flops', 0):.3e} | {c.get('bytes accessed', 0):.3e} | "
+            f"{coll/1e12:.2f} | {v['compile_s']}s |"
+        )
+    head = (
+        "| arch | shape | chips | params | GB/dev | flops/dev | hbm B/dev | "
+        "coll TB (global) | compile |\n|---|---|---|---|---|---|---|---|---|"
+    )
+    return head + "\n" + "\n".join(rows)
+
+
+def roofline_table(db, db_opt, mesh="single"):
+    rows = []
+    for k in sorted(db):
+        v = db[k]
+        if v.get("mesh") != mesh or v.get("status") != "ok":
+            continue
+        r = v["roofline"]
+        o = db_opt.get(k, {}).get("roofline", {}) if db_opt else {}
+        imp = (
+            f"{r['bound_s']/o['bound_s']:.1f}x" if o.get("bound_s") else "-"
+        )
+        rows.append(
+            f"| {v['arch']} | {v['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{100*r.get('roofline_frac',0):.1f}% | "
+            f"{o.get('bound_s', float('nan')):.3g} | {imp} |"
+        )
+    head = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "roofline frac | optimized bound s | gain |\n"
+        "|---|---|---|---|---|---|---|---|---|"
+    )
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    base = load("dryrun_results_baseline.json")
+    try:
+        opt = load("dryrun_results.json")
+    except FileNotFoundError:
+        opt = {}
+    print("### Single-pod (16x16 = 256 chips) — baseline dry-run\n")
+    print(dryrun_table(base, "single"))
+    print("\n### Multi-pod (2x16x16 = 512 chips) — baseline dry-run\n")
+    print(dryrun_table(base, "multi"))
+    print("\n### Roofline (single-pod, baseline terms; optimized bound alongside)\n")
+    print(roofline_table(base, opt))
+
+
+if __name__ == "__main__":
+    main()

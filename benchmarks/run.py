@@ -1,0 +1,70 @@
+"""Benchmark harness: one module per paper table/figure + engine/kernel/LM
+micro-benches.  Prints one JSON line per result row; any internal
+assertion failure marks the run failed.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,table3]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+from . import (
+    bench_appendix_c,
+    bench_engine,
+    bench_fig6,
+    bench_kernels,
+    bench_lemmas,
+    bench_lm,
+    bench_table1,
+    bench_table2,
+    bench_table3,
+)
+
+ALL = {
+    "table1": bench_table1,
+    "table2": bench_table2,
+    "table3": bench_table3,
+    "fig6": bench_fig6,
+    "appendix_c": bench_appendix_c,
+    "lemmas": bench_lemmas,
+    "engine": bench_engine,
+    "kernels": bench_kernels,
+    "lm": bench_lm,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+
+    failed = []
+    for name in names:
+        mod = ALL[name]
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            for r in rows:
+                print(json.dumps(r))
+            print(
+                json.dumps(
+                    {"bench": name, "status": "ok", "secs": round(time.time() - t0, 1)}
+                )
+            )
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            print(json.dumps({"bench": name, "status": "FAIL", "error": str(e)}))
+            failed.append(name)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("ALL BENCHMARKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

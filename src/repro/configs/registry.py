@@ -1,0 +1,167 @@
+"""Architecture + shape registry: config lookup by ``--arch`` id, reduced
+smoke configs, input ShapeDtypeStructs for the dry-run, and the per-cell
+skip policy (DESIGN.md Sec. 3)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+from .gemma2_9b import CONFIG as _gemma2
+from .grok_1_314b import CONFIG as _grok
+from .kimi_k2_1t_a32b import CONFIG as _kimi
+from .qwen2_vl_2b import CONFIG as _qwen2vl
+from .qwen3_8b import CONFIG as _qwen3
+from .smollm_360m import CONFIG as _smollm
+from .starcoder2_7b import CONFIG as _starcoder2
+from .whisper_small import CONFIG as _whisper
+from .xlstm_125m import CONFIG as _xlstm
+from .zamba2_7b import CONFIG as _zamba2
+
+CONFIGS: Dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        _qwen2vl, _xlstm, _grok, _kimi, _whisper,
+        _gemma2, _starcoder2, _smollm, _qwen3, _zamba2,
+    ]
+}
+
+# shape id -> (seq_len, global_batch, kind)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+# long_500k only for sub-quadratic (SSM/hybrid) archs, per the assignment
+LONG_OK = {"xlstm-125m", "zamba2-7b"}
+
+
+def cell_enabled(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_OK
+    return True
+
+
+def cells() -> Tuple[Tuple[str, str], ...]:
+    out = []
+    for a in CONFIGS:
+        for s in SHAPES:
+            if cell_enabled(a, s):
+                out.append((a, s))
+    return tuple(out)
+
+
+def get_config(arch: str) -> ArchConfig:
+    return CONFIGS[arch]
+
+
+def get_model(cfg: ArchConfig):
+    from repro.models.transformer import DecoderLM
+    from repro.models.whisper import WhisperModel
+
+    return WhisperModel(cfg) if cfg.encdec else DecoderLM(cfg)
+
+
+# -------------------------------------------------------------- reductions
+def reduced_config(cfg: ArchConfig) -> ArchConfig:
+    """Smoke-test scale: same family/block kinds, tiny everything."""
+    # keep one occurrence of each distinct kind, in order
+    kinds = []
+    for k in cfg.blocks():
+        if k not in kinds:
+            kinds.append(k)
+    pattern = []
+    for k in kinds:
+        pattern.extend([k, k] if len(kinds) <= 2 else [k])
+    heads = 4
+    kv = max(1, min(heads, (cfg.n_kv_heads * heads) // max(1, cfg.n_heads)) or 1)
+    if kv == 0 or heads % kv:
+        kv = heads
+    return dataclasses.replace(
+        cfg,
+        n_layers=len(pattern),
+        pattern=tuple(pattern),
+        d_model=64,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab=128,
+        n_experts=min(cfg.n_experts, 4),
+        topk=min(cfg.topk, 2),
+        moe_d_ff=64 if cfg.moe_d_ff else 0,
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        ssm_state=16 if cfg.ssm_state else 0,
+        window=8 if cfg.window else 0,
+        chunk=16,
+        enc_layers=2 if cfg.encdec else 0,
+        dtype="float32",
+    )
+
+
+# ------------------------------------------------------------- input specs
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    train  -> kwargs of train_step:  {"batch": {...}}
+    prefill-> kwargs of prefill_step
+    decode -> kwargs of serve_step (tokens + full caches)
+    """
+    s, b, kind = SHAPES[shape]
+    model = get_model(cfg)
+    if kind == "train":
+        if cfg.encdec:
+            batch = {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.jdtype),
+                "tokens": _tok(b, s // cfg.dec_ratio),
+                "targets": _tok(b, s // cfg.dec_ratio),
+            }
+        else:
+            batch = {"tokens": _tok(b, s), "targets": _tok(b, s)}
+            if cfg.rope == "mrope":
+                batch["pos"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        return {"batch": batch}
+    if kind == "prefill":
+        if cfg.encdec:
+            return {"batch": {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.jdtype)}}
+        batch = {"tokens": _tok(b, s)}
+        if cfg.rope == "mrope":
+            batch["pos"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        return {"batch": batch}
+    # decode: one new token against an S-length cache
+    if cfg.encdec:
+        caches = jax.eval_shape(lambda: model.init_caches(b, s, 64))
+    else:
+        caches = jax.eval_shape(lambda: model.init_caches(b, s, s - 1))
+    tokens = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return {"caches": caches, "tokens": tokens}
+
+
+def make_smoke_batch(cfg: ArchConfig, rng, b: int = 2, s: int = 32) -> Dict:
+    """Concrete small batch for CPU smoke tests (reduced configs)."""
+    kt, kf = jax.random.split(rng)
+    if cfg.encdec:
+        sd = max(4, s // cfg.dec_ratio)
+        return {
+            "frames": jax.random.normal(kf, (b, s, cfg.d_model), cfg.jdtype),
+            "tokens": jax.random.randint(kt, (b, sd), 0, cfg.vocab),
+            "targets": jax.random.randint(kt, (b, sd), 0, cfg.vocab),
+        }
+    batch = {
+        "tokens": jax.random.randint(kt, (b, s), 0, cfg.vocab),
+        "targets": jax.random.randint(kt, (b, s), 0, cfg.vocab),
+    }
+    if cfg.rope == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        batch["pos"] = jnp.broadcast_to(pos[None], (3, b, s))
+    return batch

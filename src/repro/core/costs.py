@@ -1,0 +1,85 @@
+"""Analytic cost formulas from the paper (Tables 2 & 3, Lemmas 8-11,
+Theorems 12/14/15/23).  Used by the benchmarks to place measured ledger
+numbers next to the paper's worst-case predictions."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+from .ghd import GHD
+from .hypergraph import Query
+
+
+def B(X: float, M: float) -> float:
+    """The paper's B(X, M) = X^2 / M (assumption 4, Sec. 3.3)."""
+    return X * X / M
+
+
+def lemma8_join_comm(sizes, M: float, out: float) -> float:
+    """One-round grid join of w relations: (sum |R_i|)^w / M^(w-1) + OUT."""
+    s = float(sum(sizes))
+    w = len(sizes)
+    return s**w / M ** (w - 1) + out
+
+
+def lemma10_semijoin_comm(r: float, s: float, M: float) -> float:
+    """O(B(|R| + |S|, M))."""
+    return B(r + s, M)
+
+
+def gym_comm(n: int, IN: float, OUT: float, M: float, w: int) -> float:
+    """Theorem 15: O(n * B(IN^w + OUT, M))."""
+    return n * B(IN**w + OUT, M)
+
+
+def gym_rounds(d: int, n: int) -> float:
+    """Theorem 15: O(d + log n)."""
+    return d + math.log2(max(2, n))
+
+
+def gym_loggta_comm(
+    n: int, IN: float, OUT: float, M: float, w: int, iw: int
+) -> float:
+    """Theorem 23: O(n * B(IN^max(w,3iw) + OUT, M))."""
+    return n * B(IN ** max(w, 3 * iw) + OUT, M)
+
+
+def acqmr_comm(n: int, IN: float, OUT: float, M: float, w: int) -> float:
+    """Sec. 2.2: O(n * B(IN^{3w} + OUT, M))."""
+    return n * B(IN ** (3 * w) + OUT, M)
+
+
+def shares_comm_star(n: int, IN: float, M: float, OUT: float) -> float:
+    """Table 2 (S_n): O(IN^{n/2} / M^{n/2} + OUT) worst case."""
+    half = n / 2.0
+    return IN**half / M**half + OUT
+
+
+def shares_comm_tc(n: int, IN: float, M: float, OUT: float) -> float:
+    """Table 3 (TC_n): O(IN^{n/6} / M^{n/6} + OUT) worst case."""
+    sixth = n / 6.0
+    return IN**sixth / M**sixth + OUT
+
+
+def one_round_chain_lower_bound(n: int, IN: float, M: float) -> float:
+    """Sec. 1: any 1-round algorithm for C_n needs >= (IN/M)^{n/4} comm."""
+    return (IN / M) ** (n / 4.0)
+
+
+def predicted_table(
+    query: Query, ghd: GHD, IN: float, OUT: float, M: float
+) -> Dict[str, float]:
+    w = ghd.width
+    iw = ghd.intersection_width(query)
+    n = query.n
+    d = ghd.depth
+    return {
+        "width": w,
+        "iw": iw,
+        "depth": d,
+        "gym_rounds": gym_rounds(d, n),
+        "gym_comm": gym_comm(n, IN, OUT, M, w),
+        "gym_loggta_rounds": gym_rounds(int(math.log2(max(2, 4 * n))) + 1, n),
+        "gym_loggta_comm": gym_loggta_comm(n, IN, OUT, M, w, iw),
+        "acqmr_comm": acqmr_comm(n, IN, OUT, M, w),
+    }

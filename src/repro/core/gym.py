@@ -1,0 +1,466 @@
+"""GYM — Generalized Yannakakis in MapReduce (paper Section 5).
+
+Given any complete GHD D(T, chi, lam) of a query Q:
+
+  1. *Materialization stage* (Theorem 15): per tree vertex v, compute
+     IDB_v = |><|_{R in lam(v)} pi_{attrs(R) & chi(v)}(R)   — schema chi(v).
+     One Lemma 8 grid round (faithful) or a left-deep hash-join cascade
+     (optimized).  D is now a width-1 GHD over the IDBs; Q' = |><| IDB_v is
+     acyclic and equals Q (strong completeness enforces every atom).
+  2. *DYM-d* (Sec. 4.3) on the IDB tree: upward semijoins, downward
+     semijoins, join phase — O(d + log n) rounds total.
+
+Two operator strategies, selectable per run:
+  - ``strategy='grid'``  — paper-faithful Lemmas 8/10 (skew-proof,
+    B(X, M) = X^2/M communication).
+  - ``strategy='hash'``  — beyond-paper: hash co-partitioning
+    (comm ~ inputs + outputs, skew-sensitive; overflow triggers the
+    abort-retry path with doubled capacities, the paper's own semantics).
+
+The driver is a resumable state machine: between BSP round-groups its full
+state (node tables + cursor + ledger) can be snapshotted to disk and a new
+driver can resume mid-query (fault tolerance; see
+``examples/gym_fault_tolerance.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..relational import grid as G
+from ..relational import ops as R
+from ..relational.ledger import Ledger
+from ..relational.spmd import SPMD
+from ..relational.table import DTable, Table
+from .ghd import GHD
+from .hypergraph import Query
+from .planner import Op, Round, dym_d_schedule, dym_n_schedule
+
+
+# --------------------------------------------------------------------------
+# op wrappers: each returns (DTable, comm_sent, dropped, engine_rounds)
+# --------------------------------------------------------------------------
+class _Engine:
+    def __init__(self, spmd: SPMD, strategy: str, seed: int):
+        assert strategy in ("hash", "grid")
+        self.spmd = spmd
+        self.strategy = strategy
+        self.seed = seed
+        self._ctr = 0
+
+    def _s(self) -> int:
+        self._ctr += 1
+        return self.seed + 7919 * self._ctr
+
+    def semijoin(self, s: DTable, r: DTable, cap: int):
+        cap = _pow2(cap)
+        if self.strategy == "grid":
+            out, st, rounds = G.grid_semijoin(self.spmd, s, r, out_cap=cap, seed=self._s())
+            return out, st["sent"], st["dropped"], rounds
+        out, st = R.dist_semijoin(
+            self.spmd, s, r, seed=self._s(), cap_recv=(cap, self.spmd.p * r.cap)
+        )
+        return out, st["sent"], st["dropped"], 1
+
+    def join(self, a: DTable, b: DTable, out_cap: int):
+        out_cap = _pow2(out_cap)
+        if self.strategy == "grid":
+            out, st = G.grid_join(self.spmd, a, b, out_cap=out_cap)
+            return out, st["sent"], st["dropped"], 1
+        out, st = R.dist_join(self.spmd, a, b, seed=self._s(), out_cap=out_cap)
+        return out, st["sent"], st["dropped"], 1
+
+    def multijoin(self, parts: List[DTable], out_cap: int):
+        out_cap = _pow2(out_cap)
+        if self.strategy == "grid" or len(parts) > 2:
+            out, st = G.grid_multiway_join(self.spmd, parts, out_cap=out_cap)
+            return out, st["sent"], st["dropped"], 1
+        if len(parts) == 1:
+            return parts[0], 0, 0, 0
+        out, st = R.dist_join(self.spmd, parts[0], parts[1], seed=self._s(), out_cap=out_cap)
+        return out, st["sent"], st["dropped"], 1
+
+    def intersect(self, a: DTable, b: DTable, cap: int):
+        cap = _pow2(cap)
+        out, st = R.dist_intersect(
+            self.spmd, a, b, seed=self._s(), cap_recv=(cap, self.spmd.p * b.cap)
+        )
+        return out, st["sent"], st["dropped"], 1
+
+    def dedup(self, t: DTable, cap: int):
+        cap = _pow2(cap)
+        out, st = R.dist_dedup(self.spmd, t, seed=self._s(), cap_recv=cap)
+        return out, st["sent"], st["dropped"], 1
+
+
+def _pow2(x: int) -> int:
+    """Round capacities up to powers of two: distinct shapes collapse, so
+    the per-op jit cache is reused across nodes/rounds/retries."""
+    return 1 << max(2, int(x - 1).bit_length())
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class GymConfig:
+    strategy: str = "hash"  # 'hash' (optimized) | 'grid' (paper-faithful)
+    schedule: str = "dym_d"  # 'dym_d' (Sec 4.3) | 'dym_n' (Sec 4.2)
+    seed: int = 0
+    cap_growth: int = 4  # capacity multiplier on overflow-retry
+    max_retries: int = 12
+    count_retries_comm: bool = True  # aborted rounds still moved tuples
+
+
+class GymDriver:
+    """Resumable GYM execution: materialization + DYM on one SPMD backend."""
+
+    def __init__(
+        self,
+        query: Query,
+        ghd: GHD,
+        data: Dict[str, np.ndarray],
+        spmd: SPMD,
+        config: Optional[GymConfig] = None,
+    ):
+        self.query = query
+        self.config = config or GymConfig()
+        self.spmd = spmd
+        self.ghd = ghd.make_complete(query)
+        self.engine = _Engine(spmd, self.config.strategy, self.config.seed)
+        self.ledger = Ledger()
+
+        # stable per-node schemas: chi in first-seen attr order of the query
+        attr_order = {a: i for i, a in enumerate(query.output_attrs)}
+        self.node_schema: Dict[int, Tuple[str, ...]] = {
+            v: tuple(sorted(self.ghd.chi[v], key=lambda a: attr_order[a]))
+            for v in self.ghd.nodes()
+        }
+
+        # load base relations (round-robin scatter = the 'networked FS')
+        p = spmd.p
+        self.base: Dict[str, DTable] = {}
+        for atom in query.atoms:
+            rows = np.asarray(data[atom.rel], dtype=np.int32).reshape(-1, len(atom.attrs))
+            if rows.shape[0]:
+                rows = np.unique(rows, axis=0)  # relations are sets
+            cap = _pow2(max(1, -(-rows.shape[0] // p)))  # pow2: shape reuse
+            self.base[atom.alias] = spmd.device_put(
+                DTable.scatter_numpy(rows, atom.attrs, p, cap=cap)
+            )
+
+        sched = dym_d_schedule if self.config.schedule == "dym_d" else dym_n_schedule
+        self.schedule: List[Round] = sched(self.ghd)
+        self.tables: Dict[int, DTable] = {}
+        # Upward-phase L2 accumulators: the paper's "replace R1 ... for the
+        # duration of the upward semijoin phase".  Node tables stay intact
+        # (the downward phase and join phase need the originals).
+        self.acc: Dict[int, DTable] = {}
+        self.caps: Dict[int, int] = {}
+        self.cursor: int = -1  # -1 = materialization pending
+        self.done = False
+        self.result: Optional[DTable] = None
+
+    # -- capacity heuristics ------------------------------------------------
+    def _init_cap(self, v: int) -> int:
+        per_shard = max(
+            -(-max(1, int(np.asarray(self.base[a].valid).sum())) // self.spmd.p)
+            for a in self.ghd.lam[v]
+        )
+        return _pow2(max(4, 4 * per_shard))
+
+    # -- materialization (Theorem 15 stage 1) --------------------------------
+    def _materialize(self) -> None:
+        cfg = self.config
+        comm = 0
+        dropped_any = True
+        attempt = 0
+        caps = {v: self._init_cap(v) for v in self.ghd.nodes()}
+        max_engine_rounds = 0
+        while dropped_any:
+            attempt += 1
+            assert attempt <= cfg.max_retries, "materialization: too many retries"
+            dropped_any = False
+            comm_try = 0
+            tables: Dict[int, DTable] = {}
+            max_engine_rounds = 0
+            for v in self.ghd.nodes():
+                parts: List[DTable] = []
+                need_dedup = False
+                for alias in sorted(self.ghd.lam[v]):
+                    t = self.base[alias]
+                    keep = [a for a in t.schema if a in self.ghd.chi[v]]
+                    proj = R.dist_project(self.spmd, t, keep, dedup=True)
+                    if len(keep) < len(t.schema):
+                        need_dedup = True  # strict projection: cross-shard dups
+                    parts.append(proj)
+                # order parts by schema for deterministic joined schema, then
+                # reorder columns to the canonical node schema via projection
+                out, sent, drop, rnds = self.engine.multijoin(parts, caps[v])
+                er = rnds
+                if need_dedup:
+                    out, s2, d2, r2 = self.engine.dedup(out, caps[v])
+                    sent += s2
+                    drop += d2
+                    er += r2
+                if drop:
+                    dropped_any = True
+                    caps[v] *= cfg.cap_growth
+                comm_try += sent
+                # canonicalize column order to node schema
+                tables[v] = R.dist_project(self.spmd, out, self.node_schema[v])
+                max_engine_rounds = max(max_engine_rounds, er)
+            if cfg.count_retries_comm or not dropped_any:
+                comm += comm_try
+            if dropped_any:
+                self.ledger.retries += 1
+        self.tables = tables
+        self.caps = {v: max(caps[v], tables[v].cap) for v in tables}
+        self.ledger.add_round(
+            "materialize",
+            [f"IDB({v})<=lam{sorted(self.ghd.lam[v])}" for v in self.ghd.nodes()],
+            comm,
+            n_rounds=max(1, max_engine_rounds),
+        )
+        self.cursor = 0
+
+    # -- one schedule round ---------------------------------------------------
+    def _exec_op(
+        self,
+        op: Op,
+        tab: Dict[int, DTable],
+        acc: Dict[int, DTable],
+        caps: Dict[int, int],
+    ):
+        """Returns (store, new_table, sent, dropped, engine_rounds) where
+        ``store`` is 'tab' (real node update) or 'acc' (upward scratch)."""
+        e = self.engine
+
+        def up(v: int) -> DTable:  # upward view: accumulator if present
+            return acc.get(v, tab[v])
+
+        if op.kind == "semijoin":
+            # upward L1: S := S |>< R, R read through its accumulator
+            tgt, r = op.target, op.args[0]
+            t, c, d, er = e.semijoin(tab[tgt], up(r), caps[tgt])
+            return "tab", t, c, d, er
+        if op.kind == "down_semijoin":
+            tgt, s = op.target, op.args[0]
+            t, c, d, er = e.semijoin(tab[tgt], tab[s], caps[tgt])
+            return "tab", t, c, d, er
+        if op.kind == "join":
+            (r,) = op.args
+            t, c, d, er = e.join(tab[op.target], tab[r], caps[op.target])
+            return "tab", t, c, d, er
+        if op.kind == "pair_filter":
+            s, r2 = op.args
+            t1, c1, d1, rr1 = e.semijoin(tab[s], up(op.target), caps[s])
+            t2, c2, d2, rr2 = e.semijoin(tab[s], up(r2), caps[s])
+            t3, c3, d3, rr3 = e.intersect(t1, t2, caps[s])
+            return "acc", t3, c1 + c2 + c3, d1 + d2 + d3, max(rr1, rr2) + rr3
+        if op.kind == "triple_filter":
+            s, rb, rc = op.args
+            t1, c1, d1, rr1 = e.semijoin(tab[s], up(op.target), caps[s])
+            t2, c2, d2, rr2 = e.semijoin(tab[s], up(rb), caps[s])
+            t3, c3, d3, rr3 = e.semijoin(tab[s], up(rc), caps[s])
+            i1, c4, d4, rr4 = e.intersect(t1, t2, caps[s])
+            i2, c5, d5, rr5 = e.intersect(i1, t3, caps[s])
+            return (
+                "acc",
+                i2,
+                c1 + c2 + c3 + c4 + c5,
+                d1 + d2 + d3 + d4 + d5,
+                max(rr1, rr2, rr3) + rr4 + rr5,
+            )
+        if op.kind == "pair_join":
+            s, r2 = op.args
+            cap = max(caps[op.target], caps[s], caps[r2])
+            t1, c1, d1, rr1 = e.join(tab[op.target], tab[s], cap)
+            t2, c2, d2, rr2 = e.join(tab[r2], tab[s], cap)
+            t3, c3, d3, rr3 = e.join(t1, t2, cap)
+            return "tab", t3, c1 + c2 + c3, d1 + d2 + d3, max(rr1, rr2) + rr3
+        if op.kind == "triple_join":
+            s, rb, rc = op.args
+            cap = max(caps[op.target], caps[s], caps[rb], caps[rc])
+            t1, c1, d1, rr1 = e.join(tab[op.target], tab[s], cap)
+            t2, c2, d2, rr2 = e.join(tab[rb], tab[s], cap)
+            t3, c3, d3, rr3 = e.join(tab[rc], tab[s], cap)
+            j1, c4, d4, rr4 = e.join(t1, t2, cap)
+            j2, c5, d5, rr5 = e.join(j1, t3, cap)
+            return (
+                "tab",
+                j2,
+                c1 + c2 + c3 + c4 + c5,
+                d1 + d2 + d3 + d4 + d5,
+                max(rr1, rr2, rr3) + rr4 + rr5,
+            )
+        raise ValueError(f"unknown op {op.kind}")
+
+    def step(self) -> bool:
+        """Run one schedule round (with abort-retry); returns True if more."""
+        if self.done:
+            return False
+        if self.cursor < 0:
+            self._materialize()
+            return True
+        if self.cursor >= len(self.schedule):
+            self._finish()
+            return False
+        rnd = self.schedule[self.cursor]
+        cfg = self.config
+        snap_tab = dict(self.tables)
+        snap_acc = dict(self.acc)
+        caps = dict(self.caps)
+        attempt = 0
+        comm_total = 0
+        while True:
+            attempt += 1
+            assert attempt <= cfg.max_retries, f"round {self.cursor}: too many retries"
+            new_tab: Dict[int, DTable] = {}
+            new_acc: Dict[int, DTable] = {}
+            comm = 0
+            dropped = 0
+            er_max = 0
+            for op in rnd.ops:
+                store, t, c, d, er = self._exec_op(op, snap_tab, snap_acc, caps)
+                comm += c
+                dropped += d
+                er_max = max(er_max, er)
+                if d:
+                    # grow capacities past the observed overflow so the
+                    # retry converges in one attempt (drop count bounds the
+                    # shortfall across all shards)
+                    for g in (op.target, *op.args):
+                        caps[g] = _pow2(
+                            caps.get(g, 4) * cfg.cap_growth + int(d)
+                        )
+                (new_tab if store == "tab" else new_acc)[op.target] = t
+            if cfg.count_retries_comm or dropped == 0:
+                comm_total += comm
+            if dropped == 0:
+                break
+            self.ledger.retries += 1
+        self.tables = {**snap_tab, **new_tab}
+        self.acc = {**snap_acc, **new_acc}
+        self.caps = caps
+        self.ledger.add_round(
+            rnd.phase, [repr(o) for o in rnd.ops], comm_total, n_rounds=max(1, er_max)
+        )
+        self.cursor += 1
+        if self.cursor >= len(self.schedule):
+            self._finish()
+            return False
+        return True
+
+    def _finish(self) -> None:
+        root = self.ghd.root
+        out = self.tables[root]
+        # canonical output column order
+        want = [a for a in self.query.output_attrs if a in out.schema]
+        self.result = R.dist_project(self.spmd, out, want)
+        self.ledger.output_tuples = int(np.asarray(self.result.valid).sum())
+        self.done = True
+
+    def run(self) -> DTable:
+        while self.step():
+            pass
+        if not self.done:
+            self._finish()
+        assert self.result is not None
+        return self.result
+
+    # -- fault tolerance: snapshot / resume ----------------------------------
+    def save(self, path: str) -> None:
+        """Atomic snapshot of the driver state between rounds."""
+        arrays = {}
+        meta = {
+            "cursor": self.cursor,
+            "done": self.done,
+            "caps": {str(k): v for k, v in self.caps.items()},
+            "ledger": {
+                "records": [dataclasses.asdict(r) for r in self.ledger.records],
+                "output_tuples": self.ledger.output_tuples,
+                "retries": self.ledger.retries,
+            },
+            "schemas": {str(k): list(t.schema) for k, t in self.tables.items()},
+            "acc_schemas": {str(k): list(t.schema) for k, t in self.acc.items()},
+        }
+        for k, t in self.tables.items():
+            arrays[f"data_{k}"] = np.asarray(t.data)
+            arrays[f"valid_{k}"] = np.asarray(t.valid)
+        for k, t in self.acc.items():
+            arrays[f"accdata_{k}"] = np.asarray(t.data)
+            arrays[f"accvalid_{k}"] = np.asarray(t.valid)
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, meta=json.dumps(meta), **arrays)
+        os.replace(tmp, path)  # atomic publish
+
+    def load(self, path: str) -> None:
+        z = np.load(path, allow_pickle=False)
+        meta = json.loads(str(z["meta"]))
+        self.cursor = meta["cursor"]
+        self.done = meta["done"]
+        self.caps = {int(k): v for k, v in meta["caps"].items()}
+        led = Ledger()
+        from ..relational.ledger import RoundRecord
+
+        led.records = [RoundRecord(**r) for r in meta["ledger"]["records"]]
+        led.output_tuples = meta["ledger"]["output_tuples"]
+        led.retries = meta["ledger"]["retries"]
+        self.ledger = led
+        self.tables = {}
+        for k, schema in meta["schemas"].items():
+            ki = int(k)
+            self.tables[ki] = self.spmd.device_put(
+                DTable(
+                    jnp_asarray(z[f"data_{k}"]),
+                    jnp_asarray(z[f"valid_{k}"]),
+                    tuple(schema),
+                )
+            )
+        self.acc = {}
+        for k, schema in meta.get("acc_schemas", {}).items():
+            ki = int(k)
+            self.acc[ki] = self.spmd.device_put(
+                DTable(
+                    jnp_asarray(z[f"accdata_{k}"]),
+                    jnp_asarray(z[f"accvalid_{k}"]),
+                    tuple(schema),
+                )
+            )
+
+
+def jnp_asarray(x):
+    import jax.numpy as jnp
+
+    return jnp.asarray(x)
+
+
+# --------------------------------------------------------------------------
+# front door
+# --------------------------------------------------------------------------
+def gym(
+    query: Query,
+    data: Dict[str, np.ndarray],
+    *,
+    ghd: Optional[GHD] = None,
+    p: int = 4,
+    spmd: Optional[SPMD] = None,
+    config: Optional[GymConfig] = None,
+) -> Tuple[np.ndarray, Tuple[str, ...], Ledger]:
+    """Evaluate Q with GYM.  Returns (rows, schema, ledger)."""
+    from .decompose import ghd_for
+
+    g = ghd if ghd is not None else ghd_for(query)
+    s = spmd if spmd is not None else SPMD(p)
+    drv = GymDriver(query, g, data, s, config)
+    out = drv.run()
+    return out.to_numpy(), out.schema, drv.ledger

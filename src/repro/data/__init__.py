@@ -1,0 +1,1 @@
+from .pipeline import CorpusConfig, batches, corpus_query, eligible_docs, synth_corpus

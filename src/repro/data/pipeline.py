@@ -1,0 +1,121 @@
+"""Relational data pipeline: training batches are assembled by GYM itself.
+
+Corpus metadata is relational (the usual production shape):
+    docs(doc_id, shard_id, len_bucket)
+    shards(shard_id, quality)
+    dedup(doc_id, keep)
+    mix(len_bucket, weight)
+The eligible-document set is the acyclic join
+    docs |><| shards |><| dedup |><| mix
+filtered to quality >= q_min, keep = 1, weight > 0 — evaluated by the GYM
+driver on the same SPMD backend as training (the paper's contribution as a
+first-class framework feature, DESIGN.md Sec. 2.3).  Token batches are
+then synthesized per eligible doc id (deterministic LCG stream)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from ..core.gym import GymConfig, gym
+from ..core.hypergraph import Atom, Query
+
+
+@dataclasses.dataclass
+class CorpusConfig:
+    n_docs: int = 512
+    n_shards: int = 16
+    n_buckets: int = 4
+    q_min: int = 2
+    seed: int = 0
+
+
+def corpus_query() -> Query:
+    return Query(
+        [
+            Atom("docs", "docs", ("doc_id", "shard_id", "len_bucket")),
+            Atom("shards", "shards", ("shard_id", "quality")),
+            Atom("dedup", "dedup", ("doc_id", "keep")),
+            Atom("mix", "mix", ("len_bucket", "weight")),
+        ],
+        name="CorpusJoin",
+    )
+
+
+def synth_corpus(cfg: CorpusConfig) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(cfg.seed)
+    docs = np.stack(
+        [
+            np.arange(cfg.n_docs),
+            rng.integers(0, cfg.n_shards, cfg.n_docs),
+            rng.integers(0, cfg.n_buckets, cfg.n_docs),
+        ],
+        axis=1,
+    ).astype(np.int32)
+    shards = np.stack(
+        [np.arange(cfg.n_shards), rng.integers(0, 5, cfg.n_shards)], axis=1
+    ).astype(np.int32)
+    dedup = np.stack(
+        [np.arange(cfg.n_docs), (rng.random(cfg.n_docs) < 0.9).astype(int)],
+        axis=1,
+    ).astype(np.int32)
+    mix = np.stack(
+        [np.arange(cfg.n_buckets), rng.integers(0, 3, cfg.n_buckets)], axis=1
+    ).astype(np.int32)
+    return {"docs": docs, "shards": shards, "dedup": dedup, "mix": mix}
+
+
+def eligible_docs(
+    cfg: CorpusConfig, data: Optional[Dict[str, np.ndarray]] = None, p: int = 4
+) -> Tuple[np.ndarray, Dict]:
+    """GYM-evaluated corpus join + selection predicates -> doc ids."""
+    data = data or synth_corpus(cfg)
+    # pre-filter the small dimension tables (selection pushdown), join with GYM
+    data = dict(data)
+    data["shards"] = data["shards"][data["shards"][:, 1] >= cfg.q_min]
+    data["dedup"] = data["dedup"][data["dedup"][:, 1] == 1]
+    data["mix"] = data["mix"][data["mix"][:, 1] > 0]
+    rows, schema, ledger = gym(
+        corpus_query(), data, p=p, config=GymConfig(strategy="hash")
+    )
+    doc_col = list(schema).index("doc_id")
+    ids = np.unique(rows[:, doc_col])
+    return ids.astype(np.int64), ledger.summary()
+
+
+def _lcg_tokens(doc_id: int, n: int, vocab: int, seed: int) -> np.ndarray:
+    """Deterministic per-doc token stream (synthetic corpus)."""
+    x = np.uint64((doc_id * 2654435761 + seed * 97 + 1) % (1 << 64))
+    out = np.empty(n, np.int64)
+    a = np.uint64(6364136223846793005)
+    c = np.uint64(1442695040888963407)
+    with np.errstate(over="ignore"):  # uint64 wraparound is the algorithm
+        for i in range(n):
+            x = a * x + c
+            out[i] = int(x >> np.uint64(33)) % vocab
+    return out
+
+
+def batches(
+    cfg: CorpusConfig,
+    *,
+    batch: int,
+    seq: int,
+    vocab: int,
+    p: int = 4,
+    data: Optional[Dict[str, np.ndarray]] = None,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Infinite batch iterator over GYM-eligible docs (tokens, targets)."""
+    ids, _ = eligible_docs(cfg, data, p=p)
+    assert len(ids) > 0, "corpus join produced no eligible documents"
+    rng = np.random.default_rng(cfg.seed + 1)
+    while True:
+        pick = rng.choice(ids, size=batch)
+        toks = np.stack(
+            [_lcg_tokens(int(d), seq + 1, vocab, cfg.seed) for d in pick]
+        )
+        yield {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "targets": toks[:, 1:].astype(np.int32),
+        }

@@ -1,0 +1,166 @@
+"""TPU Pallas kernel: FlashAttention (online-softmax attention) — the
+compute hot-spot of every assigned transformer architecture.
+
+TPU-native design:
+  - grid (B, H, num_q_blocks, num_kv_blocks), kv innermost ("arbitrary"
+    semantics) so VMEM scratch carries the online-softmax state (m, l, acc
+    in f32) across kv steps; outputs are written once on the last kv step;
+  - q/k/v tiles live in VMEM via BlockSpec; the two matmuls per tile
+    (s = q k^T, acc += p v) hit the MXU with (BLK_Q x D) x (D x BLK_K)
+    shapes, D padded to 128 multiples by the wrapper;
+  - GQA is handled in the k/v index_map (head h reads kv-head h // group) —
+    no KV expansion in HBM;
+  - causal / sliding-window masking and logit soft-capping (gemma2) are
+    fused into the tile, computed from absolute block offsets.
+
+Block sizes (512, 512): q/k/v tiles are 512*128*4B = 256 KiB each in f32,
+acc 256 KiB — comfortably inside the ~16 MiB v5e VMEM with double
+buffering; 512 keeps the MXU at full (128x128) occupancy for 8 passes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLK_Q = 512
+DEFAULT_BLK_K = 512
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale, causal, window, softcap, blk_q, blk_k, kv_len,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (blk_q, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (blk_k, d)
+    v = v_ref[0, 0].astype(jnp.float32)  # (blk_k, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s = s * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = cols < kv_len  # kv padding
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (blk_q, 1) f32
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_ref[...] + p.sum(axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = corr * acc_ref[...] + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0
+        o_ref[0, 0, :, :] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "scale", "blk_q", "blk_k", "kv_len",
+        "interpret",
+    ),
+)
+def _flash_call(
+    q, k, v, *, scale, causal, window, softcap, blk_q, blk_k, kv_len, interpret
+):
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    group = h // kvh
+    nq, nk = sq // blk_q, sk // blk_k
+    kern = functools.partial(
+        _attn_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        blk_q=blk_q, blk_k=blk_k, kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, blk_k, d), lambda b, h, i, j, g=group: (b, h // g, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, blk_k, d), lambda b, h, i, j, g=group: (b, h // g, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            _vmem((blk_q, 1), jnp.float32),  # m: running max
+            _vmem((blk_q, 1), jnp.float32),  # l: running denominator
+            _vmem((blk_q, d), jnp.float32),  # acc: unnormalized output
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = no sliding window
+    softcap: float = 0.0,  # 0 = no capping
+    scale: Optional[float] = None,
+    blk_q: int = DEFAULT_BLK_Q,
+    blk_k: int = DEFAULT_BLK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q (B,H,Sq,D), k/v (B,KVH,Skv,D) with H % KVH == 0 -> (B,H,Sq,D)."""
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    scale = float(scale) if scale is not None else float(d) ** -0.5
+    bq = min(blk_q, sq)
+    bk = min(blk_k, sk)
+    qpad = -sq % bq
+    kpad = -sk % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, kpad), (0, 0)))
+    out = _flash_call(
+        qp, kp, vp,
+        scale=scale, causal=causal, window=int(window),
+        softcap=float(softcap), blk_q=bq, blk_k=bk, kv_len=sk,
+        interpret=interpret,
+    )
+    return out[:, :, :sq, :]

@@ -1,0 +1,87 @@
+"""Jit'd public entry points for the Pallas kernels.
+
+``use_pallas`` switches between the TPU kernel (interpret=True on CPU — the
+kernel body runs in Python for correctness validation) and the pure-jnp
+reference (the default on CPU for speed).  On a real TPU deployment the
+kernels run compiled (interpret=False).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+import jax
+
+from . import ref
+from .chunked import chunked_attention as _chunked
+from .flash_attention import flash_attention as _flash
+from .hash_partition import hash_partition as _hash_partition
+from .semijoin_probe import semijoin_probe as _probe
+
+# KV lengths >= this use the chunked (flash-style) XLA path off-TPU:
+# peak activation memory O(Sq*C) instead of O(Sq*Sk).  [Perf iteration A]
+CHUNKED_MIN_KV = 2048
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def semijoin_probe(
+    q: jax.Array, keys: jax.Array, *, use_pallas: Optional[bool] = None
+) -> jax.Array:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _probe(q, keys, interpret=not _on_tpu())
+    return ref.semijoin_probe_ref(q, keys)
+
+
+def hash_partition(
+    rows: jax.Array,
+    valid: jax.Array,
+    cols: Sequence[int],
+    p: int,
+    seed: int,
+    *,
+    use_pallas: Optional[bool] = None,
+) -> jax.Array:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _hash_partition(rows, valid, cols, p, seed, interpret=not _on_tpu())
+    return ref.hash_partition_ref(rows, valid, cols, p, seed)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    use_pallas: Optional[bool] = None,
+    impl: Optional[str] = None,  # None=auto | 'pallas' | 'chunked' | 'dense'
+) -> jax.Array:
+    if impl is None:
+        if use_pallas or (use_pallas is None and _on_tpu()):
+            impl = "pallas"
+        elif k.shape[2] >= CHUNKED_MIN_KV:
+            impl = "chunked"
+        else:
+            impl = "dense"
+    if impl == "pallas":
+        return _flash(
+            q, k, v,
+            causal=causal, window=window, softcap=softcap, scale=scale,
+            interpret=not _on_tpu(),
+        )
+    if impl == "chunked":
+        return _chunked(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+        )
+    return ref.attention_ref(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+    )

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-exact, f32 math)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..relational.hashing import dests_for
+
+
+def semijoin_probe_ref(q: jax.Array, keys: jax.Array) -> jax.Array:
+    """mask[i] = q[i] in keys (invalid key slots = INT32_MAX never match a
+    valid probe)."""
+    ks = jnp.sort(keys)
+    lo = jnp.searchsorted(ks, q, side="left")
+    hi = jnp.searchsorted(ks, q, side="right")
+    return hi > lo
+
+
+def hash_partition_ref(
+    rows: jax.Array, valid: jax.Array, cols: Sequence[int], p: int, seed: int
+) -> jax.Array:
+    """Bit-exact reference: the engine's own jnp hashing."""
+    return dests_for(rows, valid, tuple(cols), p, seed)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Dense softmax attention, f32 accumulation, GQA via head grouping."""
+    b, h, sq, d = q.shape
+    _, kvh, sk, _ = k.shape
+    g = h // kvh
+    scale = float(scale) if scale is not None else float(d) ** -0.5
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32),
+        kk.astype(jnp.float32),
+    ) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no visible keys -> zeros (matches kernel's l==0 guard)
+    any_visible = mask.any(axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    out = jnp.where(any_visible[None, None, :, None], out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,128 @@
+"""Roofline analysis from the compiled dry-run artifact (no hardware).
+
+Three terms per (arch x shape x mesh), in seconds:
+    compute    = HLO_FLOPs / (chips * peak_bf16)
+    memory     = HLO_bytes / (chips * hbm_bw)
+    collective = collective_bytes / (chips * ici_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed out of the post-SPMD HLO text (sum of result-shape bytes
+of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute instruction — methodology recorded in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e, per chip
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_TYPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the HLO module."""
+    out: Dict[str, int] = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        rhs = ls.split(" = ", 1)[1]
+        opm = None
+        for op in _COLL_OPS:
+            # match ` op(` or `op-start(` / `op-done` variants
+            m = re.search(rf"\b{op}(?:-start|-done)?\(", rhs)
+            if m:
+                opm = (op, m.start())
+                break
+        if opm is None:
+            continue
+        op, pos = opm
+        if re.search(rf"\b{op}-done\(", rhs):
+            continue  # count start only (avoid double count)
+        head = rhs[:pos]  # result type(s) precede the op name
+        types = _TYPE_RE.findall(head)
+        if not types:
+            types = _TYPE_RE.findall(rhs)
+        out[op] += sum(_shape_bytes(dt, dims) for dt, dims in types)
+    return out
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll_bytes: float,
+    chips: int,
+    *,
+    model_flops: Optional[float] = None,
+) -> Dict[str, float]:
+    compute = flops / (chips * PEAK_FLOPS_BF16)
+    memory = hbm_bytes / (chips * HBM_BW)
+    collective = coll_bytes / (chips * ICI_BW)
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms["dominant"] = dom
+    terms["bound_s"] = bound
+    if model_flops is not None and flops > 0:
+        terms["model_flops"] = model_flops
+        terms["useful_flops_frac"] = model_flops / flops
+        # roofline fraction: useful compute time over the binding term
+        terms["roofline_frac"] = (
+            model_flops / (chips * PEAK_FLOPS_BF16)
+        ) / bound if bound > 0 else 0.0
+    return terms
+
+
+# ------------------------------------------------- MODEL_FLOPS = 6 N_act D
+def param_count(tree) -> int:
+    import jax
+
+    return sum(
+        int(l.size) for l in jax.tree_util.tree_leaves(tree)
+        if hasattr(l, "size")
+    )
+
+
+def active_param_count(cfg, params_shapes) -> int:
+    """MoE: experts count once per activated expert (topk/E scaling on the
+    expert weights); dense: all params."""
+    import jax
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shapes)[0]:
+        ps = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        n = int(leaf.size)
+        if "moe" in ps and any(k in ps for k in ("wi", "wg", "wo")):
+            n = n * max(1, cfg.topk) // max(1, cfg.n_experts)
+        total += n
+    return total
+
+
+def model_flops_train(n_active: int, tokens: int) -> float:
+    return 6.0 * n_active * tokens
+
+
+def model_flops_decode(n_active: int, tokens: int) -> float:
+    return 2.0 * n_active * tokens  # forward only, one token per seq

@@ -1,0 +1,67 @@
+"""Serving driver: load (or init) a model, prefill a batch of prompts,
+decode N tokens, report tokens/s.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --reduced --batch 4 --prompt 16 --steps 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_model, reduced_config
+from repro.serve import generate, generate_whisper
+from repro.train import checkpoint as ckpt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt", default=None, help="restore params from dir")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt:
+        restored, _ = ckpt.restore(args.ckpt, {"params": params})
+        params = restored["params"]
+
+    t0 = time.time()
+    if cfg.encdec:
+        frames = jax.random.normal(
+            jax.random.PRNGKey(1), (args.batch, args.prompt, cfg.d_model),
+            cfg.jdtype,
+        )
+        toks = generate_whisper(
+            model, params, frames, steps=args.steps,
+            dec_cache=args.steps + 4, temperature=args.temperature,
+        )
+    else:
+        prompt = jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.prompt), 0, cfg.vocab
+        )
+        toks = generate(
+            model, params, prompt, steps=args.steps,
+            temperature=args.temperature,
+        )
+    dt = time.time() - t0
+    n = args.batch * args.steps
+    print(f"arch={cfg.name} generated {n} tokens in {dt:.2f}s "
+          f"({n/dt:.0f} tok/s incl. compile)")
+    for row in toks.tolist():
+        print(" ", row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Sharding rules: FSDP over ('pod','data') + TP/EP over 'model'.
+
+Path-name-based rules with divisibility-checked fallbacks, so every
+(architecture x shape x mesh) cell lowers: a dim is only sharded on an
+axis whose size divides it; otherwise the rule degrades gracefully
+(sub-axis, then replicated).  This is the MaxText "logical axis rules"
+idea in one function, without a DSL.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+# parameter-name classes
+_IN = {"wq", "wk", "wv", "wi", "wg", "w_in", "w_up", "w_if", "router"}
+_OUT = {"wo", "w_out", "w_down"}
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, *candidates):
+    """First candidate axis (or axis tuple) whose size divides dim."""
+    for c in candidates:
+        if c is None:
+            continue
+        if dim % _axsize(mesh, c) == 0:
+            return c
+    return None
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+    )
+
+
+def param_spec(
+    path, shape: Tuple[int, ...], mesh: Mesh, serve_tp_only: bool = False
+) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``serve_tp_only``: inference layout for models that fit TP-sharded —
+    no FSDP dim, so no per-layer weight all-gathers on the serve path
+    (Perf iteration C)."""
+    name = _leaf_name(path)
+    ps = _path_str(path)
+    fsdp = None if serve_tp_only else dp_axes(mesh)
+    tp = "model"
+    nd = len(shape)
+    spec = [None] * nd
+    if nd == 0:
+        return P()
+    is_moe = "moe" in ps and name in ("wi", "wg", "wo")
+
+    def place(dim_idx: int, *cands):
+        spec[dim_idx] = _fit(mesh, shape[dim_idx], *cands)
+
+    if is_moe and nd >= 3:
+        # (..., E, d, f) or (..., E, f, d): experts -> EP on model
+        place(nd - 3, tp, fsdp)
+        if spec[nd - 3] == tp:  # EP engaged
+            place(nd - 2, fsdp if name in _IN else None)
+            if name in _OUT:
+                place(nd - 1, fsdp)
+        else:  # E indivisible by 'model' (grok 8e vs 16): megatron-style FF
+            if name in _IN:  # (E, d, f): f -> tp
+                place(nd - 2, fsdp)
+                place(nd - 1, tp)
+            else:  # (E, f, d): f -> tp
+                place(nd - 2, tp)
+                place(nd - 1, fsdp)
+        return P(*spec)
+    if name == "table":  # (V, D) embeddings
+        place(0, tp, fsdp)
+        place(1, fsdp if spec[0] != fsdp else None)
+        return P(*spec)
+    if name == "r" and nd == 3:  # sLSTM recurrent (H, hd, 4hd)
+        place(0, tp)
+        return P(*spec)
+    if name == "conv":  # (k, ch) depthwise conv
+        place(nd - 1, tp)
+        return P(*spec)
+    if name in _IN and nd >= 2:
+        place(nd - 2, fsdp)
+        place(nd - 1, tp)
+        return P(*spec)
+    if name in _OUT and nd >= 2:
+        place(nd - 2, tp)
+        place(nd - 1, fsdp)
+        return P(*spec)
+    # norms, biases, gates: replicate; any big unmatched matrix: best-effort
+    if nd >= 2 and shape[-1] * shape[-2] >= 1 << 20:
+        place(nd - 1, tp)
+        place(nd - 2, fsdp)
+    return P(*spec)
+
+
+def param_specs(params, mesh: Mesh, serve_tp_only: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf.shape, mesh, serve_tp_only),
+        params,
+    )
+
+
+def opt_state_specs(opt_state, params_specs, mesh: Mesh):
+    """Optimizer moments inherit their parameter's spec; factored vectors
+    and scalars replicate."""
+
+    def spec(path, leaf):
+        # paths look like m/<param path>, v/<...>, f/<...>/r, step
+        ps = _path_str(path)
+        if ps == "step":
+            return P()
+        # strip the leading m/v/f and trailing r/c/v markers, then reuse
+        sub = path[1:]
+        if sub and _leaf_name(sub) in ("r", "c"):
+            return P()  # factored vectors: small, replicate
+        if sub and _leaf_name(sub) == "v" and len(leaf.shape) <= 1:
+            return P()
+        return param_spec(sub if sub else path, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, opt_state)
+
+
+def batch_specs(batch, mesh: Mesh):
+    fsdp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        shp = leaf.shape
+        if name == "pos" and len(shp) == 3:  # (3, B, S)
+            return P(None, _fit(mesh, shp[1], fsdp, "data"), None)
+        s = [None] * len(shp)
+        if len(shp) >= 1:
+            s[0] = _fit(mesh, shp[0], fsdp, "data")
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_specs(caches, mesh: Mesh):
+    """Decode caches: stacked (L, B, ...) pytrees.  Batch -> FSDP axes when
+    divisible; heads/channels -> model; else sequence -> data."""
+    fsdp = dp_axes(mesh)
+    tp = "model"
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        shp = leaf.shape
+        nd = len(shp)
+        if nd == 0:
+            return P()
+        s = [None] * nd
+        if name in ("k", "v") and nd == 5:  # (L, B, KV, S, hd)
+            s[1] = _fit(mesh, shp[1], fsdp, "data")
+            s[2] = _fit(mesh, shp[2], tp)
+            if s[2] is None:
+                s[3] = _fit(mesh, shp[3], tp)
+            return P(*s)
+        if name in ("k", "v") and nd == 4:  # whisper (L?, B, KV, S, hd) alt
+            s[0] = _fit(mesh, shp[0], fsdp, "data")
+            s[1] = _fit(mesh, shp[1], tp)
+            return P(*s)
+        if nd >= 3:  # recurrent states (L, B, H, ...) / conv (L, B, k, ch)
+            s[1] = _fit(mesh, shp[1], fsdp, "data")
+            if name == "conv":
+                s[nd - 1] = _fit(mesh, shp[nd - 1], tp)
+            else:
+                s[2] = _fit(mesh, shp[2], tp)
+            return P(*s)
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def named(mesh: Mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

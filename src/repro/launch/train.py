@@ -1,0 +1,109 @@
+"""End-to-end training driver: GYM-assembled data pipeline -> sharded
+train step -> checkpoint/restart loop with straggler monitoring.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 50 --batch 8 --seq 128 --reduced --ckpt /tmp/run1
+
+``--reduced`` runs the family-faithful smoke-scale config on CPU; on a TPU
+pod the full config + production mesh engage automatically."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_model, reduced_config
+from repro.data import CorpusConfig, batches
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.shardings import batch_specs, named, opt_state_specs, param_specs
+from repro.train import (
+    OptConfig,
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+)
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import HeartbeatMonitor
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt_every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress_grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = get_model(cfg)
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=args.lr, warmup=10, decay_steps=max(100, args.steps)),
+        accum=args.accum,
+        compress_grads=args.compress_grads,
+    )
+
+    n_dev = len(jax.devices())
+    mesh = make_debug_mesh(n_dev, 1) if n_dev < 256 else make_production_mesh()
+    params, opt_state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    psp = named(mesh, param_specs(params, mesh))
+    osp = named(mesh, opt_state_specs(opt_state, None, mesh))
+    params = jax.device_put(params, psp)
+    opt_state = jax.device_put(opt_state, osp)
+
+    start = 0
+    if args.resume and args.ckpt and ckpt.latest_step(args.ckpt) is not None:
+        restored, extra = ckpt.restore(
+            args.ckpt, {"params": params, "opt": opt_state}
+        )
+        params, opt_state = restored["params"], restored["opt"]
+        start = int(extra.get("next_step", 0))
+        print(f"[resume] from step {start}")
+
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+    data = batches(
+        CorpusConfig(seed=17), batch=args.batch, seq=args.seq, vocab=cfg.vocab
+    )
+    hb = HeartbeatMonitor()
+    pending = None
+    for step in range(start, args.steps):
+        hb.start()
+        batch = {k: jax.numpy.asarray(v) for k, v in next(data).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        loss = float(m["loss"])
+        dt, straggling = hb.stop()
+        print(
+            f"step {step:5d} loss {loss:.4f} gnorm {float(m['grad_norm']):.3f} "
+            f"{dt*1e3:.0f}ms{' STRAGGLER' if straggling else ''}",
+            flush=True,
+        )
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            if pending is not None:
+                pending.join()
+            pending = ckpt.save_async(
+                args.ckpt, step + 1,
+                {"params": params, "opt": opt_state},
+                extra={"next_step": step + 1},
+            )
+    if pending is not None:
+        pending.join()
+    if args.ckpt:
+        ckpt.save(
+            args.ckpt, args.steps, {"params": params, "opt": opt_state},
+            extra={"next_step": args.steps},
+        )
+    print("[done]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .common import ArchConfig
+from .transformer import DecoderLM
+from .whisper import WhisperModel
+
+__all__ = ["ArchConfig", "DecoderLM", "WhisperModel"]

@@ -1,0 +1,150 @@
+"""Attention block: GQA, RoPE/M-RoPE, qk-norm, softcap, sliding window,
+cross-attention, KV-cache decode — one implementation for all archs."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .common import ArchConfig, apply_mrope, apply_rope, init_norm, rms_norm, scaled_init
+
+
+def init_attn(rng, cfg: ArchConfig) -> Dict:
+    d, hd = cfg.d_model, cfg.hd
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": scaled_init(ks[0], (d, h * hd), 0, cfg.jdtype),
+        "wk": scaled_init(ks[1], (d, kv * hd), 0, cfg.jdtype),
+        "wv": scaled_init(ks[2], (d, kv * hd), 0, cfg.jdtype),
+        "wo": scaled_init(ks[3], (h * hd, d), 0, cfg.jdtype),
+        "ln": init_norm(d, cfg.jdtype),
+    }
+    if cfg.qk_norm:
+        p["qn"] = init_norm(hd, cfg.jdtype)
+        p["kn"] = init_norm(hd, cfg.jdtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ArchConfig, pos):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+    if cfg.rope == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, pos, cfg.rope_theta)
+        k = apply_mrope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(
+    p: Dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    pos: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill).  x (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, xin, cfg, pos)
+    o = kops.attention(
+        q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return x + (o @ p["wo"]).astype(x.dtype)
+
+
+def attn_prefill(
+    p: Dict, x: jax.Array, cfg: ArchConfig, *, pos, causal=True, window=0
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Like forward but also returns the KV cache (B, KV, S, hd)."""
+    b, s, d = x.shape
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, xin, cfg, pos)
+    o = kops.attention(
+        q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return x + (o @ p["wo"]).astype(x.dtype), {"k": k, "v": v}
+
+
+def attn_decode(
+    p: Dict,
+    x: jax.Array,  # (B, 1, D) current token activations
+    cache: Dict[str, jax.Array],  # k/v (B, KV, S_cache, hd)
+    cache_len: jax.Array,  # () int32 — valid prefix length
+    cfg: ArchConfig,
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode: append (k,v) at cache_len, attend to the prefix."""
+    b, s1, d = x.shape
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    posv = jnp.full((b, 1), cache_len, jnp.int32)
+    if cfg.rope == "mrope":
+        posv = jnp.broadcast_to(posv[None], (3,) + posv.shape)
+    q, k, v = _project_qkv(p, xin, cfg, posv)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, cache_len, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, cache_len, 0))
+    s_cache = kc.shape[2]
+    # mask positions beyond cache_len via additive bias trick: use window=0,
+    # causal=False, and mask by comparing against cache_len
+    g = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(kc, g, axis=1)
+    vv = jnp.repeat(vc, g, axis=1)
+    scale = float(cfg.hd) ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    if cfg.attn_softcap > 0.0:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    idx = jnp.arange(s_cache)[None, None, None, :]
+    mask = idx <= cache_len
+    if window and window > 0:
+        mask &= idx > cache_len - window
+    s = jnp.where(mask, s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", pr, vv.astype(jnp.float32)).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    return x + (o @ p["wo"]).astype(x.dtype), {"k": kc, "v": vc}
+
+
+# ------------------------------------------------------- cross attention
+def init_cross_attn(rng, cfg: ArchConfig) -> Dict:
+    p = init_attn(rng, cfg)
+    return p
+
+
+def cross_attn_forward(
+    p: Dict, x: jax.Array, mem_kv: Dict[str, jax.Array], cfg: ArchConfig
+) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (xin @ p["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    o = kops.attention(
+        q, mem_kv["k"], mem_kv["v"], causal=False, softcap=cfg.attn_softcap
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return x + (o @ p["wo"]).astype(x.dtype)
+
+
+def cross_kv(p: Dict, mem: jax.Array, cfg: ArchConfig) -> Dict[str, jax.Array]:
+    """Precompute encoder-side K/V for cross attention (prefill)."""
+    b, s, d = mem.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = (mem @ p["wk"]).reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    v = (mem @ p["wv"]).reshape(b, s, kv, hd).transpose(0, 2, 1, 3)
+    return {"k": k, "v": v}

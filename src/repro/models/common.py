@@ -1,0 +1,185 @@
+"""Shared model substrate: arch config, norms, embeddings, RoPE/M-RoPE.
+
+Pure-pytree models (no flax): params are nested dicts of jnp arrays; every
+block kind has ``init(rng, cfg) -> params`` and a forward; homogeneous runs
+of blocks are stacked (leading layer axis) and executed under ``lax.scan``
+so the HLO stays small at 80+ layers (fast CPU compiles, clean dry-runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    # block pattern: tuple of block kinds, len == n_layers (decoder side)
+    pattern: Tuple[str, ...] = ()
+    # attention options
+    rope: str = "rope"  # rope | mrope | none
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    attn_softcap: float = 0.0
+    logit_softcap: float = 0.0
+    window: int = 0  # sliding window width for 'local' blocks
+    # MoE
+    n_experts: int = 0
+    topk: int = 0
+    moe_d_ff: int = 0  # per-expert hidden dim (kimi: 2048)
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # SSM / xLSTM
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 256
+    # enc-dec (whisper)
+    encdec: bool = False
+    enc_layers: int = 0
+    dec_ratio: int = 8  # train: decoder tokens = seq // dec_ratio
+    # misc
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    # notes for deviations from the public checkpoint
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def blocks(self) -> Tuple[str, ...]:
+        if self.pattern:
+            assert len(self.pattern) == self.n_layers, (
+                self.name, len(self.pattern), self.n_layers
+            )
+            return self.pattern
+        kind = "moe" if self.n_experts else "attn"
+        return (kind,) * self.n_layers
+
+    def segments(self) -> Tuple[Tuple[str, int], ...]:
+        """Run-length encode the block pattern -> scan segments."""
+        out = []
+        for b in self.blocks():
+            if out and out[-1][0] == b:
+                out[-1] = (b, out[-1][1] + 1)
+            else:
+                out.append((b, 1))
+        return tuple(out)
+
+
+def scaled_init(rng, shape, scale_axis, dtype, scale=1.0):
+    """Truncated-normal-ish init with 1/sqrt(fan_in)."""
+    fan_in = shape[scale_axis]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, g: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + g.astype(jnp.float32))).astype(dt)
+
+
+def init_norm(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)  # gain stored as (1 + g)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x (B, H, S, D), pos (B, S) int32 -> rotated x."""
+    b, h, s, d = x.shape
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = pos[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, pos3: jax.Array, theta: float, sections=(2, 3, 3)
+) -> jax.Array:
+    """Qwen2-VL M-RoPE: pos3 (3, B, S) = (temporal, height, width) ids.
+
+    The head-dim frequency bands are split 2:3:3 over the three axes
+    (ratio per the paper); text tokens carry identical ids on all axes so
+    M-RoPE == RoPE for pure text."""
+    b, h, s, d = x.shape
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    nb = d // 2
+    tot = sum(sections)
+    bounds = []
+    acc = 0
+    for sec in sections:
+        acc += int(round(nb * sec / tot))
+        bounds.append(acc)
+    bounds[-1] = nb
+    band = jnp.zeros((nb,), jnp.int32)
+    prev = 0
+    for i, bd in enumerate(bounds):
+        band = band.at[prev:bd].set(i)
+        prev = bd
+    # per-frequency position: select the axis this band belongs to
+    pos_sel = jnp.take(pos3, band, axis=0)  # (nb, B, S) -> via take on axis0
+    pos_sel = jnp.transpose(pos_sel, (1, 2, 0))  # (B, S, nb)
+    ang = pos_sel.astype(jnp.float32) * freqs  # (B,S,nb)
+    cos = jnp.cos(ang)[:, None]  # (B,1,S,nb)
+    sin = jnp.sin(ang)[:, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- embeddings
+def init_embed(rng, vocab: int, d: int, dtype) -> Dict[str, jax.Array]:
+    return {"table": scaled_init(rng, (vocab, d), 1, dtype)}
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32))
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token cross-entropy, f32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def stack_init(rng, n: int, init_fn) -> Params:
+    """vmapped per-layer init -> params with leading layer axis n."""
+    rngs = jax.random.split(rng, n)
+    return jax.vmap(init_fn)(rngs)

@@ -1,0 +1,171 @@
+"""Gated MLP (SwiGLU) and Mixture-of-Experts feed-forward layers."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ArchConfig, init_norm, rms_norm, scaled_init
+
+
+def _mesh_axes():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return None, set()
+        return mesh, set(mesh.axis_names)
+    except Exception:  # noqa: BLE001
+        return None, set()
+
+
+def _constrain(x: jax.Array, *spec):
+    """Best-effort sharding constraint: applies only when tracing under a
+    mesh whose axes cover the named ones (CPU tests trace mesh-less) and
+    only on dims the axis size divides.
+
+    [Perf iteration B] When experts cannot be expert-parallel (grok-1: 8
+    experts vs a 16-way 'model' axis) XLA replicates the MoE scatter/gather
+    dispatch buffers over 'model' and merges contributions with giant
+    all-reduces (453 TB/step on grok-1 train_4k); pinning the feature dim
+    to 'model' makes the scatter local.  When EP *does* engage (kimi-k2,
+    384e) XLA's auto-sharding already picks the all-to-all plan and manual
+    constraints only fight it — so ``moe_forward`` gates these on EP
+    non-divisibility (measured: kimi 5.75 s vs 17.4 s constrained)."""
+    import os
+
+    if os.environ.get("REPRO_MOE_CONSTRAIN", "1") == "0":
+        return x
+    mesh, names = _mesh_axes()
+    if not names:
+        return x
+
+    def ok(s, dim):
+        if s is None:
+            return None
+        if isinstance(s, tuple):
+            sub = tuple(a for a in s if a in names)
+            if not sub:
+                return None
+            size = 1
+            for a in sub:
+                size *= mesh.shape[a]
+            return sub if dim % size == 0 else None
+        if s not in names:
+            return None
+        return s if dim % mesh.shape[s] == 0 else None
+
+    fixed = tuple(ok(s, d) for s, d in zip(spec, x.shape))
+    if all(s is None for s in fixed):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+FSDP = ("pod", "data")
+
+
+def init_mlp(rng, cfg: ArchConfig, d_ff: int = 0) -> Dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": scaled_init(ks[0], (d, f), 0, cfg.jdtype),
+        "wg": scaled_init(ks[1], (d, f), 0, cfg.jdtype),
+        "wo": scaled_init(ks[2], (f, d), 0, cfg.jdtype),
+        "ln": init_norm(d, cfg.jdtype),
+    }
+
+
+def mlp_forward(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    h = jax.nn.silu((xin @ p["wg"]).astype(jnp.float32)).astype(x.dtype) * (xin @ p["wi"])
+    return x + (h @ p["wo"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MoE
+def init_moe(rng, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    e = cfg.n_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": scaled_init(ks[0], (d, e), 0, jnp.float32),
+        "wi": scaled_init(ks[1], (e, d, f), 1, cfg.jdtype),
+        "wg": scaled_init(ks[2], (e, d, f), 1, cfg.jdtype),
+        "wo": scaled_init(ks[3], (e, f, d), 1, cfg.jdtype),
+        "ln": init_norm(d, cfg.jdtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(
+            ks[4], cfg, d_ff=(cfg.moe_d_ff or cfg.d_ff) * cfg.n_shared_experts
+        )
+    return p
+
+
+def moe_forward(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Top-k capacity-based dispatch: compiled FLOPs scale with *active*
+    params (E x C x d x f with C ~ T*topk/E), the property the kimi-k2
+    roofline depends on.  Dropped-over-capacity tokens pass through the
+    residual (standard Switch-style behavior)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.topk
+    cap = max(1, int(cfg.capacity_factor * t * k / e))
+
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    xf = xin.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ p["router"])  # (t, e)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(gates, k)  # (t, k)
+    topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
+
+    # flatten (token, choice) pairs and rank them per expert for capacity
+    flat_e = tope.reshape(-1)  # (t*k,)
+    flat_w = topw.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    # position of each pair within its expert (by arrival order)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (t*k, e)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # rank per expert
+    my_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = my_pos < cap
+
+    # dispatch: scatter tokens into (e, cap) slots.  [Perf iteration B]
+    # When EP engages (E % model == 0, e.g. kimi's 384e) XLA auto-shards the
+    # dispatch with all-to-alls — leave it alone.  When it cannot (grok: 8e
+    # vs 16-way 'model') run the scatter with the FEATURE dim sharded on
+    # 'model' (indices replicated per shard -> fully local scatter) so XLA
+    # stops replicating + all-reducing the dispatch buffers.
+    mesh, names = _mesh_axes()
+    ep = "model" in names and e % mesh.shape["model"] == 0
+
+    def C(arr, *spec):
+        return arr if ep else _constrain(arr, *spec)
+
+    slot = jnp.where(keep, flat_e * cap + my_pos, e * cap)  # overflow -> drop
+    src = C(xf[flat_tok], FSDP, "model")
+    disp = jnp.zeros((e * cap + 1, d), xf.dtype).at[slot].set(src)
+    disp = disp[:-1].reshape(e, cap, d)
+    # d stays FSDP-aligned with the expert weights' contraction dim
+    disp = C(disp, "model", None, FSDP)
+
+    # expert computation: grouped einsum (hits the MXU per expert)
+    gi = jnp.einsum("ecd,edf->ecf", disp, p["wg"])
+    hi = jnp.einsum("ecd,edf->ecf", disp, p["wi"])
+    act = jax.nn.silu(gi.astype(jnp.float32)).astype(hi.dtype) * hi
+    out_e = jnp.einsum("ecf,efd->ecd", act, p["wo"])  # (e, cap, d)
+    out_e = C(out_e, None, None, "model")  # back to feature-sharded
+
+    # combine: gather back and weight (local gather per 'model' shard)
+    gathered = out_e.reshape(e * cap, d)
+    gathered = jnp.concatenate([gathered, jnp.zeros((1, d), gathered.dtype)], 0)
+    per_pair = gathered[slot] * flat_w[:, None].astype(gathered.dtype)
+    combined = jnp.zeros((t, d), x.dtype).at[flat_tok].add(per_pair.astype(x.dtype))
+    combined = C(combined, FSDP, "model")
+
+    y = combined
+    if "shared" in p:
+        sh = p["shared"]
+        g = jax.nn.silu((xf @ sh["wg"]).astype(jnp.float32)).astype(xf.dtype)
+        y = y + ((g * (xf @ sh["wi"])) @ sh["wo"]).astype(x.dtype)
+    return x + y.reshape(b, s, d)

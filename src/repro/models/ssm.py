@@ -1,0 +1,230 @@
+"""Mamba2 block (chunked SSD algorithm), TPU-adapted: intra-chunk work is
+parallel masked matmuls (MXU), inter-chunk state is a short ``lax.scan``
+over chunk boundaries -- the standard sub-quadratic path that makes
+``long_500k`` viable for zamba2/xlstm.
+
+State-space semantics per head h (scalar A):
+  s_t = exp(dt_t A) s_{t-1} + dt_t B_t x_t^T ;  y_t = C_t . s_t + D x_t
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, init_norm, rms_norm, scaled_init
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    p = 64 if d_in % 64 == 0 else d_in // max(1, cfg.ssm_heads or 1)
+    if cfg.ssm_heads:
+        h = cfg.ssm_heads
+        p = d_in // h
+    else:
+        h = d_in // p
+    return d_in, h, p, n
+
+
+def init_mamba(rng, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    d_in, h, p, n = _dims(cfg)
+    ks = jax.random.split(rng, 6)
+    conv_ch = d_in + 2 * n  # x, B, C go through the depthwise conv
+    return {
+        "ln": init_norm(d, cfg.jdtype),
+        # order: [z, x, B, C, dt]
+        "w_in": scaled_init(ks[0], (d, 2 * d_in + 2 * n + h), 0, cfg.jdtype),
+        "conv": scaled_init(ks[1], (cfg.conv_kernel, conv_ch), 0, cfg.jdtype),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) = -1
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus ~ 0.12
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "ln_out": init_norm(d_in, cfg.jdtype),
+        "w_out": scaled_init(ks[2], (d_in, d), 0, cfg.jdtype),
+    }
+
+
+def _segsum(logdecay: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{k=j+1..i} logdecay[k] for i >= j else -inf.
+    logdecay: (..., Q) -> (..., Q, Q)."""
+    q = logdecay.shape[-1]
+    cs = jnp.cumsum(logdecay, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{j+1..i}
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) f32, positive
+    a: jax.Array,  # (H,) f32, negative
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    chunk: int,
+    init_state: jax.Array = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked scan; returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = -s % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    xc = x.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    da = dtc * a  # (b, nc, q, h) log-decay per step
+    xdt = xc * dtc[..., None]  # dt-weighted input
+
+    # intra-chunk (parallel): y_intra = ((C B^T) o L) @ (x dt)
+    L = _segsum(jnp.moveaxis(da, -1, -2))  # (b, nc, h, q, q)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)  # (b,nc,q,q)
+    att = cb[:, :, None] * jnp.exp(L)  # (b,nc,h,q,q)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", att, xdt)
+
+    # chunk summaries: state contribution of each chunk
+    cum = jnp.cumsum(da, axis=2)  # (b,nc,q,h)
+    tot = cum[:, :, -1:]  # (b,nc,1,h)
+    decay_to_end = jnp.exp(tot - cum)  # exp(sum_{k>j} da_k)
+    chunk_state = jnp.einsum(
+        "bcqn,bcqhp,bcqh->bchpn", bc, xdt, decay_to_end
+    )  # (b,nc,h,p,n)
+
+    # inter-chunk: scan over chunks carrying state (b,h,p,n)
+    tot_h = jnp.exp(tot[:, :, 0])  # (b,nc,h) total chunk decay
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, inputs):
+        cs, td = inputs  # (b,h,p,n), (b,h)
+        out_prev = state
+        new = state * td[:, :, None, None] + cs
+        return new, out_prev
+
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)  # (nc,b,h,p,n)
+    td_t = jnp.moveaxis(tot_h, 1, 0)  # (nc,b,h)
+    final_state, prev_states = jax.lax.scan(step, init_state, (cs_t, td_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,h,p,n)
+
+    # y_inter[i] = (C_i . state_prev) * exp(cum_{<=i})
+    y_inter = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", cc, prev_states, jnp.exp(cum)
+    )
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :s]
+    return y, final_state
+
+
+def mamba_forward(
+    p: Dict, x: jax.Array, cfg: ArchConfig, state: Dict = None
+) -> jax.Array:
+    """Full-sequence forward (train / prefill). x (B,S,D)."""
+    b, s, d = x.shape
+    d_in, h, hp, n = _dims(cfg)
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = xin @ p["w_in"]  # (B,S, 2*d_in + 2n + h)
+    z, xi, bm, cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    # depthwise causal conv over (x, B, C)
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)
+    k = cfg.conv_kernel
+    xbc_pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(
+        xbc_pad[:, i : i + s] * p["conv"][i][None, None, :] for i in range(k)
+    )
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xi, bm, cm = jnp.split(conv, [d_in, d_in + n], axis=-1)
+
+    a = -jnp.exp(p["a_log"])
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, _ = ssd_chunked(
+        xi.reshape(b, s, h, hp), dtp, a, bm, cm, cfg.chunk
+    )
+    y = y + xi.reshape(b, s, h, hp).astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["ln_out"], cfg.norm_eps)
+    return x + (y @ p["w_out"]).astype(x.dtype)
+
+
+def mamba_prefill(
+    p: Dict, x: jax.Array, cfg: ArchConfig
+) -> Tuple[jax.Array, Dict]:
+    """Forward that also returns the recurrent state for decode."""
+    b, s, d = x.shape
+    d_in, h, hp, n = _dims(cfg)
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = xin @ p["w_in"]
+    z, xi, bm, cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)
+    k = cfg.conv_kernel
+    conv_tail = xbc[:, -(k - 1):].astype(jnp.float32)
+    xbc_pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(
+        xbc_pad[:, i : i + s] * p["conv"][i][None, None, :] for i in range(k)
+    )
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xi, bm, cm = jnp.split(conv, [d_in, d_in + n], axis=-1)
+    a = -jnp.exp(p["a_log"])
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, fstate = ssd_chunked(xi.reshape(b, s, h, hp), dtp, a, bm, cm, cfg.chunk)
+    y = y + xi.reshape(b, s, h, hp).astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["ln_out"], cfg.norm_eps)
+    out = x + (y @ p["w_out"]).astype(x.dtype)
+    return out, {"conv": conv_tail, "ssm": fstate}
+
+
+# --------------------------------------------------------------- decode
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    d_in, h, p, n = _dims(cfg)
+    k = cfg.conv_kernel
+    return {
+        "conv": jnp.zeros((batch, k - 1, d_in + 2 * n), dtype),
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+    }
+
+
+def mamba_decode(
+    p: Dict, x: jax.Array, state: Dict, cfg: ArchConfig
+) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent step. x (B,1,D)."""
+    b, _, d = x.shape
+    d_in, h, hp, n = _dims(cfg)
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)[:, 0]  # (B,D)
+    zxbcdt = xin @ p["w_in"]
+    z, xi, bm, cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    xbc = jnp.concatenate([xi, bm, cm], axis=-1)  # (B, conv_ch)
+    hist = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # (B,k,ch)
+    conv = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), p["conv"].astype(jnp.float32))
+    conv = jax.nn.silu(conv).astype(x.dtype)
+    xi, bm, cm = jnp.split(conv, [d_in, d_in + n], axis=-1)
+
+    a = -jnp.exp(p["a_log"])
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    da = jnp.exp(dtp * a)  # (B,h)
+    xh = xi.reshape(b, h, hp).astype(jnp.float32)
+    ssm = state["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", bm.astype(jnp.float32), xh, dtp
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cm.astype(jnp.float32), ssm)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["ln_out"], cfg.norm_eps)
+    out = x + (y @ p["w_out"]).astype(x.dtype)[:, None]
+    return out, {"conv": hist[:, 1:], "ssm": ssm}

@@ -1,0 +1,314 @@
+"""Generic decoder LM over a block pattern: one model class serves dense,
+MoE, SSM, xLSTM, hybrid (zamba2 shared-attention), and VLM (M-RoPE)
+architectures.  Homogeneous pattern segments run under ``lax.scan`` over
+stacked per-layer params (small HLO at 80+ layers); per-layer remat is a
+config switch on the train path.
+
+Public surface (used by train/serve/launch):
+  init(rng) / init_shapes()                 params pytree
+  loss(params, batch)                       f32 scalar
+  prefill(params, batch)  -> (logits_last, caches)
+  decode_step(params, caches, tokens) -> (logits, caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_decode, attn_forward, attn_prefill, init_attn
+from .common import (
+    ArchConfig,
+    embed,
+    init_embed,
+    init_norm,
+    rms_norm,
+    softmax_xent,
+    stack_init,
+    unembed,
+)
+from .mlp import init_mlp, init_moe, mlp_forward, moe_forward
+from .ssm import (
+    init_mamba,
+    mamba_decode,
+    mamba_forward,
+    mamba_init_state,
+    mamba_prefill,
+)
+from .xlstm import (
+    init_mlstm,
+    init_slstm,
+    mlstm_decode,
+    mlstm_forward,
+    mlstm_init_state,
+    mlstm_prefill,
+    slstm_decode,
+    slstm_forward,
+    slstm_init_state,
+    slstm_prefill,
+)
+
+ATTN_KINDS = ("attn", "local", "moe", "shared_attn")
+
+
+def _init_block(kind: str, rng, cfg: ArchConfig):
+    if kind in ("attn", "local", "shared_attn"):
+        ka, km = jax.random.split(rng)
+        return {"attn": init_attn(ka, cfg), "mlp": init_mlp(km, cfg)}
+    if kind == "moe":
+        ka, km = jax.random.split(rng)
+        return {"attn": init_attn(ka, cfg), "moe": init_moe(km, cfg)}
+    if kind == "mamba":
+        return {"mamba": init_mamba(rng, cfg)}
+    if kind == "mlstm":
+        return {"mlstm": init_mlstm(rng, cfg)}
+    if kind == "slstm":
+        return {"slstm": init_slstm(rng, cfg)}
+    raise ValueError(kind)
+
+
+def _fwd_block(kind: str, p, x, cfg: ArchConfig, pos):
+    if kind in ("attn", "shared_attn"):
+        x = attn_forward(p["attn"], x, cfg, pos=pos, causal=True)
+        return mlp_forward(p["mlp"], x, cfg)
+    if kind == "local":
+        x = attn_forward(p["attn"], x, cfg, pos=pos, causal=True, window=cfg.window)
+        return mlp_forward(p["mlp"], x, cfg)
+    if kind == "moe":
+        x = attn_forward(p["attn"], x, cfg, pos=pos, causal=True)
+        return moe_forward(p["moe"], x, cfg)
+    if kind == "mamba":
+        return mamba_forward(p["mamba"], x, cfg)
+    if kind == "mlstm":
+        return mlstm_forward(p["mlstm"], x, cfg)
+    if kind == "slstm":
+        return slstm_forward(p["slstm"], x, cfg)
+    raise ValueError(kind)
+
+
+def _prefill_block(kind: str, p, x, cfg: ArchConfig, pos):
+    if kind in ("attn", "shared_attn", "local", "moe"):
+        w = cfg.window if kind == "local" else 0
+        x, cache = attn_prefill(
+            p["attn"], x, cfg, pos=pos, causal=True, window=w
+        )
+        if kind == "moe":
+            x = moe_forward(p["moe"], x, cfg)
+        else:
+            x = mlp_forward(p["mlp"], x, cfg)
+        return x, cache
+    if kind == "mamba":
+        return mamba_prefill(p["mamba"], x, cfg)
+    if kind == "mlstm":
+        return mlstm_prefill(p["mlstm"], x, cfg)
+    if kind == "slstm":
+        return slstm_prefill(p["slstm"], x, cfg)
+    raise ValueError(kind)
+
+
+def _decode_block(kind: str, p, x, cache, cache_len, cfg: ArchConfig):
+    if kind in ("attn", "shared_attn", "local", "moe"):
+        w = cfg.window if kind == "local" else 0
+        x, cache = attn_decode(p["attn"], x, cache, cache_len, cfg, window=w)
+        if kind == "moe":
+            x = moe_forward(p["moe"], x, cfg)
+        else:
+            x = mlp_forward(p["mlp"], x, cfg)
+        return x, cache
+    if kind == "mamba":
+        return mamba_decode(p["mamba"], x, cache, cfg)
+    if kind == "mlstm":
+        return mlstm_decode(p["mlstm"], x, cache, cfg)
+    if kind == "slstm":
+        return slstm_decode(p["slstm"], x, cache, cfg)
+    raise ValueError(kind)
+
+
+def _init_cache(kind: str, cfg: ArchConfig, batch: int, s_cache: int):
+    if kind in ("attn", "shared_attn", "local", "moe"):
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        z = jnp.zeros((batch, kv, s_cache, hd), cfg.jdtype)
+        return {"k": z, "v": z}
+    if kind == "mamba":
+        return mamba_init_state(cfg, batch)
+    if kind == "mlstm":
+        return mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+@dataclasses.dataclass
+class DecoderLM:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------- params
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        segs = cfg.segments()
+        keys = jax.random.split(rng, len(segs) + 3)
+        params: Dict[str, Any] = {
+            "embed": init_embed(keys[0], cfg.vocab, cfg.d_model, cfg.jdtype),
+            "final_ln": init_norm(cfg.d_model, cfg.jdtype),
+            "segments": [],
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = init_embed(
+                keys[1], cfg.vocab, cfg.d_model, cfg.jdtype
+            )
+        shared_done = False
+        for i, (kind, count) in enumerate(segs):
+            if kind == "shared_attn":
+                if not shared_done:
+                    params["shared_attn"] = _init_block(
+                        "shared_attn", keys[2], cfg
+                    )
+                    shared_done = True
+                params["segments"].append({})  # placeholder, uses shared
+            else:
+                params["segments"].append(
+                    stack_init(
+                        keys[i + 3],
+                        count,
+                        lambda r, k=kind: _init_block(k, r, cfg),
+                    )
+                )
+        return params
+
+    def init_shapes(self) -> Dict:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------- helpers
+    def _pos(self, batch_pos, b, s):
+        cfg = self.cfg
+        if batch_pos is not None:
+            return batch_pos
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, b, s))
+        return pos
+
+    def _backbone(self, params, x, pos, remat: bool):
+        cfg = self.cfg
+        for (kind, count), seg in zip(cfg.segments(), params["segments"]):
+            if kind == "shared_attn":
+                sp = params["shared_attn"]
+                for _ in range(count):
+                    x = _fwd_block(kind, sp, x, cfg, pos)
+                continue
+
+            def layer(xc, pl, k=kind):
+                return _fwd_block(k, pl, xc, cfg, pos), None
+
+            if remat:
+                layer = jax.checkpoint(layer)  # noqa: B023
+            x, _ = jax.lax.scan(layer, x, seg)
+        return x
+
+    def logits(self, params, tokens, pos=None, remat: bool = False):
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = embed(tokens, params["embed"]["table"])
+        x = self._backbone(params, x, self._pos(pos, b, s), remat)
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        table = params.get("unembed", params["embed"])["table"]
+        return unembed(x, table, cfg.logit_softcap)
+
+    # --------------------------------------------------------------- train
+    def loss(self, params, batch: Dict, remat: bool = True) -> jax.Array:
+        logits = self.logits(
+            params, batch["tokens"], batch.get("pos"), remat=remat
+        )
+        return softmax_xent(logits, batch["targets"])
+
+    # --------------------------------------------------------------- serve
+    def prefill(self, params, batch: Dict, s_cache: Optional[int] = None):
+        """Run the prompt; returns (last-token logits, caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        s_cache = s_cache or s
+        pos = self._pos(batch.get("pos"), b, s)
+        x = embed(tokens, params["embed"]["table"])
+        caches: List[Any] = []
+        for (kind, count), seg in zip(cfg.segments(), params["segments"]):
+            if kind == "shared_attn":
+                sp = params["shared_attn"]
+                sub = []
+                for _ in range(count):
+                    x, c = _prefill_block(kind, sp, x, cfg, pos)
+                    c = self._pad_cache(kind, c, s, s_cache)
+                    sub.append(c)
+                caches.append(jax.tree_util.tree_map(lambda *a: jnp.stack(a), *sub))
+                continue
+
+            def layer(xc, pl, k=kind):
+                xo, c = _prefill_block(k, pl, xc, cfg, pos)
+                return xo, self._pad_cache(k, c, s, s_cache)
+
+            x, seg_cache = jax.lax.scan(layer, x, seg)
+            caches.append(seg_cache)
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        table = params.get("unembed", params["embed"])["table"]
+        logits = unembed(x[:, -1:], table, cfg.logit_softcap)
+        return logits[:, 0], {"segments": caches, "len": jnp.int32(s)}
+
+    def _pad_cache(self, kind, cache, s, s_cache):
+        if kind in ATTN_KINDS and s_cache > s:
+            pad = s_cache - s
+            cache = {
+                k: jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                for k, v in cache.items()
+            }
+        return cache
+
+    def init_caches(self, batch: int, s_cache: int, prefix_len) -> Dict:
+        """Empty caches of a given size with a claimed valid prefix (the
+        dry-run decode path: cache contents are inputs)."""
+        cfg = self.cfg
+        caches = []
+        for kind, count in cfg.segments():
+            one = _init_cache(kind, cfg, batch, s_cache)
+            caches.append(
+                jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one
+                )
+            )
+        return {"segments": caches, "len": jnp.asarray(prefix_len, jnp.int32)}
+
+    def decode_step(self, params, caches, tokens):
+        """One token for every sequence. tokens (B,) -> logits (B, V)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        x = embed(tokens[:, None], params["embed"]["table"])
+        clen = caches["len"]
+        new_caches = []
+        for (kind, count), seg, seg_cache in zip(
+            cfg.segments(), params["segments"], caches["segments"]
+        ):
+            if kind == "shared_attn":
+                sp = params["shared_attn"]
+                subs = []
+                for i in range(count):
+                    ci = jax.tree_util.tree_map(lambda a: a[i], seg_cache)
+                    x, c2 = _decode_block(kind, sp, x, ci, clen, cfg)
+                    subs.append(c2)
+                new_caches.append(
+                    jax.tree_util.tree_map(lambda *a: jnp.stack(a), *subs)
+                )
+                continue
+
+            def layer(xc, inp, k=kind):
+                pl, cl = inp
+                xo, c2 = _decode_block(k, pl, xc, cl, clen, cfg)
+                return xo, c2
+
+            x, seg_new = jax.lax.scan(layer, x, (seg, seg_cache))
+            new_caches.append(seg_new)
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        table = params.get("unembed", params["embed"])["table"]
+        logits = unembed(x, table, cfg.logit_softcap)[:, 0]
+        return logits, {"segments": new_caches, "len": clen + 1}

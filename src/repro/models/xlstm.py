@@ -1,0 +1,271 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunked linear-
+attention form — TPU-native: intra-chunk matmuls on the MXU + short
+inter-chunk scan) and sLSTM (scalar memory, true recurrence -> per-step
+``lax.scan`` with block-diagonal per-head recurrent weights).
+
+Gating follows the paper: exponential input gate, sigmoid forget gate
+(log-space accumulation keeps the chunked form stable in f32), max-norm
+denominator for mLSTM outputs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, init_norm, rms_norm, scaled_init
+
+
+def _heads(cfg: ArchConfig) -> Tuple[int, int]:
+    h = cfg.n_heads
+    return h, cfg.d_model // h
+
+
+# =============================================================== mLSTM
+def init_mlstm(rng, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    up = 2 * d  # projection factor 2 per the paper
+    ks = jax.random.split(rng, 8)
+    return {
+        "ln": init_norm(d, cfg.jdtype),
+        "w_up": scaled_init(ks[0], (d, 2 * up), 0, cfg.jdtype),  # [x_in, z]
+        "wq": scaled_init(ks[1], (up, up), 0, cfg.jdtype),
+        "wk": scaled_init(ks[2], (up, up), 0, cfg.jdtype),
+        "wv": scaled_init(ks[3], (up, up), 0, cfg.jdtype),
+        "w_if": scaled_init(ks[4], (up, 2 * h), 0, jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((h,)), 3.0 * jnp.ones((h,))]
+        ),  # forget bias ~ sigmoid(3) = .95
+        "ln_out": init_norm(up, cfg.jdtype),
+        "w_down": scaled_init(ks[5], (up, d), 0, cfg.jdtype),
+    }
+
+
+def _mlstm_chunked(
+    q, k, v, li, lf, chunk: int, init_c=None, init_n=None
+):
+    """q,k,v (B,S,H,P); li/lf (B,S,H) log input/forget gates (f32).
+    Returns (y (B,S,H,P), C (B,H,P,P), n (B,H,P))."""
+    b, s, h, p = q.shape
+    cq = min(chunk, s)
+    pad = -s % cq
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zp(q), zp(k), zp(v)
+        li = jnp.pad(li, ((0, 0), (0, pad)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad)))
+    nc = q.shape[1] // cq
+    shp = (b, nc, cq, h, p)
+    qc = q.reshape(shp).astype(jnp.float32)
+    kc = k.reshape(shp).astype(jnp.float32)
+    vc = v.reshape(shp).astype(jnp.float32)
+    lic = li.reshape(b, nc, cq, h)
+    lfc = lf.reshape(b, nc, cq, h)
+
+    cum = jnp.cumsum(lfc, axis=2)  # inclusive log forget cumsum
+    tot = cum[:, :, -1:]
+
+    # intra-chunk: score[i,j] = q_i.k_j * exp(cum_i - cum_j + li_j), j <= i
+    logw = cum[:, :, :, None, :] - cum[:, :, None, :, :] + lic[:, :, None, :, :]
+    iidx = jnp.arange(cq)
+    causal = (iidx[:, None] >= iidx[None, :])[None, None, :, :, None]
+    logw = jnp.where(causal, logw, -jnp.inf)
+    w = jnp.exp(logw)  # (b,nc,i,j,h)
+    qk = jnp.einsum("bcihp,bcjhp->bcijh", qc, kc)
+    att = qk * w
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, vc)
+    n_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, kc)  # denominator terms
+
+    # chunk state: C_c = sum_j exp(tot - cum_j + li_j) k_j v_j^T
+    wj = jnp.exp(tot - cum + lic)  # (b,nc,cq,h)
+    c_chunk = jnp.einsum("bcjh,bcjhp,bcjhr->bchpr", wj, kc, vc)
+    n_chunk = jnp.einsum("bcjh,bcjhp->bchp", wj, kc)
+    tot_d = jnp.exp(tot[:, :, 0])  # (b,nc,h)
+
+    if init_c is None:
+        init_c = jnp.zeros((b, h, p, p), jnp.float32)
+        init_n = jnp.zeros((b, h, p), jnp.float32)
+
+    def step(carry, inp):
+        c, n = carry
+        cc, nn, td = inp
+        out = (c, n)
+        c2 = c * td[:, :, None, None] + cc
+        n2 = n * td[:, :, None] + nn
+        return (c2, n2), out
+
+    (c_fin, n_fin), (c_prev, n_prev) = jax.lax.scan(
+        step,
+        (init_c, init_n),
+        (
+            jnp.moveaxis(c_chunk, 1, 0),
+            jnp.moveaxis(n_chunk, 1, 0),
+            jnp.moveaxis(tot_d, 1, 0),
+        ),
+    )
+    c_prev = jnp.moveaxis(c_prev, 0, 1)  # (b,nc,h,p,p)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)  # (b,nc,h,p)
+
+    dec = jnp.exp(cum)  # (b,nc,cq,h)
+    y_inter = jnp.einsum("bcihp,bchpr,bcih->bcihr", qc, c_prev, dec)
+    n_inter = jnp.einsum("bcihp,bchp,bcih->bcih", qc, n_prev, dec)
+    n_tot = jnp.einsum("bcihp,bcihp->bcih", qc, n_intra) + n_inter
+    denom = jnp.maximum(jnp.abs(n_tot), 1.0)[..., None]
+    y = (y_intra + y_inter) / denom
+    y = y.reshape(b, nc * cq, h, p)[:, :s]
+    return y, c_fin, n_fin
+
+
+def mlstm_forward(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    out, _ = mlstm_prefill(p, x, cfg)
+    return out
+
+
+def mlstm_prefill(p: Dict, x: jax.Array, cfg: ArchConfig):
+    b, s, d = x.shape
+    h, _ = _heads(cfg)
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    upz = xin @ p["w_up"]
+    up = upz.shape[-1] // 2
+    u, z = jnp.split(upz, 2, axis=-1)
+    hd = up // h
+    q = (u @ p["wq"]).reshape(b, s, h, hd)
+    k = (u @ p["wk"]).reshape(b, s, h, hd) * (hd**-0.5)
+    v = (u @ p["wv"]).reshape(b, s, h, hd)
+    gates = u.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    gi, gf = jnp.split(gates.reshape(b, s, 2, h), 2, axis=2)
+    li = gi[:, :, 0]  # log input gate (exp gating)
+    lf = jax.nn.log_sigmoid(gf[:, :, 0])
+    y, c_fin, n_fin = _mlstm_chunked(q, k, v, li, lf, cfg.chunk)
+    y = y.reshape(b, s, up).astype(x.dtype)
+    y = rms_norm(y, p["ln_out"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = x + (y @ p["w_down"]).astype(x.dtype)
+    return out, {"c": c_fin, "n": n_fin}
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    h, _ = _heads(cfg)
+    up = 2 * cfg.d_model
+    hd = up // h
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+    }
+
+
+def mlstm_decode(p: Dict, x: jax.Array, state: Dict, cfg: ArchConfig):
+    b, _, d = x.shape
+    h, _ = _heads(cfg)
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)[:, 0]
+    upz = xin @ p["w_up"]
+    up = upz.shape[-1] // 2
+    u, z = jnp.split(upz, 2, axis=-1)
+    hd = up // h
+    q = (u @ p["wq"]).reshape(b, h, hd).astype(jnp.float32)
+    k = ((u @ p["wk"]) * (hd**-0.5)).reshape(b, h, hd).astype(jnp.float32)
+    v = (u @ p["wv"]).reshape(b, h, hd).astype(jnp.float32)
+    gates = u.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    gi, gf = jnp.split(gates.reshape(b, 2, h), 2, axis=1)
+    i_t = jnp.exp(gi[:, 0])  # (b,h)
+    f_t = jax.nn.sigmoid(gf[:, 0])
+    c = state["c"] * f_t[:, :, None, None] + i_t[:, :, None, None] * (
+        k[:, :, :, None] * v[:, :, None, :]
+    )
+    n = state["n"] * f_t[:, :, None] + i_t[:, :, None] * k
+    num = jnp.einsum("bhp,bhpr->bhr", q, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n)), 1.0)
+    y = (num / den[:, :, None]).reshape(b, up).astype(x.dtype)
+    y = rms_norm(y, p["ln_out"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = x + (y @ p["w_down"]).astype(x.dtype)[:, None]
+    return out, {"c": c, "n": n}
+
+
+# =============================================================== sLSTM
+def init_slstm(rng, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "ln": init_norm(d, cfg.jdtype),
+        # input projections for (z, i, f, o) gates
+        "w_in": scaled_init(ks[0], (d, 4 * d), 0, cfg.jdtype),
+        # block-diagonal recurrent weights per head: (h, hd, 4*hd)
+        "r": scaled_init(ks[1], (h, hd, 4 * hd), 1, jnp.float32),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "ln_out": init_norm(d, cfg.jdtype),
+        # paper's up/down MLP (pf = 4/3) fused into the block
+        "w_up": scaled_init(ks[2], (d, (4 * d) // 3), 0, cfg.jdtype),
+        "w_down": scaled_init(ks[3], ((4 * d) // 3, d), 0, cfg.jdtype),
+    }
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {
+        "c": z,
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "h": z,
+        "m": jnp.full((batch, h, hd), -1e30, jnp.float32),
+    }
+
+
+def _slstm_cell(p, cfg, xg, st):
+    """One timestep. xg (b, 4d) pre-activations from input; st: state."""
+    h_, hd = _heads(cfg)
+    b = xg.shape[0]
+    rec = jnp.einsum("bhp,hpq->bhq", st["h"], p["r"]).reshape(b, 4 * h_ * hd)
+    g = (xg + rec + p["b"]).reshape(b, h_, hd, 4)
+    zt = jnp.tanh(g[..., 0])
+    it = g[..., 1]  # log-space input gate
+    ft = jax.nn.log_sigmoid(g[..., 2])
+    ot = jax.nn.sigmoid(g[..., 3])
+    m_new = jnp.maximum(ft + st["m"], it)  # stabilizer
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + st["m"] - m_new)
+    c = fp * st["c"] + ip * zt
+    n = fp * st["n"] + ip
+    hh = ot * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": hh, "m": m_new}
+
+
+def slstm_forward(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    out, _ = slstm_prefill(p, x, cfg)
+    return out
+
+
+def slstm_prefill(p: Dict, x: jax.Array, cfg: ArchConfig):
+    b, s, d = x.shape
+    h_, hd = _heads(cfg)
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    xg = (xin @ p["w_in"]).astype(jnp.float32)  # (b,s,4d)
+
+    def step(st, xt):
+        st2 = _slstm_cell(p, cfg, xt, st)
+        return st2, st2["h"]
+
+    st0 = slstm_init_state(cfg, b)
+    fin, hs = jax.lax.scan(step, st0, jnp.moveaxis(xg, 0, 1))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_out"], cfg.norm_eps)
+    y = x + y
+    # fused position-wise MLP (gelu)
+    hmid = jax.nn.gelu((y @ p["w_up"]).astype(jnp.float32)).astype(x.dtype)
+    return y + (hmid @ p["w_down"]).astype(x.dtype), fin
+
+
+def slstm_decode(p: Dict, x: jax.Array, state: Dict, cfg: ArchConfig):
+    b, _, d = x.shape
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)[:, 0]
+    xg = (xin @ p["w_in"]).astype(jnp.float32)
+    st2 = _slstm_cell(p, cfg, xg, state)
+    y = st2["h"].reshape(b, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_out"], cfg.norm_eps)
+    y = x + y[:, None]
+    hmid = jax.nn.gelu((y @ p["w_up"]).astype(jnp.float32)).astype(x.dtype)
+    return y + (hmid @ p["w_down"]).astype(x.dtype), st2

@@ -1,0 +1,13 @@
+"""Distributed relational algebra in JAX — the paper's MapReduce substrate.
+
+Tables are fixed-capacity int32 arrays with validity masks (XLA's static
+shapes == the paper's memory-bounded reducers; overflow == the paper's
+abort).  All distributed state carries a leading "reducer" axis that is
+either vmapped (simulation, 1 device) or shard_mapped (production mesh) —
+the per-shard code is identical (collectives via a named axis).
+"""
+from .table import Table, DTable, schema_join
+from .spmd import SPMD, AXIS
+from .ledger import Ledger
+
+__all__ = ["Table", "DTable", "schema_join", "SPMD", "AXIS", "Ledger"]

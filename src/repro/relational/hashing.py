@@ -1,0 +1,123 @@
+"""Hashing and exact multi-column ordering utilities (per-shard, pure jnp).
+
+- ``hash_columns``: 32-bit murmur-style column-combining hash -> reducer
+  destinations.  Only needs *consistency*, not injectivity (exactness
+  everywhere else comes from lexsort-based dense ranks).
+- ``dense_ranks``: exact dictionary encoding of multi-column keys across two
+  operand tables via concat + lexsort + run ids.  Gives collision-free int32
+  keys usable with sort/searchsorted — no attribute-domain bounds anywhere.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+_GOLD = jnp.uint32(0x9E3779B9)
+
+
+def mix32(x: jax.Array) -> jax.Array:
+    """fmix32 from murmur3 (bijective on uint32)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _C1
+    x = x ^ (x >> 13)
+    x = x * _C2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_columns(data: jax.Array, cols: Sequence[int], seed) -> jax.Array:
+    """(cap, arity) int32, selected cols -> (cap,) uint32 hash.
+
+    ``seed`` may be a python int OR a traced scalar — engine code passes it
+    traced so reseeded retries reuse the compiled program."""
+    s = jnp.asarray(seed).astype(jnp.uint32)
+    h = mix32(jnp.broadcast_to(s, (data.shape[0],)))
+    for c in cols:
+        h = mix32(h ^ (mix32(data[:, c].astype(jnp.uint32)) + _GOLD))
+    return h
+
+
+def dests_for(data: jax.Array, valid: jax.Array, cols: Sequence[int], p: int, seed) -> jax.Array:
+    """Reducer destination in [0,p) for valid rows; p for invalid (drop)."""
+    h = hash_columns(data, cols, seed)
+    d = (h % jnp.uint32(p)).astype(jnp.int32)
+    return jnp.where(valid, d, p)
+
+
+def _lexsort_cols(cols: Tuple[jax.Array, ...], invalid: jax.Array) -> jax.Array:
+    """Order: valid rows sorted lexicographically by cols, invalid last.
+
+    jnp.lexsort sorts by the LAST key first, so pass (minor..major, invalid).
+    """
+    keys = tuple(reversed(cols)) + (invalid.astype(jnp.int32),)
+    return jnp.lexsort(keys)
+
+
+def sort_rows(data: jax.Array, valid: jax.Array, cols: Sequence[int]) -> jax.Array:
+    """Permutation sorting the table by ``cols`` (invalid rows last)."""
+    return _lexsort_cols(tuple(data[:, c] for c in cols), ~valid)
+
+
+def dense_ranks(
+    a_data: jax.Array, a_valid: jax.Array, a_cols: Sequence[int],
+    b_data: jax.Array, b_valid: jax.Array, b_cols: Sequence[int],
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact shared dictionary encoding of the key columns of two tables.
+
+    Returns int32 (rank_a, rank_b): equal multi-column keys (across either
+    table) get equal ranks; distinct keys get distinct ranks.  Invalid rows
+    get rank -1 (a) / -2 (b) so they never match anything.
+    """
+    assert len(a_cols) == len(b_cols)
+    na, nb = a_data.shape[0], b_data.shape[0]
+    cols = tuple(
+        jnp.concatenate([a_data[:, ca], b_data[:, cb]])
+        for ca, cb in zip(a_cols, b_cols)
+    )
+    if not cols:  # zero-attr key (cartesian): every valid row matches
+        ra = jnp.where(a_valid, 0, -1)
+        rb = jnp.where(b_valid, 0, -2)
+        return ra.astype(jnp.int32), rb.astype(jnp.int32)
+    invalid = jnp.concatenate([~a_valid, ~b_valid])
+    order = _lexsort_cols(cols, invalid)
+    sorted_cols = [c[order] for c in cols]
+    sorted_invalid = invalid[order]
+    new_run = jnp.zeros((na + nb,), bool).at[0].set(True)
+    if na + nb > 1:
+        diff = jnp.zeros((na + nb - 1,), bool)
+        for c in sorted_cols:
+            diff = diff | (c[1:] != c[:-1])
+        diff = diff | (sorted_invalid[1:] != sorted_invalid[:-1])
+        new_run = new_run.at[1:].set(diff)
+    run_id = jnp.cumsum(new_run.astype(jnp.int32)) - 1
+    ranks = jnp.zeros((na + nb,), jnp.int32).at[order].set(run_id)
+    ra = jnp.where(a_valid, ranks[:na], -1)
+    rb = jnp.where(b_valid, ranks[na:], -2)
+    return ra.astype(jnp.int32), rb.astype(jnp.int32)
+
+
+def self_ranks(data: jax.Array, valid: jax.Array, cols: Sequence[int]) -> jax.Array:
+    """Dense ranks of one table's key columns (invalid -> -1)."""
+    n = data.shape[0]
+    if not cols:
+        return jnp.where(valid, 0, -1).astype(jnp.int32)
+    colt = tuple(data[:, c] for c in cols)
+    invalid = ~valid
+    order = _lexsort_cols(colt, invalid)
+    sorted_cols = [c[order] for c in colt]
+    sorted_invalid = invalid[order]
+    new_run = jnp.zeros((n,), bool).at[0].set(True)
+    if n > 1:
+        diff = jnp.zeros((n - 1,), bool)
+        for c in sorted_cols:
+            diff = diff | (c[1:] != c[:-1])
+        diff = diff | (sorted_invalid[1:] != sorted_invalid[:-1])
+        new_run = new_run.at[1:].set(diff)
+    run_id = jnp.cumsum(new_run.astype(jnp.int32)) - 1
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(run_id)
+    return jnp.where(valid, ranks, -1).astype(jnp.int32)

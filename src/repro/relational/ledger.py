@@ -1,0 +1,75 @@
+"""BSP cost accounting: rounds and tuples communicated (the paper's two
+cost metrics, Sec. 3.2).  One ledger per query execution."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    index: int
+    phase: str
+    ops: List[str]
+    comm_tuples: int
+    note: str = ""
+    n_rounds: int = 1  # engine BSP rounds consumed (parallel ops: the max)
+
+
+class Ledger:
+    def __init__(self) -> None:
+        self.records: List[RoundRecord] = []
+        self.output_tuples: int = 0
+        self.retries: int = 0
+
+    @property
+    def rounds(self) -> int:
+        return sum(r.n_rounds for r in self.records)
+
+    @property
+    def comm_tuples(self) -> int:
+        """Total communication: shuffled tuples + output tuples (the paper
+        counts reducer output as communication)."""
+        return sum(r.comm_tuples for r in self.records) + self.output_tuples
+
+    @property
+    def shuffle_tuples(self) -> int:
+        return sum(r.comm_tuples for r in self.records)
+
+    def add_round(
+        self, phase: str, ops: List[str], comm: int, note: str = "", n_rounds: int = 1
+    ) -> None:
+        self.records.append(
+            RoundRecord(len(self.records), phase, list(ops), int(comm), note, n_rounds)
+        )
+
+    def rounds_in_phase(self, phase: str) -> int:
+        return sum(r.n_rounds for r in self.records if r.phase == phase)
+
+    def comm_in_phase(self, phase: str) -> int:
+        return sum(r.comm_tuples for r in self.records if r.phase == phase)
+
+    def summary(self) -> Dict[str, Any]:
+        phases: Dict[str, Dict[str, int]] = {}
+        for r in self.records:
+            ph = phases.setdefault(r.phase, {"rounds": 0, "comm": 0})
+            ph["rounds"] += r.n_rounds
+            ph["comm"] += r.comm_tuples
+        return {
+            "rounds": self.rounds,
+            "comm_tuples": self.comm_tuples,
+            "shuffle_tuples": self.shuffle_tuples,
+            "output_tuples": self.output_tuples,
+            "retries": self.retries,
+            "phases": phases,
+        }
+
+    def __repr__(self) -> str:
+        s = self.summary()
+        lines = [
+            f"Ledger(rounds={s['rounds']}, comm={s['comm_tuples']}, "
+            f"out={s['output_tuples']}, retries={s['retries']})"
+        ]
+        for ph, v in s["phases"].items():
+            lines.append(f"  {ph}: rounds={v['rounds']} comm={v['comm']}")
+        return "\n".join(lines)

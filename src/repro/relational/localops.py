@@ -1,0 +1,132 @@
+"""Per-shard (single-reducer) relational operations, pure jnp.
+
+Everything is exact for arbitrary arities/domains: multi-column keys are
+dictionary-encoded with ``dense_ranks`` (concat + lexsort + run ids), never
+hashed.  All shapes static; "too many output tuples" surfaces as an
+overflow count (the paper's abort), never silent truncation.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import dense_ranks, self_ranks
+
+_I32MAX = jnp.int32(2**31 - 1)
+
+
+def compact(data: jax.Array, valid: jax.Array, out_cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Move valid rows to the front and resize to ``out_cap``.
+
+    Returns (data, valid, dropped_count)."""
+    n = data.shape[0]
+    order = jnp.argsort(~valid, stable=True)
+    d = data[order]
+    v = valid[order]
+    cnt = valid.sum()
+    if out_cap <= n:
+        dropped = jnp.maximum(cnt - out_cap, 0)
+        return d[:out_cap], v[:out_cap], dropped
+    pad_d = jnp.zeros((out_cap - n, data.shape[1]), data.dtype)
+    pad_v = jnp.zeros((out_cap - n,), bool)
+    return (
+        jnp.concatenate([d, pad_d], 0),
+        jnp.concatenate([v, pad_v], 0),
+        jnp.int32(0),
+    )
+
+
+def local_join(
+    a_data: jax.Array, a_valid: jax.Array,
+    b_data: jax.Array, b_valid: jax.Array,
+    a_key: Sequence[int], b_key: Sequence[int],
+    b_keep: Sequence[int],
+    out_cap: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Natural join on the given key columns.
+
+    Output rows are ``a_row ++ b_row[b_keep]`` (caller computes the joined
+    schema).  Returns (out_data (out_cap, a_ar + len(b_keep)), out_valid,
+    overflow_count)."""
+    na, nb = a_data.shape[0], b_data.shape[0]
+    ra, rb = dense_ranks(a_data, a_valid, a_key, b_data, b_valid, b_key)
+    rb_sort_key = jnp.where(b_valid, rb, _I32MAX)
+    order_b = jnp.argsort(rb_sort_key)
+    rb_sorted = rb_sort_key[order_b]
+    lo = jnp.searchsorted(rb_sorted, ra, side="left")
+    hi = jnp.searchsorted(rb_sorted, ra, side="right")
+    counts = jnp.where(a_valid, hi - lo, 0)
+    offsets = jnp.cumsum(counts)
+    total = offsets[-1] if na else jnp.int32(0)
+    t = jnp.arange(out_cap)
+    i = jnp.searchsorted(offsets, t, side="right")
+    i_c = jnp.clip(i, 0, na - 1)
+    prev = jnp.where(i_c > 0, offsets[i_c - 1], 0)
+    within = t - prev
+    j_sorted = jnp.clip(lo[i_c] + within, 0, nb - 1)
+    j = order_b[j_sorted]
+    out_valid = t < total
+    left = a_data[i_c]
+    right = b_data[j][:, jnp.asarray(b_keep, jnp.int32)] if b_keep else jnp.zeros((out_cap, 0), a_data.dtype)
+    out = jnp.concatenate([left, right], axis=1)
+    out = jnp.where(out_valid[:, None], out, 0)
+    overflow = jnp.maximum(total - out_cap, 0)
+    return out, out_valid, overflow
+
+
+def local_join_count(
+    a_data, a_valid, b_data, b_valid, a_key, b_key
+) -> jax.Array:
+    """Exact output size of the join (for capacity planning)."""
+    ra, rb = dense_ranks(a_data, a_valid, a_key, b_data, b_valid, b_key)
+    rb_sort_key = jnp.where(b_valid, rb, _I32MAX)
+    rb_sorted = jnp.sort(rb_sort_key)
+    lo = jnp.searchsorted(rb_sorted, ra, side="left")
+    hi = jnp.searchsorted(rb_sorted, ra, side="right")
+    return jnp.where(a_valid, hi - lo, 0).sum()
+
+
+def local_semijoin_mask(
+    s_data: jax.Array, s_valid: jax.Array, s_key: Sequence[int],
+    r_data: jax.Array, r_valid: jax.Array, r_key: Sequence[int],
+) -> jax.Array:
+    """Mask of S rows whose key appears in R (S |>< R)."""
+    rs, rr = dense_ranks(s_data, s_valid, s_key, r_data, r_valid, r_key)
+    rr_sorted = jnp.sort(jnp.where(r_valid, rr, _I32MAX))
+    lo = jnp.searchsorted(rr_sorted, rs, side="left")
+    hi = jnp.searchsorted(rr_sorted, rs, side="right")
+    return s_valid & (hi > lo)
+
+
+def local_dedup_mask(data: jax.Array, valid: jax.Array, cols: Sequence[int]) -> jax.Array:
+    """Keep-first mask of distinct rows (by ``cols``)."""
+    n = data.shape[0]
+    ranks = self_ranks(data, valid, cols)
+    first = jax.ops.segment_min(
+        jnp.where(valid, jnp.arange(n), _I32MAX),
+        jnp.clip(ranks, 0, n - 1),
+        num_segments=n,
+    )
+    return valid & (jnp.arange(n) == first[jnp.clip(ranks, 0, n - 1)])
+
+
+def local_intersect_mask(
+    a_data: jax.Array, a_valid: jax.Array,
+    b_data: jax.Array, b_valid: jax.Array,
+    a_cols: Sequence[int], b_cols: Sequence[int],
+) -> jax.Array:
+    """Mask of A rows present in B (full-row by aligned columns)."""
+    return local_semijoin_mask(a_data, a_valid, a_cols, b_data, b_valid, b_cols)
+
+
+def local_project(
+    data: jax.Array, valid: jax.Array, cols: Sequence[int], dedup: bool
+) -> Tuple[jax.Array, jax.Array]:
+    out = data[:, jnp.asarray(cols, jnp.int32)] if cols else jnp.zeros((data.shape[0], 0), data.dtype)
+    v = valid
+    if dedup:
+        v = local_dedup_mask(out, valid, tuple(range(len(cols))))
+    out = jnp.where(v[:, None], out, 0)
+    return out, v

@@ -1,0 +1,335 @@
+"""Distributed relational operators on DTables.
+
+Each operator = (repartition via hash shuffle) + (per-shard local op), all
+inside one per-shard SPMD function so a BSP round is one program dispatch.
+Operators return (result DTable, stats) where stats carry per-shard
+``sent`` (tuples communicated — the paper's cost unit) and ``dropped``
+(capacity overflows; nonzero => the driver must retry with bigger caps).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import dests_for, hash_columns
+from .localops import (
+    compact,
+    local_dedup_mask,
+    local_intersect_mask,
+    local_join,
+    local_project,
+    local_semijoin_mask,
+)
+from .shuffle import exchange, exchange_multi
+from .spmd import SPMD
+from .table import DTable, schema_join
+
+
+class Overflow(Exception):
+    """A reducer exceeded its capacity — the paper's 'abort'."""
+
+
+def _stats(sent, dropped):
+    return {"sent": sent, "dropped": dropped}
+
+
+def agg_stats(stats) -> Dict[str, int]:
+    return {k: int(np.asarray(v).sum()) for k, v in stats.items()}
+
+
+# ---------------------------------------------------------------- repartition
+def _repart_shard(data, valid, seed, *, cols, p, c_out, cap_recv):
+    dest = dests_for(data, valid, cols, p, seed)
+    rd, rv, sent, ds, dr = exchange(data, valid, dest, p=p, c_out=c_out, cap_recv=cap_recv)
+    return rd, rv, _stats(sent, ds + dr)
+
+
+def repartition(
+    spmd: SPMD, t: DTable, attrs: Sequence[str], *, seed: int, c_out: int, cap_recv: int
+) -> Tuple[DTable, Dict]:
+    rd, rv, stats = spmd.run(
+        _repart_shard,
+        t.data,
+        t.valid,
+        spmd.seeds(seed),
+        cols=t.cols(attrs),
+        p=spmd.p,
+        c_out=c_out,
+        cap_recv=cap_recv,
+    )
+    return DTable(rd, rv, t.schema), agg_stats(stats)
+
+
+# ----------------------------------------------------------------------- join
+def _join_shard(
+    a_data, a_valid, b_data, b_valid, seed, *,
+    a_key, b_key, b_keep, p, c_out_a, c_out_b, cap_a, cap_b, out_cap,
+):
+    da = dests_for(a_data, a_valid, a_key, p, seed)
+    a2, a2v, sent_a, dsa, dra = exchange(a_data, a_valid, da, p=p, c_out=c_out_a, cap_recv=cap_a)
+    db = dests_for(b_data, b_valid, b_key, p, seed)
+    b2, b2v, sent_b, dsb, drb = exchange(b_data, b_valid, db, p=p, c_out=c_out_b, cap_recv=cap_b)
+    a_key2 = tuple(range_idx for range_idx in a_key)  # same cols post-shuffle
+    out, out_v, over = local_join(a2, a2v, b2, b2v, a_key2, b_key, b_keep, out_cap)
+    return out, out_v, _stats(sent_a + sent_b, dsa + dra + dsb + drb + over)
+
+
+def dist_join(
+    spmd: SPMD,
+    a: DTable,
+    b: DTable,
+    *,
+    seed: int,
+    out_cap: int,
+    c_out: Optional[Tuple[int, int]] = None,
+    cap_recv: Optional[Tuple[int, int]] = None,
+) -> Tuple[DTable, Dict]:
+    """Hash join of a and b on their shared attributes (co-partitioning)."""
+    shared = [x for x in a.schema if x in b.schema]
+    a_key = a.cols(shared)
+    b_key = b.cols(shared)
+    b_keep = tuple(i for i, x in enumerate(b.schema) if x not in set(a.schema))
+    out_schema = schema_join(a.schema, b.schema)
+    p = spmd.p
+    c_out = c_out or (a.cap, b.cap)           # safe: one shard sends all
+    cap_recv = cap_recv or (p * a.cap, p * b.cap)  # safe: one shard gets all
+    od, ov, stats = spmd.run(
+        _join_shard,
+        a.data, a.valid, b.data, b.valid, spmd.seeds(seed),
+        a_key=a_key, b_key=b_key, b_keep=b_keep,
+        p=p,
+        c_out_a=c_out[0], c_out_b=c_out[1],
+        cap_a=cap_recv[0], cap_b=cap_recv[1],
+        out_cap=out_cap,
+    )
+    return DTable(od, ov, out_schema), agg_stats(stats)
+
+
+# ------------------------------------------------------------------- semijoin
+def _semijoin_shard(
+    s_data, s_valid, r_data, r_valid, seed, *,
+    s_key, r_key, p, c_out_s, c_out_r, cap_s, cap_r,
+):
+    # ship only the deduplicated key projection of R (S |>< R = S |><
+    # pi_{S&R}(R)), as in Sec. 4.1
+    rk, rkv = local_project(r_data, r_valid, r_key, dedup=True)
+    kcols = tuple(range(len(r_key)))
+    dr_dest = dests_for(rk, rkv, kcols, p, seed)
+    rk2, rkv2, sent_r, dsr, drr = exchange(rk, rkv, dr_dest, p=p, c_out=c_out_r, cap_recv=cap_r)
+    rkv2 = local_dedup_mask(rk2, rkv2, kcols)
+    ds_dest = dests_for(s_data, s_valid, s_key, p, seed)
+    s2, s2v, sent_s, dss, drs = exchange(s_data, s_valid, ds_dest, p=p, c_out=c_out_s, cap_recv=cap_s)
+    mask = local_semijoin_mask(s2, s2v, s_key, rk2, rkv2, kcols)
+    s2 = jnp.where(mask[:, None], s2, 0)
+    return s2, mask, _stats(sent_r + sent_s, dsr + drr + dss + drs)
+
+
+def dist_semijoin(
+    spmd: SPMD,
+    s: DTable,
+    r: DTable,
+    *,
+    seed: int,
+    c_out: Optional[Tuple[int, int]] = None,
+    cap_recv: Optional[Tuple[int, int]] = None,
+) -> Tuple[DTable, Dict]:
+    """S |>< R on shared attributes; result has S's schema (repartitioned)."""
+    shared = [x for x in s.schema if x in r.schema]
+    assert shared, f"semijoin with no shared attrs: {s.schema} vs {r.schema}"
+    p = spmd.p
+    c_out = c_out or (s.cap, r.cap)
+    cap_recv = cap_recv or (p * s.cap, p * r.cap)
+    sd, sv, stats = spmd.run(
+        _semijoin_shard,
+        s.data, s.valid, r.data, r.valid, spmd.seeds(seed),
+        s_key=s.cols(shared), r_key=r.cols(shared),
+        p=p,
+        c_out_s=c_out[0], c_out_r=c_out[1],
+        cap_s=cap_recv[0], cap_r=cap_recv[1],
+    )
+    return DTable(sd, sv, s.schema), agg_stats(stats)
+
+
+# ------------------------------------------------------------------ intersect
+def _intersect_shard(
+    a_data, a_valid, b_data, b_valid, seed, *,
+    a_cols, b_cols, p, c_out_a, c_out_b, cap_a, cap_b,
+):
+    da = dests_for(a_data, a_valid, a_cols, p, seed)
+    a2, a2v, sent_a, dsa, dra = exchange(a_data, a_valid, da, p=p, c_out=c_out_a, cap_recv=cap_a)
+    db = dests_for(b_data, b_valid, b_cols, p, seed)
+    b2, b2v, sent_b, dsb, drb = exchange(b_data, b_valid, db, p=p, c_out=c_out_b, cap_recv=cap_b)
+    mask = local_intersect_mask(a2, a2v, b2, b2v, a_cols, b_cols)
+    a2 = jnp.where(mask[:, None], a2, 0)
+    return a2, mask, _stats(sent_a + sent_b, dsa + dra + dsb + drb)
+
+
+def dist_intersect(
+    spmd: SPMD, a: DTable, b: DTable, *, seed: int,
+    c_out: Optional[Tuple[int, int]] = None,
+    cap_recv: Optional[Tuple[int, int]] = None,
+) -> Tuple[DTable, Dict]:
+    """A intersect B (same attr sets, any column order); result: A's rows."""
+    assert set(a.schema) == set(b.schema), (a.schema, b.schema)
+    a_cols = tuple(range(len(a.schema)))
+    b_cols = b.cols(a.schema)
+    p = spmd.p
+    c_out = c_out or (a.cap, b.cap)
+    cap_recv = cap_recv or (p * a.cap, p * b.cap)
+    ad, av, stats = spmd.run(
+        _intersect_shard,
+        a.data, a.valid, b.data, b.valid, spmd.seeds(seed),
+        a_cols=a_cols, b_cols=b_cols, p=p,
+        c_out_a=c_out[0], c_out_b=c_out[1],
+        cap_a=cap_recv[0], cap_b=cap_recv[1],
+    )
+    return DTable(ad, av, a.schema), agg_stats(stats)
+
+
+# ---------------------------------------------------------------------- dedup
+def _dedup_shard(data, valid, seed, *, cols, p, c_out, cap_recv):
+    dest = dests_for(data, valid, cols, p, seed)
+    d2, v2, sent, ds, dr = exchange(data, valid, dest, p=p, c_out=c_out, cap_recv=cap_recv)
+    mask = local_dedup_mask(d2, v2, cols)
+    d2 = jnp.where(mask[:, None], d2, 0)
+    return d2, mask, _stats(sent, ds + dr)
+
+
+def dist_dedup(
+    spmd: SPMD, t: DTable, *, seed: int,
+    c_out: Optional[int] = None, cap_recv: Optional[int] = None,
+) -> Tuple[DTable, Dict]:
+    p = spmd.p
+    c_out = c_out or t.cap
+    cap_recv = cap_recv or p * t.cap
+    cols = tuple(range(len(t.schema)))
+    d, v, stats = spmd.run(
+        _dedup_shard, t.data, t.valid, spmd.seeds(seed),
+        cols=cols, p=p, c_out=c_out, cap_recv=cap_recv,
+    )
+    return DTable(d, v, t.schema), agg_stats(stats)
+
+
+# ------------------------------------------------- hypercube (Lemma 8/Shares)
+def _hypercube_send_shard(data, valid, seed, *, dest_plan, p, c_out, cap_recv):
+    """dest_plan: (fixed, wild_offsets)
+    - fixed: tuple of (col, share, stride, attr_id) — coordinate =
+      hash(col value; seeded by the GLOBAL attr id) % share, so every
+      relation hashes a shared attribute identically;
+    - wild_offsets: precomputed flat offsets over the wildcard dims."""
+    fixed, wild_offsets = dest_plan
+    n = data.shape[0]
+    base = jnp.zeros((n,), jnp.int32)
+    for col, share, stride, attr_id in fixed:
+        h = hash_columns(data, (col,), seed + 7717 * (1 + attr_id))
+        base = base + (h % jnp.uint32(share)).astype(jnp.int32) * stride
+    dests = base[:, None] + jnp.asarray(wild_offsets, jnp.int32)[None, :]
+    rd, rv, sent, ds, dr = exchange_multi(
+        data, valid, dests, p=p, c_out=c_out, cap_recv=cap_recv
+    )
+    return rd, rv, _stats(sent, ds + dr)
+
+
+def hypercube_partition(
+    spmd: SPMD,
+    t: DTable,
+    shares: Dict[str, int],
+    attr_order: Sequence[str],
+    *,
+    seed: int,
+    c_out: int,
+    cap_recv: int,
+) -> Tuple[DTable, Dict]:
+    """Send each row of ``t`` to every hypercube cell consistent with its
+    attribute hashes (Shares [2] / Lemma 8).  Cells are mixed-radix points
+    over ``attr_order`` with radix ``shares[attr]``; cell ids < p."""
+    strides: Dict[str, int] = {}
+    acc = 1
+    for a in attr_order:
+        strides[a] = acc
+        acc *= shares[a]
+    assert acc <= spmd.p, f"cells {acc} > p {spmd.p}"
+    attr_ids = {a: i for i, a in enumerate(attr_order)}
+    fixed = tuple(
+        (t.col(a), shares[a], strides[a], attr_ids[a])
+        for a in attr_order
+        if a in t.schema
+    )
+    wild_attrs = [a for a in attr_order if a not in t.schema]
+    combos = itertools.product(*[range(shares[a]) for a in wild_attrs])
+    wild_offsets = tuple(
+        sum(c * strides[a] for c, a in zip(combo, wild_attrs)) for combo in combos
+    ) or (0,)
+    rd, rv, stats = spmd.run(
+        _hypercube_send_shard,
+        t.data, t.valid, spmd.seeds(seed),
+        dest_plan=(fixed, wild_offsets),
+        p=spmd.p, c_out=c_out, cap_recv=cap_recv,
+    )
+    return DTable(rd, rv, t.schema), agg_stats(stats)
+
+
+# ------------------------------------------------------- local multiway join
+def _multijoin_shard(*arrays, plan, out_caps):
+    """arrays: d0,v0,d1,v1,...; plan: tuple of (a_key, b_key, b_keep) for the
+    left-deep fold; out_caps: per-step output capacities."""
+    k = len(arrays) // 2
+    datas = [arrays[2 * i] for i in range(k)]
+    valids = [arrays[2 * i + 1] for i in range(k)]
+    acc_d, acc_v = datas[0], valids[0]
+    over_total = jnp.int32(0)
+    for step in range(k - 1):
+        a_key, b_key, b_keep = plan[step]
+        acc_d, acc_v, over = local_join(
+            acc_d, acc_v, datas[step + 1], valids[step + 1],
+            a_key, b_key, b_keep, out_caps[step],
+        )
+        over_total = over_total + over
+    return acc_d, acc_v, _stats(jnp.int32(0), over_total)
+
+
+def local_multiway_join(
+    spmd: SPMD, tables: List[DTable], out_caps: Sequence[int]
+) -> Tuple[DTable, Dict]:
+    """Per-shard left-deep multiway join (no communication — reducers join
+    their co-located buckets, the reduce stage of Lemma 8)."""
+    assert len(tables) >= 1
+    if len(tables) == 1:
+        return tables[0], {"sent": 0, "dropped": 0}
+    plan = []
+    schema = tables[0].schema
+    for nxt in tables[1:]:
+        shared = [x for x in schema if x in nxt.schema]
+        a_key = tuple(schema.index(x) for x in shared)
+        b_key = tuple(nxt.schema.index(x) for x in shared)
+        b_keep = tuple(i for i, x in enumerate(nxt.schema) if x not in set(schema))
+        plan.append((a_key, b_key, b_keep))
+        schema = schema_join(schema, nxt.schema)
+    args = []
+    for t in tables:
+        args.extend([t.data, t.valid])
+    od, ov, stats = spmd.run(
+        _multijoin_shard, *args, plan=tuple(plan), out_caps=tuple(out_caps)
+    )
+    return DTable(od, ov, schema), agg_stats(stats)
+
+
+# -------------------------------------------------------------------- project
+def _project_shard(data, valid, *, cols, dedup):
+    d, v = local_project(data, valid, cols, dedup)
+    return d, v
+
+
+def dist_project(spmd: SPMD, t: DTable, attrs: Sequence[str], *, dedup: bool = False) -> DTable:
+    """Shard-local projection (no communication)."""
+    d, v = spmd.run(_project_shard, t.data, t.valid, cols=t.cols(attrs), dedup=dedup)
+    return DTable(d, v, tuple(attrs))
+
+
+def check_no_drop(stats: Dict[str, int]) -> None:
+    if stats.get("dropped", 0):
+        raise Overflow(f"{stats['dropped']} tuples dropped (capacity abort)")

@@ -1,0 +1,94 @@
+"""The MapReduce shuffle as a per-shard function over the named reducer axis.
+
+``exchange``: hash-partitioned repartitioning (map stage: bucket rows by
+destination; network: one ``lax.all_to_all``; reduce stage: compact).
+``exchange_multi``: each row goes to ``g`` destinations (the replicated
+sends of Lemma 8 grid joins / Shares hypercube).
+
+Overflow anywhere is reported, never silently dropped — the driver retries
+the round with doubled capacities (the paper's abort-and-retry semantics).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .localops import compact
+from .spmd import AXIS
+
+
+def _bucketize(
+    data: jax.Array, valid_dest: jax.Array, p: int, c_out: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Scatter rows into per-destination buckets.
+
+    ``valid_dest``: (n,) int32 in [0,p) for live rows, == p for dead rows.
+    Returns (buf (p,c_out,ar), buf_valid (p,c_out), sent, dropped)."""
+    n, ar = data.shape
+    order = jnp.argsort(valid_dest, stable=True)
+    sdest = valid_dest[order]
+    srows = data[order]
+    starts = jnp.searchsorted(sdest, jnp.arange(p))
+    pos = jnp.arange(n) - starts[jnp.clip(sdest, 0, p - 1)]
+    live = sdest < p
+    ok = live & (pos < c_out)
+    d_idx = jnp.where(ok, sdest, p)  # p == out-of-bounds -> dropped
+    pos_c = jnp.clip(pos, 0, c_out - 1)
+    buf = jnp.zeros((p, c_out, ar), data.dtype).at[d_idx, pos_c].set(
+        srows, mode="drop"
+    )
+    buf_valid = jnp.zeros((p, c_out), bool).at[d_idx, pos_c].set(ok, mode="drop")
+    sent = ok.sum()
+    dropped = (live & ~ok).sum()
+    return buf, buf_valid, sent, dropped
+
+
+def exchange(
+    data: jax.Array,
+    valid: jax.Array,
+    dest: jax.Array,
+    *,
+    p: int,
+    c_out: int,
+    cap_recv: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Repartition rows to ``dest`` shards.
+
+    Returns (rdata (cap_recv, ar), rvalid, sent, dropped_send, dropped_recv).
+    """
+    buf, buf_valid, sent, dropped_send = _bucketize(
+        data, jnp.where(valid, dest, p), p, c_out
+    )
+    rbuf = jax.lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    rvalid = jax.lax.all_to_all(buf_valid, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    flat = rbuf.reshape(p * c_out, -1)
+    flatv = rvalid.reshape(p * c_out)
+    rdata, rv, dropped_recv = compact(flat, flatv, cap_recv)
+    return rdata, rv, sent, dropped_send, dropped_recv
+
+
+def exchange_multi(
+    data: jax.Array,
+    valid: jax.Array,
+    dests: jax.Array,  # (n, g) int32, each in [0,p) (or p to skip)
+    *,
+    p: int,
+    c_out: int,
+    cap_recv: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Replicated send: each row goes to up to g destinations."""
+    n, ar = data.shape
+    g = dests.shape[1]
+    tiled_rows = jnp.repeat(data, g, axis=0)  # (n*g, ar)
+    flat_dest = jnp.where(
+        jnp.repeat(valid, g, axis=0), dests.reshape(-1), p
+    )
+    buf, buf_valid, sent, dropped_send = _bucketize(tiled_rows, flat_dest, p, c_out)
+    rbuf = jax.lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    rvalid = jax.lax.all_to_all(buf_valid, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    flat = rbuf.reshape(p * c_out, -1)
+    flatv = rvalid.reshape(p * c_out)
+    rdata, rv, dropped_recv = compact(flat, flatv, cap_recv)
+    return rdata, rv, sent, dropped_send, dropped_recv

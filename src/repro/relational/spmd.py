@@ -1,0 +1,76 @@
+"""SPMD execution of per-shard functions: one code path, two runtimes.
+
+Per-shard functions take/return arrays WITHOUT the reducer axis and may use
+``jax.lax`` collectives over the named axis ``AXIS``.  ``SPMD`` runs them:
+
+- simulation (default, 1 device): ``jax.vmap(fn, axis_name=AXIS)`` — the
+  reducer axis is the leading array axis.  This is the paper's PRAM-style
+  simulation and what CI uses.
+- production: ``jax.shard_map`` over a real mesh axis — identical per-shard
+  code; the leading axis is device-sharded.  The multi-pod dry-run lowers
+  this path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AXIS = "r"
+
+
+class SPMD:
+    def __init__(self, p: int, mesh: Optional[Mesh] = None):
+        """``p`` logical reducers; if ``mesh`` given it must have axis AXIS
+        of size p (production path), else simulation on one device."""
+        self.p = p
+        self.mesh = mesh
+        if mesh is not None:
+            assert mesh.shape[AXIS] == p, (mesh.shape, p)
+        self._cache: Dict[Any, Callable] = {}
+
+    # -- execution --------------------------------------------------------
+    def _build(self, fn: Callable, statics: Tuple) -> Callable:
+        bound = functools.partial(fn, **dict(statics)) if statics else fn
+        if self.mesh is None:
+            mapped = jax.vmap(bound, axis_name=AXIS)
+        else:
+            def strip(blk):
+                return jax.tree_util.tree_map(lambda x: x[0], blk)
+
+            def readd(blk):
+                return jax.tree_util.tree_map(lambda x: x[None], blk)
+
+            def per_block(*args):
+                return readd(bound(*[strip(a) for a in args]))
+
+            mapped = jax.shard_map(
+                per_block,
+                mesh=self.mesh,
+                in_specs=P(AXIS),
+                out_specs=P(AXIS),
+                check_vma=False,
+            )
+        return jax.jit(mapped)
+
+    def run(self, fn: Callable, *args, **statics):
+        """Run per-shard ``fn`` over the reducer axis.  ``statics`` must be
+        hashable and are part of the compilation cache key."""
+        key = (fn, tuple(sorted(statics.items())))
+        if key not in self._cache:
+            self._cache[key] = self._build(fn, tuple(sorted(statics.items())))
+        return self._cache[key](*args)
+
+    def seeds(self, seed: int) -> jnp.ndarray:
+        """Per-shard traced seed array: hash seeds ride as DATA (not jit
+        statics) so reseeded retries reuse compiled programs."""
+        return jnp.full((self.p,), seed & 0xFFFFFFFF, jnp.uint32)
+
+    def device_put(self, tree):
+        if self.mesh is None:
+            return tree
+        sh = NamedSharding(self.mesh, P(AXIS))
+        return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)

@@ -1,0 +1,141 @@
+"""Fixed-capacity relation tables (local and distributed).
+
+``Table``  — one shard: data (cap, arity) int32 + valid (cap,) bool.
+``DTable`` — p shards: data (p, cap, arity) + valid (p, cap); axis 0 is the
+reducer axis (vmapped in simulation, mesh-sharded in production).
+
+Schemas are static python tuples of attribute names; they ride along as
+aux data (pytree static fields) so jitted code can do column arithmetic in
+Python.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Table:
+    data: jax.Array  # (cap, arity) int32
+    valid: jax.Array  # (cap,) bool
+    schema: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def cap(self) -> int:
+        return self.data.shape[-2]
+
+    @property
+    def arity(self) -> int:
+        return self.data.shape[-1]
+
+    def count(self) -> jax.Array:
+        return self.valid.sum()
+
+    def col(self, attr: str) -> int:
+        return self.schema.index(attr)
+
+    def cols(self, attrs: Sequence[str]) -> Tuple[int, ...]:
+        return tuple(self.schema.index(a) for a in attrs)
+
+    @staticmethod
+    def from_numpy(rows: np.ndarray, schema: Sequence[str], cap: Optional[int] = None) -> "Table":
+        rows = np.asarray(rows, dtype=np.int32).reshape(-1, len(schema))
+        n = rows.shape[0]
+        cap = cap or max(1, n)
+        assert n <= cap, f"{n} rows > cap {cap}"
+        data = np.zeros((cap, len(schema)), np.int32)
+        data[:n] = rows
+        valid = np.zeros((cap,), bool)
+        valid[:n] = True
+        return Table(jnp.asarray(data), jnp.asarray(valid), tuple(schema))
+
+    def to_numpy(self) -> np.ndarray:
+        """Valid rows, lexicographically sorted (canonical for comparisons)."""
+        d = np.asarray(self.data)
+        v = np.asarray(self.valid)
+        rows = d[v]
+        if rows.size == 0:
+            return rows.reshape(0, self.arity)
+        order = np.lexsort(rows.T[::-1])
+        return rows[order]
+
+    def to_set(self) -> set:
+        return {tuple(int(x) for x in r) for r in self.to_numpy()}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DTable:
+    data: jax.Array  # (p, cap, arity) int32
+    valid: jax.Array  # (p, cap) bool
+    schema: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def p(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def cap(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def arity(self) -> int:
+        return self.data.shape[2]
+
+    def col(self, attr: str) -> int:
+        return self.schema.index(attr)
+
+    def cols(self, attrs: Sequence[str]) -> Tuple[int, ...]:
+        return tuple(self.schema.index(a) for a in attrs)
+
+    def count(self) -> jax.Array:
+        return self.valid.sum()
+
+    def shard(self, i: int) -> Table:
+        return Table(self.data[i], self.valid[i], self.schema)
+
+    @staticmethod
+    def scatter_numpy(
+        rows: np.ndarray, schema: Sequence[str], p: int, cap: Optional[int] = None,
+        seed: int = 0,
+    ) -> "DTable":
+        """Round-robin scatter of rows over p shards (initial 'file system'
+        placement; any placement is fine — ops re-shuffle as needed)."""
+        rows = np.asarray(rows, dtype=np.int32).reshape(-1, len(schema))
+        n = rows.shape[0]
+        per = int(np.ceil(n / p)) if n else 1
+        cap = cap or max(1, per)
+        data = np.zeros((p, cap, len(schema)), np.int32)
+        valid = np.zeros((p, cap), bool)
+        for i in range(n):
+            s, off = i % p, i // p
+            assert off < cap, f"scatter overflow: {n} rows, p={p}, cap={cap}"
+            data[s, off] = rows[i]
+            valid[s, off] = True
+        return DTable(jnp.asarray(data), jnp.asarray(valid), tuple(schema))
+
+    def to_numpy(self) -> np.ndarray:
+        d = np.asarray(self.data).reshape(-1, self.arity)
+        v = np.asarray(self.valid).reshape(-1)
+        rows = d[v]
+        if rows.size == 0:
+            return rows.reshape(0, self.arity)
+        order = np.lexsort(rows.T[::-1])
+        return rows[order]
+
+    def to_set(self) -> set:
+        return {tuple(int(x) for x in r) for r in self.to_numpy()}
+
+
+def schema_join(a: Sequence[str], b: Sequence[str]) -> Tuple[str, ...]:
+    """Output schema of a natural join: a's attrs then b's new attrs."""
+    return tuple(a) + tuple(x for x in b if x not in a)
+
+
+def schema_project(schema: Sequence[str], keep: Sequence[str]) -> Tuple[str, ...]:
+    return tuple(a for a in schema if a in set(keep))

@@ -1,0 +1,1 @@
+from .decode import generate, generate_whisper, sample

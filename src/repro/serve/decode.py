@@ -1,0 +1,64 @@
+"""Batched serving loop: prefill + greedy/temperature decode over the
+model-agnostic cache interface (KV caches for attention archs, recurrent
+state for SSM/xLSTM, cross-KV for whisper)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, rng, temperature: float) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    return jax.random.categorical(rng, logits / temperature).astype(jnp.int32)
+
+
+def generate(
+    model,
+    params,
+    prompt: jax.Array,  # (B, S) int32
+    *,
+    steps: int,
+    s_cache: Optional[int] = None,
+    temperature: float = 0.0,
+    rng=None,
+    pos=None,
+) -> jax.Array:
+    """Returns (B, steps) generated tokens (greedy if temperature=0)."""
+    b, s = prompt.shape
+    s_cache = s_cache or (s + steps + 1)
+    batch = {"tokens": prompt}
+    if pos is not None:
+        batch["pos"] = pos
+    logits, caches = model.prefill(params, batch, s_cache=s_cache)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    step_fn = jax.jit(model.decode_step)
+    toks = []
+    tok = sample(logits, rng, temperature)
+    toks.append(tok)
+    for i in range(steps - 1):
+        rng, k = jax.random.split(rng)
+        logits, caches = step_fn(params, caches, tok)
+        tok = sample(logits, k, temperature)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)
+
+
+def generate_whisper(
+    model, params, frames: jax.Array, *, steps: int, dec_cache: int = 64,
+    temperature: float = 0.0, rng=None,
+) -> jax.Array:
+    logits, caches = model.prefill(params, {"frames": frames}, s_cache=dec_cache)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    step_fn = jax.jit(model.decode_step)
+    tok = sample(logits, rng, temperature)
+    toks = [tok]
+    for _ in range(steps - 1):
+        rng, k = jax.random.split(rng)
+        logits, caches = step_fn(params, caches, tok)
+        tok = sample(logits, k, temperature)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)

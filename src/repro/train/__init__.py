@@ -1,0 +1,2 @@
+from .optim import OptConfig, opt_init, opt_update
+from .step import TrainConfig, init_train_state, init_train_state_shapes, make_train_step

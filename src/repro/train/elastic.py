@@ -1,0 +1,61 @@
+"""Elastic scaling + straggler policy for multi-controller runs.
+
+What is mechanized here (single-controller semantics, multi-pod design):
+  - ``fit_batch_to_world``: re-plan global batch / accumulation when the
+    data-parallel world size changes between runs (checkpoints are logical
+    arrays, so restore works at any world size whose mesh divides the
+    sharded dims — see checkpoint.restore(shardings=...)).
+  - ``HeartbeatMonitor``: wall-clock watchdog that flags straggling steps
+    (> k x median) — the hook a launcher uses to trigger speculative
+    re-execution or slice eviction.
+The BSP-engine-side story (round retry with reseeded hashing on reducer
+overflow) lives in core/gym.py; both are documented in DESIGN.md Sec. 6."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    global_batch: int
+    accum: int
+    per_device_batch: int
+
+
+def fit_batch_to_world(
+    global_batch: int, dp_world: int, per_device_max: int
+) -> BatchPlan:
+    """Keep the *global* batch (optimization semantics) fixed while the
+    world size changes: raise accumulation when fewer chips, lower when
+    more.  Requires dp_world | global_batch."""
+    assert global_batch % dp_world == 0, (global_batch, dp_world)
+    per_step = global_batch // dp_world
+    accum = max(1, -(-per_step // per_device_max))
+    while per_step % accum:
+        accum += 1
+    return BatchPlan(global_batch, accum, per_step // accum)
+
+
+class HeartbeatMonitor:
+    """Flags steps slower than ``factor`` x running median."""
+
+    def __init__(self, factor: float = 3.0, window: int = 32):
+        self.factor = factor
+        self.window = window
+        self.durations: List[float] = []
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self) -> Tuple[float, bool]:
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        hist = sorted(self.durations[-self.window:])
+        median = hist[len(hist) // 2] if hist else dt
+        straggler = len(hist) >= 8 and dt > self.factor * median
+        self.durations.append(dt)
+        return dt, straggler

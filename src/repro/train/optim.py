@@ -1,0 +1,149 @@
+"""Optimizers as pure pytree functions: AdamW (fp32 or bf16 moments) and
+Adafactor (factored second moment — the memory-viable choice for the
+trillion-param kimi-k2 cell: O(d+f) state per (d,f) matrix)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments_dtype: str = "float32"  # bf16 halves AdamW state memory
+    warmup: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay (f32 scalar)."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, s / max(1, cfg.warmup))
+    t = jnp.clip((s - cfg.warmup) / max(1, cfg.decay_steps - cfg.warmup), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype), tree), g
+
+
+# ------------------------------------------------------------------ AdamW
+def adamw_init(cfg: OptConfig, params) -> Dict:
+    dt = jnp.dtype(cfg.moments_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(z, params),
+        "v": jax.tree_util.tree_map(z, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1**t
+    bc2 = 1 - cfg.b2**t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * upd
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+    p2 = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m2 = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v2 = jax.tree_util.tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return p2, {"m": m2, "v": v2, "step": step}
+
+
+# -------------------------------------------------------------- Adafactor
+def adafactor_init(cfg: OptConfig, params) -> Dict:
+    def rows_cols(p):
+        if p.ndim >= 2:
+            return {
+                "r": jnp.zeros(p.shape[:-1], jnp.float32),
+                "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "f": jax.tree_util.tree_map(rows_cols, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, f, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + 1e-30
+        if p.ndim >= 2:
+            r = beta * f["r"] + (1 - beta) * g2.mean(-1)
+            c = beta * f["c"] + (1 - beta) * g2.mean(-2)
+            denom = r[..., None] * c[..., None, :] / (
+                r.mean(-1)[..., None, None] + 1e-30
+            )
+            u = g32 / (jnp.sqrt(denom) + 1e-30)
+            f2 = {"r": r, "c": c}
+        else:
+            v = beta * f["v"] + (1 - beta) * g2
+            u = g32 / (jnp.sqrt(v) + 1e-30)
+            f2 = {"v": v}
+        # update clipping (Adafactor's d=1.0 RMS rule)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), f2
+
+    # f's tree = params' tree with each leaf replaced by a {r,c}/{v} dict —
+    # flatten with those dicts as leaves to re-align the three trees
+    gl, treedef = jax.tree_util.tree_flatten(grads)
+    pl = jax.tree_util.tree_leaves(params)
+    fl = jax.tree_util.tree_leaves(
+        state["f"], is_leaf=lambda x: isinstance(x, dict) and ("r" in x or "v" in x)
+    )
+    out = [upd(g, f, p) for g, f, p in zip(gl, fl, pl)]
+    p2 = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    f2 = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return p2, {"f": f2, "step": step}
+
+
+# ----------------------------------------------------------------- facade
+def opt_init(cfg: OptConfig, params):
+    return adamw_init(cfg, params) if cfg.kind == "adamw" else adafactor_init(cfg, params)
+
+
+def opt_update(cfg: OptConfig, grads, state, params):
+    if cfg.kind == "adamw":
+        return adamw_update(cfg, grads, state, params)
+    return adafactor_update(cfg, grads, state, params)

@@ -1,0 +1,98 @@
+"""The jitted train step: loss + grad (remat'd backbone), optional
+microbatch gradient accumulation (lax.scan), global-norm clipping,
+optional int8 gradient codec, optimizer update, metrics."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import compression
+from .optim import OptConfig, clip_by_global_norm, opt_init, opt_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    accum: int = 1  # microbatches per step
+    remat: bool = True
+    compress_grads: bool = False  # int8 codec at the accumulation boundary
+
+
+def make_train_step(model, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``batch`` leading dim = global batch; accumulation splits it
+    into ``accum`` microbatches via lax.scan (keeps peak activation memory
+    at 1/accum)."""
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, remat=tcfg.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.accum == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0] if x.ndim else 1
+                per = b // tcfg.accum
+                return x.reshape((tcfg.accum, per) + x.shape[1:])
+
+            # (3,B,S) mrope pos has batch on axis 1 — handled by moving it
+            def split_batch(bt):
+                out = {}
+                for k, v in bt.items():
+                    if k == "pos" and v.ndim == 3:
+                        per = v.shape[1] // tcfg.accum
+                        out[k] = jnp.moveaxis(
+                            v.reshape(3, tcfg.accum, per, v.shape[2]), 1, 0
+                        )
+                    else:
+                        out[k] = split(v)
+                return out
+
+            mbs = split_batch(batch)
+
+            def acc_step(carry, mb):
+                gsum, lsum = carry
+                l, g = grad_fn(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), gsum, g
+                )
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (zeros, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / tcfg.accum, gsum)
+            loss = lsum / tcfg.accum
+
+        if tcfg.compress_grads:
+            grads = compression.codec_roundtrip(grads)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.opt.grad_clip)
+        params, opt_state = opt_update(tcfg.opt, grads, opt_state, params)
+        metrics = {
+            "loss": loss.astype(jnp.float32),
+            "grad_norm": gnorm,
+            "step": opt_state["step"],
+        }
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model, tcfg: TrainConfig, rng):
+    params = model.init(rng)
+    return params, opt_init(tcfg.opt, params)
+
+
+def init_train_state_shapes(model, tcfg: TrainConfig):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    )

@@ -1,0 +1,76 @@
+"""C-GTA (Theorem 25) spectrum + analytic cost model sanity."""
+from __future__ import annotations
+
+import math
+import random
+
+from repro.core.cgta import cgta, cgta_pass
+from repro.core.costs import (
+    B,
+    gym_comm,
+    gym_loggta_comm,
+    acqmr_comm,
+    one_round_chain_lower_bound,
+    predicted_table,
+)
+from repro.core.decompose import ghd_for
+from repro.core.loggta import log_gta
+from repro.core.queries import (
+    chain_ghd,
+    chain_query,
+    random_acyclic_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+
+
+def test_cgta_pass_shrinks_and_bounds_width():
+    q = chain_query(24)
+    g = chain_ghd(24).make_complete(q)
+    g1 = cgta_pass(g, q)
+    assert g1.size() < g.size()
+    assert g1.width <= 2 * g.width
+    g1.validate(q)
+
+
+def test_cgta_theorem25_spectrum():
+    """width <= 2^i * max(w, 3iw); repeated passes keep shrinking."""
+    q = triangle_chain_query(6)
+    g = triangle_chain_ghd(6).make_complete(q)
+    w, iw = g.width, g.intersection_width(q)
+    for i in (1, 2):
+        out = cgta(g, q, passes=i)
+        out.validate(q)
+        assert out.width <= (2**i) * max(w, 3 * iw), (i, out.width)
+
+
+def test_cgta_random_acyclic():
+    rng = random.Random(3)
+    for _ in range(5):
+        q = random_acyclic_query(rng, 10)
+        g = ghd_for(q).make_complete(q)
+        out = cgta(g, q, passes=1)
+        out.validate(q)
+        assert out.width <= 2 * max(g.width, 3 * g.intersection_width(q))
+
+
+def test_cost_model_orderings():
+    IN, OUT, M, n = 1e6, 1e6, 1e3, 16
+    # Table 3 worst-case ordering: GYM(w=2) < GYM-LogGTA(3iw=3) < ACQ-MR(3w=6)
+    c_gym = gym_comm(n, IN, OUT, M, w=2)
+    c_log = gym_loggta_comm(n, IN, OUT, M, w=2, iw=1)
+    c_acq = acqmr_comm(n, IN, OUT, M, w=2)
+    assert c_gym < c_log < c_acq
+    # B is quadratic
+    assert B(2 * IN, M) == 4 * B(IN, M)
+    # Sec 1: the 1-round lower bound for C_16 dwarfs multi-round GYM on the
+    # width-1 chain GHD (n*(IN+OUT)^2/M)
+    assert one_round_chain_lower_bound(16, IN, M) > gym_comm(16, IN, OUT, M, w=1)
+
+
+def test_predicted_table_fields():
+    q = triangle_chain_query(4)
+    g = triangle_chain_ghd(4)
+    t = predicted_table(q, g, IN=1e4, OUT=1e4, M=1e2)
+    assert t["width"] == 2 and t["iw"] == 1
+    assert t["gym_rounds"] <= t["depth"] + math.log2(q.n) + 1

@@ -1,0 +1,124 @@
+"""GHD machinery: widths/depths/iw of the Table 1 families, Lemma 7
+completion, GYO/min-fill construction."""
+import random
+
+import pytest
+
+from repro.core.decompose import ghd_for, gyo_join_tree, minfill_ghd
+from repro.core.ghd import GHD
+from repro.core.queries import (
+    chain_ghd,
+    chain_ghd_grouped,
+    chain_query,
+    example4_query,
+    random_acyclic_query,
+    random_query,
+    star_ghd,
+    star_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+
+
+# ------------------------------------------------------------- Table 1 rows
+def test_star_stats():
+    for n in (2, 5, 9):
+        q, g = star_query(n), star_ghd(n)
+        g.validate(q)
+        assert g.width == 1
+        assert g.depth == 1
+        assert g.intersection_width(q) == 1
+
+
+def test_chain_stats():
+    for n in (1, 2, 8, 16):
+        q, g = chain_query(n), chain_ghd(n)
+        g.validate(q)
+        assert g.width == 1
+        assert g.depth == n - 1 if n > 1 else g.depth == 0
+        assert g.intersection_width(q) <= 1
+
+
+def test_triangle_chain_stats():
+    for t in (1, 3, 5):
+        q, g = triangle_chain_query(t), triangle_chain_ghd(t)
+        g.validate(q)
+        assert g.width == 2
+        assert g.depth == t - 1
+        # Table 1 row 3 (a single-bag GHD has no tree edges -> iw 0)
+        assert g.intersection_width(q) == (1 if t > 1 else 0)
+
+
+def test_chain_grouped_matches_appendix_c():
+    # Figure 7a: width-3, depth-5 GHD of C_16
+    q = chain_query(16)
+    g = chain_ghd_grouped(16, 3)
+    g.validate(q)
+    assert g.width == 3
+    assert g.depth == 5
+
+
+# ------------------------------------------------------------- construction
+def test_gyo_on_acyclic():
+    for q in (star_query(6), chain_query(7), example4_query()):
+        g = gyo_join_tree(q)
+        assert g is not None, f"{q.name} should be acyclic"
+        g.validate(q)
+        assert g.width == 1
+
+
+def test_gyo_rejects_cyclic():
+    q = triangle_chain_query(2)
+    assert gyo_join_tree(q) is None
+
+
+def test_minfill_on_cyclic():
+    q = triangle_chain_query(3)
+    g = minfill_ghd(q)
+    g.validate(q)
+    assert g.width >= 2
+
+
+def test_random_acyclic_gyo_roundtrip():
+    rng = random.Random(0)
+    for _ in range(25):
+        q = random_acyclic_query(rng, rng.randint(2, 10))
+        g = gyo_join_tree(q)
+        assert g is not None
+        g.validate(q)
+        assert g.width == 1
+
+
+def test_random_query_minfill_valid():
+    rng = random.Random(1)
+    for _ in range(25):
+        q = random_query(rng, rng.randint(2, 7), rng.randint(3, 8))
+        g = ghd_for(q)
+        g.validate(q)
+
+
+# --------------------------------------------------------------- Lemma 7
+def test_make_complete_properties():
+    rng = random.Random(2)
+    for _ in range(20):
+        q = random_acyclic_query(rng, rng.randint(3, 10))
+        g = gyo_join_tree(q)
+        d0, w0 = g.depth, g.width
+        iw0 = g.intersection_width(q)
+        gc = g.make_complete(q)
+        gc.validate(q)
+        assert gc.is_complete(q)
+        assert gc.width <= w0
+        assert gc.depth <= d0 + 1
+        assert gc.intersection_width(q) <= max(iw0, 1)
+        assert gc.size() <= 4 * q.n
+
+
+def test_make_complete_on_grouped_chain():
+    q = chain_query(12)
+    g = chain_ghd_grouped(12, 3)
+    gc = g.make_complete(q)
+    gc.validate(q)
+    assert gc.is_complete(q)
+    assert gc.width <= 3
+    assert gc.size() <= 4 * q.n

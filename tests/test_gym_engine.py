@@ -1,0 +1,220 @@
+"""GYM end-to-end vs the numpy brute-force oracle, both strategies, plus
+round-count bounds and the resumable-driver snapshot path."""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.acq_mr import acq_mr, gym_loggta
+from repro.core.decompose import ghd_for
+from repro.core.gym import GymConfig, GymDriver, gym
+from repro.core.hypergraph import Atom, Query
+from repro.core.planner import dym_d_schedule, dym_n_schedule, schedule_stats
+from repro.core.queries import (
+    chain_ghd,
+    chain_ghd_grouped,
+    chain_query,
+    example4_query,
+    random_acyclic_query,
+    random_query,
+    star_ghd,
+    star_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+from repro.core.shares import shares_join
+from repro.relational.oracle import canon, np_query_answer, reorder
+from repro.relational.spmd import SPMD
+
+
+def rand_data(query: Query, rng: random.Random, dom: int = 6, rows: int = 12):
+    """Random relation contents (shared small domain => real join matches)."""
+    out = {}
+    for atom in query.atoms:
+        n = rng.randint(1, rows)
+        out[atom.rel] = np.array(
+            [[rng.randint(0, dom - 1) for _ in atom.attrs] for _ in range(n)],
+            dtype=np.int32,
+        )
+    return out
+
+
+def oracle_rows(query: Query, data):
+    atoms = [(a.alias, a.attrs) for a in query.atoms]
+    d = {a.alias: data[a.rel] for a in query.atoms}
+    rows, schema = np_query_answer(atoms, d)
+    return reorder(rows, schema, query.output_attrs)
+
+
+@pytest.mark.parametrize("strategy", ["hash", "grid"])
+@pytest.mark.parametrize(
+    "qname", ["chain4", "star4", "tc2", "example4", "selfjoin"]
+)
+def test_gym_matches_oracle(strategy, qname):
+    rng = random.Random(hash((strategy, qname)) & 0xFFFF)
+    if qname == "chain4":
+        q = chain_query(4)
+    elif qname == "star4":
+        q = star_query(4)
+    elif qname == "tc2":
+        q = triangle_chain_query(2)
+    elif qname == "example4":
+        q = example4_query()
+    else:  # self-join: R(A,B) |><| R(B,C)
+        q = Query(
+            [Atom("R1", "R", ("A", "B")), Atom("R2", "R", ("B", "C"))],
+            name="SelfJoin",
+        )
+    data = rand_data(q, rng)
+    want = canon(oracle_rows(q, data))
+    got_rows, schema, ledger = gym(
+        q, data, p=4, config=GymConfig(strategy=strategy, seed=3)
+    )
+    assert tuple(schema) == q.output_attrs
+    assert canon(got_rows) == want
+    assert ledger.output_tuples == len(want)
+    assert ledger.rounds >= 1
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 8])
+def test_gym_random_acyclic(n):
+    rng = random.Random(100 + n)
+    for trial in range(3):
+        q = random_acyclic_query(rng, n)
+        data = rand_data(q, rng)
+        want = canon(oracle_rows(q, data))
+        got, schema, _ = gym(q, data, p=4, config=GymConfig(seed=trial))
+        assert canon(got) == want, f"{q.name} trial {trial}"
+
+
+@pytest.mark.parametrize("n", [3, 4, 6])
+def test_gym_random_cyclic(n):
+    rng = random.Random(300 + n)
+    for trial in range(2):
+        q = random_query(rng, n, n_attrs=4)
+        data = rand_data(q, rng, dom=4, rows=8)
+        want = canon(oracle_rows(q, data))
+        got, schema, _ = gym(q, data, p=4, config=GymConfig(seed=trial))
+        assert canon(got) == want, f"{q.name} trial {trial}"
+
+
+def test_gym_empty_result():
+    q = chain_query(3)
+    data = {
+        "R1": np.array([[0, 1]], np.int32),
+        "R2": np.array([[2, 3]], np.int32),  # no match with R1
+        "R3": np.array([[3, 4]], np.int32),
+    }
+    got, _, ledger = gym(q, data, p=4)
+    assert got.shape[0] == 0
+    assert ledger.output_tuples == 0
+
+
+def test_gym_via_loggta_and_acqmr():
+    rng = random.Random(7)
+    q = triangle_chain_query(3)
+    data = rand_data(q, rng, dom=4, rows=10)
+    want = canon(oracle_rows(q, data))
+    got1, _, led1 = gym_loggta(q, data, ghd=triangle_chain_ghd(3), p=4)
+    got2, _, led2 = acq_mr(q, data, ghd=triangle_chain_ghd(3), p=4)
+    assert canon(got1) == want
+    assert canon(got2) == want
+
+
+def test_shares_matches_oracle():
+    rng = random.Random(11)
+    for q in [chain_query(3), star_query(3), triangle_chain_query(1)]:
+        data = rand_data(q, rng, dom=5, rows=10)
+        want = canon(oracle_rows(q, data))
+        got, schema, ledger = shares_join(q, data, p=8)
+        assert canon(got) == want, q.name
+        assert ledger.rounds == 1  # one-round algorithm
+
+
+# ------------------------------------------------------------- round bounds
+def test_dym_d_round_bound_chain():
+    # chain GHD of depth n-1: schedule rounds O(d + log n)
+    for n in [4, 8, 16, 32]:
+        g = chain_ghd(n).make_complete(chain_query(n))
+        sched = dym_d_schedule(g)
+        d = g.depth
+        bound = 3 * (d + int(np.ceil(np.log2(max(2, g.size())))) + 2)
+        assert len(sched) <= bound, (n, len(sched), bound)
+
+
+def test_dym_d_round_bound_star():
+    # star: depth 1 -> O(log n) rounds total
+    for n in [4, 8, 32, 64]:
+        g = star_ghd(n).make_complete(star_query(n))
+        sched = dym_d_schedule(g)
+        assert len(sched) <= 3 * (int(np.ceil(np.log2(n))) + 3), (n, len(sched))
+
+
+def test_dym_n_vs_dym_d_round_counts():
+    # on a chain (no parallelism available) DYM-d degenerates to DYM-n
+    n = 16
+    q = chain_query(n)
+    g = chain_ghd(n).make_complete(q)
+    assert len(dym_n_schedule(g)) == 3 * (g.size() - 1)
+    assert len(dym_d_schedule(g)) == len(dym_n_schedule(g))
+    # on a star (depth 1) DYM-d contracts leaves in parallel: O(log n)
+    qs = star_query(n)
+    gs = star_ghd(n).make_complete(qs)
+    s_n = dym_n_schedule(gs)
+    s_d = dym_d_schedule(gs)
+    assert len(s_n) == 3 * (gs.size() - 1)
+    assert len(s_d) <= 3 * (int(np.ceil(np.log2(n))) + 2)
+    assert len(s_d) < len(s_n)
+
+
+def test_schedule_single_writer_per_round():
+    rng = random.Random(5)
+    for _ in range(5):
+        q = random_acyclic_query(rng, 9)
+        g = ghd_for(q).make_complete(q)
+        for rnd in dym_d_schedule(g):
+            targets = [op.target for op in rnd.ops]
+            assert len(targets) == len(set(targets)), "write conflict in round"
+
+
+# ---------------------------------------------------------- fault tolerance
+def test_driver_snapshot_resume(tmp_path):
+    rng = random.Random(42)
+    q = chain_query(5)
+    data = rand_data(q, rng)
+    want = canon(oracle_rows(q, data))
+
+    spmd = SPMD(4)
+    drv = GymDriver(q, ghd_for(q), data, spmd, GymConfig(seed=1))
+    # run two round-groups, snapshot, "crash"
+    drv.step()
+    drv.step()
+    snap = str(tmp_path / "gym_snapshot.npz")
+    drv.save(snap)
+
+    # resume in a brand-new driver
+    drv2 = GymDriver(q, ghd_for(q), data, SPMD(4), GymConfig(seed=1))
+    drv2.load(snap)
+    out = drv2.run()
+    assert canon(out.to_numpy()) == want
+
+
+def test_grid_strategy_skew_immune():
+    """All tuples share one key value: hash co-partition would funnel them
+    to a single reducer; the grid path bounds every reducer by position."""
+    q = chain_query(2)
+    n = 32
+    data = {
+        "R1": np.stack(
+            [np.arange(n, dtype=np.int32), np.zeros(n, np.int32)], axis=1
+        ),
+        "R2": np.stack(
+            [np.zeros(n, np.int32), np.arange(n, dtype=np.int32)], axis=1
+        ),
+    }
+    want = canon(oracle_rows(q, data))
+    got, _, ledger = gym(q, data, p=4, config=GymConfig(strategy="grid"))
+    assert canon(got) == want
+    assert len(want) == n * n

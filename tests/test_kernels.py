@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp ref."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.hash_partition import hash_partition
+from repro.kernels.semijoin_probe import semijoin_probe
+
+I32MAX = 2**31 - 1
+
+
+# ----------------------------------------------------------- semijoin probe
+@pytest.mark.parametrize("n,m", [(7, 5), (128, 300), (1024, 2048), (3000, 129)])
+def test_semijoin_probe_shapes(n, m):
+    rng = np.random.default_rng(n * 1000 + m)
+    q = jnp.asarray(rng.integers(0, 50, size=(n,)), jnp.int32)
+    keys = rng.integers(0, 50, size=(m,))
+    nvalid = rng.integers(0, m + 1)
+    keys[nvalid:] = I32MAX
+    keys = jnp.asarray(keys, jnp.int32)
+    got = semijoin_probe(q, keys, interpret=True)
+    want = ref.semijoin_probe_ref(q, keys)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_semijoin_probe_empty_keys():
+    q = jnp.asarray([1, 2, 3], jnp.int32)
+    keys = jnp.full((4,), I32MAX, jnp.int32)
+    got = semijoin_probe(q, keys, interpret=True)
+    assert not np.asarray(got).any()
+
+
+def test_semijoin_probe_negative_values():
+    q = jnp.asarray([-5, 0, 7, -5], jnp.int32)
+    keys = jnp.asarray([-5, 7, I32MAX, I32MAX], jnp.int32)
+    got = semijoin_probe(q, keys, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), [True, False, True, True])
+
+
+# ----------------------------------------------------------- hash partition
+@pytest.mark.parametrize("n,ar,p", [(10, 2, 4), (1024, 3, 16), (2000, 5, 7)])
+@pytest.mark.parametrize("cols", [(0,), (0, 1)])
+def test_hash_partition_matches_engine_hash(n, ar, p, cols):
+    rng = np.random.default_rng(n + ar + p)
+    rows = jnp.asarray(rng.integers(-100, 100, size=(n, ar)), jnp.int32)
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    got = hash_partition(rows, valid, cols, p, seed=13, interpret=True)
+    want = ref.hash_partition_ref(rows, valid, cols, p, 13)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    g = np.asarray(got)
+    v = np.asarray(valid)
+    assert (g[v] < p).all() and (g[~v] == p).all()
+
+
+# ---------------------------------------------------------- flash attention
+def _mk_qkv(rng, b, h, kvh, sq, sk, d, dtype):
+    q = jnp.asarray(rng.standard_normal((b, h, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, kvh, sk, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, kvh, sk, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize(
+    "b,h,kvh,sq,sk,d",
+    [
+        (1, 2, 2, 64, 64, 32),
+        (2, 4, 2, 128, 128, 64),   # GQA
+        (1, 3, 1, 96, 200, 16),    # MQA, non-multiple sizes, cross lengths
+    ],
+)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(b, h, kvh, sq, sk, d, causal):
+    rng = np.random.default_rng(b + h + sq + sk + causal)
+    q, k, v = _mk_qkv(rng, b, h, kvh, sq, sk, d, jnp.float32)
+    got = flash_attention(
+        q, k, v, causal=causal, blk_q=64, blk_k=64, interpret=True
+    )
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_window_and_softcap():
+    rng = np.random.default_rng(0)
+    q, k, v = _mk_qkv(rng, 1, 2, 2, 128, 128, 32, jnp.float32)
+    got = flash_attention(
+        q, k, v, causal=True, window=32, softcap=30.0,
+        blk_q=64, blk_k=64, interpret=True,
+    )
+    want = ref.attention_ref(q, k, v, causal=True, window=32, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(1)
+    q, k, v = _mk_qkv(rng, 1, 2, 1, 64, 64, 64, jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, blk_q=64, blk_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=3e-2, rtol=3e-2
+    )
+
+
+def test_flash_attention_decode_shape():
+    """One query token vs a long KV (the serve_step path)."""
+    rng = np.random.default_rng(2)
+    q, k, v = _mk_qkv(rng, 2, 4, 2, 1, 512, 64, jnp.float32)
+    got = flash_attention(q, k, v, causal=False, blk_q=64, blk_k=128, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,124 @@
+"""Log-GTA / Log-GTA' / C-GTA invariants (Main Result 2, Theorems 21/25/30),
+including hypothesis property tests over random queries."""
+import math
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cgta import cgta, cgta_pass
+from repro.core.decompose import ghd_for, gyo_join_tree
+from repro.core.loggta import ExtendedGHD, log_gta
+from repro.core.loggta_prime import log_gta_prime
+from repro.core.queries import (
+    chain_ghd,
+    chain_query,
+    random_acyclic_query,
+    star_ghd,
+    star_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+
+
+def _log_bound(n_nodes: int) -> int:
+    # iterations <= log_{4/3}(N) and height grows <= 1 per iteration
+    return math.ceil(math.log(max(2, n_nodes)) / math.log(4 / 3)) + 2
+
+
+# ------------------------------------------------------------- paper examples
+def test_loggta_on_tc15_matches_figure6():
+    """Figure 6: TC_15 (5 triangles), width-2/iw-1 GHD of depth 4 ->
+    log-depth width-<=3 GHD."""
+    q = triangle_chain_query(5)
+    g = triangle_chain_ghd(5)
+    assert g.depth == 4 and g.width == 2
+    out = log_gta(g, q, check=True)
+    out.validate(q)
+    assert out.width <= 3
+    assert out.depth <= _log_bound(g.size())
+
+
+def test_loggta_on_long_chain():
+    q = chain_query(64)
+    g = chain_ghd(64)
+    assert g.depth == 63
+    out = log_gta(g, q, check=True)
+    out.validate(q)
+    assert out.width <= 3  # w=1, iw=1 -> max(1,3)
+    assert out.depth <= _log_bound(g.size())
+    assert out.depth < g.depth
+
+
+def test_loggta_never_increases_depth():
+    q = star_query(8)
+    g = star_ghd(8)
+    out = log_gta(g, q)
+    assert out.depth <= max(g.depth, _log_bound(g.size()))
+
+
+@pytest.mark.parametrize("n_tri", [1, 2, 4, 8, 16])
+def test_loggta_triangle_chain_family(n_tri):
+    q = triangle_chain_query(n_tri)
+    g = triangle_chain_ghd(n_tri)
+    out = log_gta(g, q, check=(n_tri <= 4))
+    out.validate(q)
+    assert out.width <= max(g.width, 3 * g.intersection_width(q))
+    assert out.depth <= _log_bound(g.size())
+
+
+# ------------------------------------------------------------ property tests
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=2, max_value=28), st.randoms(use_true_random=False))
+def test_loggta_property_acyclic(n_atoms, rnd):
+    rng = random.Random(rnd.randint(0, 2**31))
+    q = random_acyclic_query(rng, n_atoms)
+    g = gyo_join_tree(q)
+    w, iw = g.width, g.intersection_width(q)
+    out = log_gta(g, q, check=(n_atoms <= 10))
+    out.validate(q)
+    assert out.width <= max(w, 3 * iw)
+    assert out.depth <= _log_bound(g.size())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=16), st.randoms(use_true_random=False))
+def test_loggta_prime_property(n_atoms, rnd):
+    from repro.core.queries import random_query
+
+    rng = random.Random(rnd.randint(0, 2**31))
+    q = random_query(rng, n_atoms, max(3, n_atoms))
+    g = ghd_for(q)
+    out = log_gta_prime(g, q)
+    out.validate(q)
+    assert out.width <= 3 * g.width
+    assert out.depth <= _log_bound(g.size())
+
+
+# ------------------------------------------------------------------- C-GTA
+def test_cgta_pass_shrinks_and_doubles_width():
+    q = chain_query(32)
+    g = chain_ghd(32)
+    g2 = cgta_pass(g, q)
+    g2.validate(q)
+    assert g2.size() < g.size()
+    assert g2.width <= 2 * g.width
+
+
+def test_cgta_composed_with_loggta():
+    q = chain_query(48)
+    g = chain_ghd(48)
+    for i in (1, 2):
+        out = cgta(g, q, passes=i)
+        out.validate(q)
+        assert out.depth <= _log_bound(g.size())
+
+
+def test_extend_covers_within_iw():
+    q = triangle_chain_query(4)
+    g = triangle_chain_ghd(4)
+    iw = g.intersection_width(q)
+    ext = ExtendedGHD.extend(g, q)
+    for cover in ext.cc.values():
+        assert len(cover) <= iw

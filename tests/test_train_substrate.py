@@ -1,0 +1,156 @@
+"""Train substrate: optimizer steps reduce loss, accumulation equivalence,
+checkpoint round-trip, compression codec quality, elastic batch planning,
+and the GYM-powered data pipeline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, get_model, make_smoke_batch, reduced_config
+from repro.data import CorpusConfig, batches, eligible_docs
+from repro.train import (
+    OptConfig,
+    TrainConfig,
+    init_train_state,
+    make_train_step,
+)
+from repro.train import checkpoint as ckpt
+from repro.train.compression import codec_roundtrip, int8_allreduce
+from repro.train.elastic import HeartbeatMonitor, fit_batch_to_world
+
+
+def _setup(arch="smollm-360m", opt_kind="adamw", **tkw):
+    cfg = reduced_config(CONFIGS[arch])
+    model = get_model(cfg)
+    tcfg = TrainConfig(opt=OptConfig(kind=opt_kind, lr=1e-2, warmup=1), **tkw)
+    params, opt_state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    batch = make_smoke_batch(cfg, jax.random.PRNGKey(1), b=4, s=16)
+    return cfg, model, tcfg, params, opt_state, batch
+
+
+@pytest.mark.parametrize("opt_kind", ["adamw", "adafactor"])
+def test_train_reduces_loss(opt_kind):
+    cfg, model, tcfg, params, opt_state, batch = _setup(opt_kind=opt_kind)
+    step = jax.jit(make_train_step(model, tcfg))
+    losses = []
+    for _ in range(8):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0], losses
+
+
+def test_grad_accumulation_equivalence():
+    cfg, model, _, params, _, batch = _setup()
+    t1 = TrainConfig(opt=OptConfig(lr=1e-3, warmup=1), accum=1)
+    t4 = TrainConfig(opt=OptConfig(lr=1e-3, warmup=1), accum=4)
+    from repro.train.optim import opt_init
+
+    s1 = opt_init(t1.opt, params)
+    s4 = opt_init(t4.opt, params)
+    p1, _, m1 = jax.jit(make_train_step(model, t1))(params, s1, batch)
+    p4, _, m4 = jax.jit(make_train_step(model, t4))(params, s4, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]), rtol=1e-5)
+    l1 = jax.tree_util.tree_leaves(p1)
+    l4 = jax.tree_util.tree_leaves(p4)
+    for a, b in zip(l1, l4):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=2e-5, rtol=2e-4,
+        )
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, model, tcfg, params, opt_state, batch = _setup()
+    step = jax.jit(make_train_step(model, tcfg))
+    params, opt_state, _ = step(params, opt_state, batch)
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"params": params, "opt": opt_state}, extra={"foo": 1})
+    assert ckpt.latest_step(d) == 1
+    restored, extra = ckpt.restore(d, {"params": params, "opt": opt_state})
+    assert extra == {"foo": 1}
+    for a, b in zip(
+        jax.tree_util.tree_leaves(params),
+        jax.tree_util.tree_leaves(restored["params"]),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # resume training from restored state works
+    p2, o2, m = step(restored["params"], restored["opt"], batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_checkpoint_async(tmp_path):
+    cfg, model, tcfg, params, opt_state, batch = _setup()
+    d = str(tmp_path / "ck")
+    t = ckpt.save_async(d, 7, {"params": params})
+    t.join()
+    assert ckpt.latest_step(d) == 7
+
+
+def test_compression_codec_error_bounded():
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (256, 64)) * 0.01
+    y = codec_roundtrip({"g": x})["g"]
+    err = jnp.abs(x - y).max()
+    scale = jnp.abs(x).max() / 127.0
+    assert float(err) <= float(scale) * 1.01
+
+
+def test_int8_allreduce_vs_exact():
+    # simulate 8 data-parallel shards with vmap's named axis
+    rng = jax.random.PRNGKey(1)
+    xs = jax.random.normal(rng, (8, 128)) * 0.1
+    out = jax.vmap(
+        lambda x: int8_allreduce(x, "dp"), axis_name="dp"
+    )(xs)
+    exact = jnp.broadcast_to(xs.mean(0), xs.shape)
+    assert float(jnp.abs(out - exact).max()) < float(jnp.abs(xs).max()) / 60
+
+
+def test_fit_batch_to_world():
+    p = fit_batch_to_world(256, 16, per_device_max=4)
+    assert p.per_device_batch * p.accum * 16 == 256
+    p2 = fit_batch_to_world(256, 8, per_device_max=4)
+    assert p2.per_device_batch * p2.accum * 8 == 256
+    assert p2.accum >= p.accum  # fewer chips -> more accumulation
+
+
+def test_heartbeat_monitor():
+    m = HeartbeatMonitor(factor=2.0)
+    for _ in range(10):
+        m.start()
+        _, s = m.stop()
+    assert isinstance(s, bool)
+
+
+def test_pipeline_gym_join():
+    cfg = CorpusConfig(n_docs=64, n_shards=8, seed=3)
+    ids, summary = eligible_docs(cfg, p=4)
+    assert len(ids) > 0
+    assert summary["rounds"] >= 1
+    # oracle: recompute eligibility in numpy
+    from repro.data import synth_corpus
+
+    d = synth_corpus(cfg)
+    ok_shards = set(d["shards"][d["shards"][:, 1] >= cfg.q_min][:, 0])
+    keep = set(d["dedup"][d["dedup"][:, 1] == 1][:, 0])
+    ok_buckets = set(d["mix"][d["mix"][:, 1] > 0][:, 0])
+    want = {
+        int(r[0])
+        for r in d["docs"]
+        if r[1] in ok_shards and r[0] in keep and r[2] in ok_buckets
+    }
+    assert set(int(i) for i in ids) == want
+
+
+def test_pipeline_batches():
+    cfg = CorpusConfig(n_docs=32, n_shards=4, seed=5)
+    it = batches(cfg, batch=2, seq=8, vocab=101)
+    b1 = next(it)
+    assert b1["tokens"].shape == (2, 8)
+    assert (b1["tokens"] >= 0).all() and (b1["tokens"] < 101).all()
+    # autoregressive consistency: targets are tokens shifted by one
+    b2 = next(it)
+    assert b2["targets"].shape == (2, 8)
