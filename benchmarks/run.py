@@ -16,6 +16,7 @@ from . import (
     bench_appendix_c,
     bench_engine,
     bench_fig6,
+    bench_fusion,
     bench_kernels,
     bench_lemmas,
     bench_lm,
@@ -32,6 +33,7 @@ ALL = {
     "appendix_c": bench_appendix_c,
     "lemmas": bench_lemmas,
     "engine": bench_engine,
+    "fusion": bench_fusion,
     "kernels": bench_kernels,
     "lm": bench_lm,
 }

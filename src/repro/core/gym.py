@@ -10,17 +10,13 @@ Given any complete GHD D(T, chi, lam) of a query Q:
   2. *DYM-d* (Sec. 4.3) on the IDB tree: upward semijoins, downward
      semijoins, join phase — O(d + log n) rounds total.
 
-Two operator strategies, selectable per run:
-  - ``strategy='grid'``  — paper-faithful Lemmas 8/10 (skew-proof,
-    B(X, M) = X^2/M communication).
-  - ``strategy='hash'``  — beyond-paper: hash co-partitioning
-    (comm ~ inputs + outputs, skew-sensitive; overflow triggers the
-    abort-retry path with doubled capacities, the paper's own semantics).
-
-The driver is a resumable state machine: between BSP round-groups its full
-state (node tables + cursor + ledger) can be snapshotted to disk and a new
-driver can resume mid-query (fault tolerance; see
-``examples/gym_fault_tolerance.py``).
+The driver is a thin schedule walker: lowering logical rounds to physical
+op groups, engine-strategy selection ('hash' | 'grid'), round fusion (one
+SPMD dispatch per homogeneous op group), capacity sizing, and the
+abort-retry loop all live in ``core.physical``.  What remains here is the
+resumable state machine: between BSP round-groups the full state (node
+tables + cursor + ledger) can be snapshotted to disk and a new driver can
+resume mid-query (fault tolerance; see ``examples/gym_fault_tolerance.py``).
 """
 from __future__ import annotations
 
@@ -28,80 +24,18 @@ import dataclasses
 import json
 import os
 import tempfile
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..relational import grid as G
 from ..relational import ops as R
 from ..relational.ledger import Ledger
 from ..relational.spmd import SPMD
-from ..relational.table import DTable, Table
+from ..relational.table import DTable
 from .ghd import GHD
 from .hypergraph import Query
-from .planner import Op, Round, dym_d_schedule, dym_n_schedule
-
-
-# --------------------------------------------------------------------------
-# op wrappers: each returns (DTable, comm_sent, dropped, engine_rounds)
-# --------------------------------------------------------------------------
-class _Engine:
-    def __init__(self, spmd: SPMD, strategy: str, seed: int):
-        assert strategy in ("hash", "grid")
-        self.spmd = spmd
-        self.strategy = strategy
-        self.seed = seed
-        self._ctr = 0
-
-    def _s(self) -> int:
-        self._ctr += 1
-        return self.seed + 7919 * self._ctr
-
-    def semijoin(self, s: DTable, r: DTable, cap: int):
-        cap = _pow2(cap)
-        if self.strategy == "grid":
-            out, st, rounds = G.grid_semijoin(self.spmd, s, r, out_cap=cap, seed=self._s())
-            return out, st["sent"], st["dropped"], rounds
-        out, st = R.dist_semijoin(
-            self.spmd, s, r, seed=self._s(), cap_recv=(cap, self.spmd.p * r.cap)
-        )
-        return out, st["sent"], st["dropped"], 1
-
-    def join(self, a: DTable, b: DTable, out_cap: int):
-        out_cap = _pow2(out_cap)
-        if self.strategy == "grid":
-            out, st = G.grid_join(self.spmd, a, b, out_cap=out_cap)
-            return out, st["sent"], st["dropped"], 1
-        out, st = R.dist_join(self.spmd, a, b, seed=self._s(), out_cap=out_cap)
-        return out, st["sent"], st["dropped"], 1
-
-    def multijoin(self, parts: List[DTable], out_cap: int):
-        out_cap = _pow2(out_cap)
-        if self.strategy == "grid" or len(parts) > 2:
-            out, st = G.grid_multiway_join(self.spmd, parts, out_cap=out_cap)
-            return out, st["sent"], st["dropped"], 1
-        if len(parts) == 1:
-            return parts[0], 0, 0, 0
-        out, st = R.dist_join(self.spmd, parts[0], parts[1], seed=self._s(), out_cap=out_cap)
-        return out, st["sent"], st["dropped"], 1
-
-    def intersect(self, a: DTable, b: DTable, cap: int):
-        cap = _pow2(cap)
-        out, st = R.dist_intersect(
-            self.spmd, a, b, seed=self._s(), cap_recv=(cap, self.spmd.p * b.cap)
-        )
-        return out, st["sent"], st["dropped"], 1
-
-    def dedup(self, t: DTable, cap: int):
-        cap = _pow2(cap)
-        out, st = R.dist_dedup(self.spmd, t, seed=self._s(), cap_recv=cap)
-        return out, st["sent"], st["dropped"], 1
-
-
-def _pow2(x: int) -> int:
-    """Round capacities up to powers of two: distinct shapes collapse, so
-    the per-op jit cache is reused across nodes/rounds/retries."""
-    return 1 << max(2, int(x - 1).bit_length())
+from .physical import CapacityManager, PhysicalExecutor, pow2 as _pow2
+from .planner import Round, dym_d_schedule, dym_n_schedule
 
 
 # --------------------------------------------------------------------------
@@ -115,6 +49,7 @@ class GymConfig:
     cap_growth: int = 4  # capacity multiplier on overflow-retry
     max_retries: int = 12
     count_retries_comm: bool = True  # aborted rounds still moved tuples
+    fused: bool = True  # one SPMD dispatch per homogeneous op group
 
 
 class GymDriver:
@@ -132,7 +67,6 @@ class GymDriver:
         self.config = config or GymConfig()
         self.spmd = spmd
         self.ghd = ghd.make_complete(query)
-        self.engine = _Engine(spmd, self.config.strategy, self.config.seed)
         self.ledger = Ledger()
 
         # stable per-node schemas: chi in first-seen attr order of the query
@@ -154,17 +88,39 @@ class GymDriver:
                 DTable.scatter_numpy(rows, atom.attrs, p, cap=cap)
             )
 
-        sched = dym_d_schedule if self.config.schedule == "dym_d" else dym_n_schedule
+        cfg = self.config
+        self.capman = CapacityManager(spmd, growth=cfg.cap_growth)
+        for v in self.ghd.nodes():
+            self.capman.ensure(v, self._init_cap(v))
+        self.executor = PhysicalExecutor(
+            spmd,
+            cfg.strategy,
+            self.capman,
+            seed=cfg.seed,
+            max_retries=cfg.max_retries,
+            count_retries_comm=cfg.count_retries_comm,
+            fuse=cfg.fused,
+        )
+
+        sched = dym_d_schedule if cfg.schedule == "dym_d" else dym_n_schedule
         self.schedule: List[Round] = sched(self.ghd)
         self.tables: Dict[int, DTable] = {}
         # Upward-phase L2 accumulators: the paper's "replace R1 ... for the
         # duration of the upward semijoin phase".  Node tables stay intact
         # (the downward phase and join phase need the originals).
         self.acc: Dict[int, DTable] = {}
-        self.caps: Dict[int, int] = {}
         self.cursor: int = -1  # -1 = materialization pending
         self.done = False
         self.result: Optional[DTable] = None
+
+    # caps live in the capacity manager; kept as a property for snapshots
+    @property
+    def caps(self) -> Dict[int, int]:
+        return self.capman.caps
+
+    @caps.setter
+    def caps(self, value: Dict[int, int]) -> None:
+        self.capman.caps = dict(value)
 
     # -- capacity heuristics ------------------------------------------------
     def _init_cap(self, v: int) -> int:
@@ -174,182 +130,40 @@ class GymDriver:
         )
         return _pow2(max(4, 4 * per_shard))
 
-    # -- materialization (Theorem 15 stage 1) --------------------------------
-    def _materialize(self) -> None:
-        cfg = self.config
-        comm = 0
-        dropped_any = True
-        attempt = 0
-        caps = {v: self._init_cap(v) for v in self.ghd.nodes()}
-        max_engine_rounds = 0
-        while dropped_any:
-            attempt += 1
-            assert attempt <= cfg.max_retries, "materialization: too many retries"
-            dropped_any = False
-            comm_try = 0
-            tables: Dict[int, DTable] = {}
-            max_engine_rounds = 0
-            for v in self.ghd.nodes():
-                parts: List[DTable] = []
-                need_dedup = False
-                for alias in sorted(self.ghd.lam[v]):
-                    t = self.base[alias]
-                    keep = [a for a in t.schema if a in self.ghd.chi[v]]
-                    proj = R.dist_project(self.spmd, t, keep, dedup=True)
-                    if len(keep) < len(t.schema):
-                        need_dedup = True  # strict projection: cross-shard dups
-                    parts.append(proj)
-                # order parts by schema for deterministic joined schema, then
-                # reorder columns to the canonical node schema via projection
-                out, sent, drop, rnds = self.engine.multijoin(parts, caps[v])
-                er = rnds
-                if need_dedup:
-                    out, s2, d2, r2 = self.engine.dedup(out, caps[v])
-                    sent += s2
-                    drop += d2
-                    er += r2
-                if drop:
-                    dropped_any = True
-                    caps[v] *= cfg.cap_growth
-                comm_try += sent
-                # canonicalize column order to node schema
-                tables[v] = R.dist_project(self.spmd, out, self.node_schema[v])
-                max_engine_rounds = max(max_engine_rounds, er)
-            if cfg.count_retries_comm or not dropped_any:
-                comm += comm_try
-            if dropped_any:
-                self.ledger.retries += 1
-        self.tables = tables
-        self.caps = {v: max(caps[v], tables[v].cap) for v in tables}
-        self.ledger.add_round(
-            "materialize",
-            [f"IDB({v})<=lam{sorted(self.ghd.lam[v])}" for v in self.ghd.nodes()],
-            comm,
-            n_rounds=max(1, max_engine_rounds),
-        )
-        self.cursor = 0
-
-    # -- one schedule round ---------------------------------------------------
-    def _exec_op(
-        self,
-        op: Op,
-        tab: Dict[int, DTable],
-        acc: Dict[int, DTable],
-        caps: Dict[int, int],
-    ):
-        """Returns (store, new_table, sent, dropped, engine_rounds) where
-        ``store`` is 'tab' (real node update) or 'acc' (upward scratch)."""
-        e = self.engine
-
-        def up(v: int) -> DTable:  # upward view: accumulator if present
-            return acc.get(v, tab[v])
-
-        if op.kind == "semijoin":
-            # upward L1: S := S |>< R, R read through its accumulator
-            tgt, r = op.target, op.args[0]
-            t, c, d, er = e.semijoin(tab[tgt], up(r), caps[tgt])
-            return "tab", t, c, d, er
-        if op.kind == "down_semijoin":
-            tgt, s = op.target, op.args[0]
-            t, c, d, er = e.semijoin(tab[tgt], tab[s], caps[tgt])
-            return "tab", t, c, d, er
-        if op.kind == "join":
-            (r,) = op.args
-            t, c, d, er = e.join(tab[op.target], tab[r], caps[op.target])
-            return "tab", t, c, d, er
-        if op.kind == "pair_filter":
-            s, r2 = op.args
-            t1, c1, d1, rr1 = e.semijoin(tab[s], up(op.target), caps[s])
-            t2, c2, d2, rr2 = e.semijoin(tab[s], up(r2), caps[s])
-            t3, c3, d3, rr3 = e.intersect(t1, t2, caps[s])
-            return "acc", t3, c1 + c2 + c3, d1 + d2 + d3, max(rr1, rr2) + rr3
-        if op.kind == "triple_filter":
-            s, rb, rc = op.args
-            t1, c1, d1, rr1 = e.semijoin(tab[s], up(op.target), caps[s])
-            t2, c2, d2, rr2 = e.semijoin(tab[s], up(rb), caps[s])
-            t3, c3, d3, rr3 = e.semijoin(tab[s], up(rc), caps[s])
-            i1, c4, d4, rr4 = e.intersect(t1, t2, caps[s])
-            i2, c5, d5, rr5 = e.intersect(i1, t3, caps[s])
-            return (
-                "acc",
-                i2,
-                c1 + c2 + c3 + c4 + c5,
-                d1 + d2 + d3 + d4 + d5,
-                max(rr1, rr2, rr3) + rr4 + rr5,
-            )
-        if op.kind == "pair_join":
-            s, r2 = op.args
-            cap = max(caps[op.target], caps[s], caps[r2])
-            t1, c1, d1, rr1 = e.join(tab[op.target], tab[s], cap)
-            t2, c2, d2, rr2 = e.join(tab[r2], tab[s], cap)
-            t3, c3, d3, rr3 = e.join(t1, t2, cap)
-            return "tab", t3, c1 + c2 + c3, d1 + d2 + d3, max(rr1, rr2) + rr3
-        if op.kind == "triple_join":
-            s, rb, rc = op.args
-            cap = max(caps[op.target], caps[s], caps[rb], caps[rc])
-            t1, c1, d1, rr1 = e.join(tab[op.target], tab[s], cap)
-            t2, c2, d2, rr2 = e.join(tab[rb], tab[s], cap)
-            t3, c3, d3, rr3 = e.join(tab[rc], tab[s], cap)
-            j1, c4, d4, rr4 = e.join(t1, t2, cap)
-            j2, c5, d5, rr5 = e.join(j1, t3, cap)
-            return (
-                "tab",
-                j2,
-                c1 + c2 + c3 + c4 + c5,
-                d1 + d2 + d3 + d4 + d5,
-                max(rr1, rr2, rr3) + rr4 + rr5,
-            )
-        raise ValueError(f"unknown op {op.kind}")
-
+    # -- schedule walking ----------------------------------------------------
     def step(self) -> bool:
         """Run one schedule round (with abort-retry); returns True if more."""
         if self.done:
             return False
         if self.cursor < 0:
-            self._materialize()
+            tables, comm, claimed, dispatches = self.executor.materialize(
+                self.ghd, self.base, self.node_schema, self.ledger
+            )
+            self.tables = tables
+            self.ledger.add_round(
+                "materialize",
+                [f"IDB({v})<=lam{sorted(self.ghd.lam[v])}" for v in self.ghd.nodes()],
+                comm,
+                n_rounds=claimed,
+                dispatches=dispatches,
+            )
+            self.cursor = 0
             return True
         if self.cursor >= len(self.schedule):
             self._finish()
             return False
         rnd = self.schedule[self.cursor]
-        cfg = self.config
-        snap_tab = dict(self.tables)
-        snap_acc = dict(self.acc)
-        caps = dict(self.caps)
-        attempt = 0
-        comm_total = 0
-        while True:
-            attempt += 1
-            assert attempt <= cfg.max_retries, f"round {self.cursor}: too many retries"
-            new_tab: Dict[int, DTable] = {}
-            new_acc: Dict[int, DTable] = {}
-            comm = 0
-            dropped = 0
-            er_max = 0
-            for op in rnd.ops:
-                store, t, c, d, er = self._exec_op(op, snap_tab, snap_acc, caps)
-                comm += c
-                dropped += d
-                er_max = max(er_max, er)
-                if d:
-                    # grow capacities past the observed overflow so the
-                    # retry converges in one attempt (drop count bounds the
-                    # shortfall across all shards)
-                    for g in (op.target, *op.args):
-                        caps[g] = _pow2(
-                            caps.get(g, 4) * cfg.cap_growth + int(d)
-                        )
-                (new_tab if store == "tab" else new_acc)[op.target] = t
-            if cfg.count_retries_comm or dropped == 0:
-                comm_total += comm
-            if dropped == 0:
-                break
-            self.ledger.retries += 1
-        self.tables = {**snap_tab, **new_tab}
-        self.acc = {**snap_acc, **new_acc}
-        self.caps = caps
+        new_tab, new_acc, comm, claimed, dispatches = self.executor.execute_round(
+            rnd, self.tables, self.acc, self.ledger
+        )
+        self.tables = {**self.tables, **new_tab}
+        self.acc = {**self.acc, **new_acc}
         self.ledger.add_round(
-            rnd.phase, [repr(o) for o in rnd.ops], comm_total, n_rounds=max(1, er_max)
+            rnd.phase,
+            [repr(o) for o in rnd.ops],
+            comm,
+            n_rounds=claimed,
+            dispatches=dispatches,
         )
         self.cursor += 1
         if self.cursor >= len(self.schedule):
@@ -362,7 +176,7 @@ class GymDriver:
         out = self.tables[root]
         # canonical output column order
         want = [a for a in self.query.output_attrs if a in out.schema]
-        self.result = R.dist_project(self.spmd, out, want)
+        self.result, _ = R.dist_project(self.spmd, out, want)
         self.ledger.output_tuples = int(np.asarray(self.result.valid).sum())
         self.done = True
 

@@ -1,0 +1,526 @@
+"""Physical execution layer: logical planner rounds -> fused SPMD dispatches.
+
+The planner (``planner.py``) emits *logical* rounds — sets of independent
+semijoin/intersect/join ops that the BSP model (Theorem 15 / Sec. 4.3)
+charges as ONE round.  This module makes the engine keep that promise:
+
+  1. **Lowering** — each logical ``Op`` becomes a short dataflow of
+     *physical* ops (``PhysOp``) over named slots, arranged in stages.
+     Every op in a stage is independent, so a stage is one BSP round.
+  2. **Grouping** — within a stage, physical ops with the same kind and
+     uniform static signature (shard shapes, key count, capacity) form an
+     op group.
+  3. **Fused dispatch** — each group executes as ONE SPMD program via the
+     stacked operators in ``relational.batched`` (one ``all_to_all`` per
+     shuffle stage for the whole group), instead of one program per op.
+
+Engine strategies are a registry (``register_engine``): ``'hash'`` — hash
+co-partitioning, comm ~ inputs+outputs, skew-sensitive with abort-retry;
+``'grid'`` — the paper's skew-proof Lemma 8/10 grid operators.  New
+strategies subclass ``Engine`` and register under a new name; the driver
+selects them by string.
+
+Capacity sizing and the paper's abort-and-retry semantics live in
+``CapacityManager``: heuristic initial caps, multiplicative growth on
+overflow, and — for blown joins — an EXACT key-only counting dispatch
+(``dist_join_count`` / ``local_join_count``) that floors the retry at the
+true output size instead of guessing upward by powers of the growth
+factor.
+
+The ledger records both what a round *claims* under the BSP model
+(``n_rounds``) and what the engine *measured* (``dispatches``, counted at
+the SPMD layer); round fusion is proven by the two converging.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..relational import batched as B
+from ..relational import grid as G
+from ..relational import ops as R
+from ..relational.ledger import Ledger
+from ..relational.spmd import SPMD
+from ..relational.table import DTable
+from .ghd import GHD
+from .planner import Op, Round
+
+
+def pow2(x: int) -> int:
+    """Round capacities up to powers of two: distinct shapes collapse, so
+    the per-op jit cache is reused across nodes/rounds/retries — and
+    uniform shapes are what make op groups batchable at all."""
+    return 1 << max(2, int(x - 1).bit_length())
+
+
+# --------------------------------------------------------------------------
+# engine strategy registry
+# --------------------------------------------------------------------------
+ENGINES: Dict[str, type] = {}
+
+
+def register_engine(name: str):
+    """Class decorator: make an ``Engine`` subclass selectable by name."""
+
+    def deco(cls):
+        ENGINES[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def get_engine(name: str, spmd: SPMD) -> "Engine":
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine strategy {name!r}; registered: {sorted(ENGINES)}"
+        ) from None
+    return cls(spmd)
+
+
+class Engine:
+    """Strategy interface: batched group execution of homogeneous physical
+    ops.  Each ``*_many`` method takes k uniform instances plus per-instance
+    seeds and returns (outputs, per-instance stats, claimed BSP rounds).
+
+    Intersect and dedup have no grid variant (they only ever run on
+    already-bounded intermediates), so their hash implementations are
+    shared by every strategy — exactly the old ``_Engine`` behavior.
+    """
+
+    name = "?"
+    # whether dist_join_count predicts this engine's per-shard join output
+    # (true only for hash co-partitioning; grid placement is positional)
+    exact_join_presize = False
+
+    def __init__(self, spmd: SPMD):
+        self.spmd = spmd
+
+    # -- per-kind batched ops ----------------------------------------------
+    def semijoin_many(self, ss, rs, cap: int, seeds) -> Tuple[List[DTable], List[Dict], int]:
+        raise NotImplementedError
+
+    def join_many(self, as_, bs, cap: int, seeds) -> Tuple[List[DTable], List[Dict], int]:
+        raise NotImplementedError
+
+    def intersect_many(self, as_, bs, cap: int, seeds):
+        outs, stats = B.dist_intersect_many(
+            self.spmd, as_, bs, seeds=seeds,
+            cap_recv=(cap, self.spmd.p * bs[0].cap),
+        )
+        return outs, stats, 1
+
+    def dedup_many(self, ts, cap: int, seeds):
+        outs, stats = B.dist_dedup_many(self.spmd, ts, seeds=seeds, cap_recv=cap)
+        return outs, stats, 1
+
+    # -- materialization (unbatched; one-time per query) -------------------
+    def multijoin(self, parts: List[DTable], cap: int, seed: int):
+        if len(parts) == 1:
+            return parts[0], {"sent": 0, "dropped": 0}, 0
+        out, st = G.grid_multiway_join(self.spmd, parts, out_cap=cap)
+        return out, st, 1
+
+
+@register_engine("hash")
+class HashEngine(Engine):
+    """Beyond-paper hash co-partitioning (comm ~ inputs + outputs,
+    skew-sensitive; overflow triggers the abort-retry path)."""
+
+    exact_join_presize = True
+
+    def semijoin_many(self, ss, rs, cap, seeds):
+        outs, stats = B.dist_semijoin_many(
+            self.spmd, ss, rs, seeds=seeds,
+            cap_recv=(cap, self.spmd.p * rs[0].cap),
+        )
+        return outs, stats, 1
+
+    def join_many(self, as_, bs, cap, seeds):
+        outs, stats = B.dist_join_many(self.spmd, as_, bs, seeds=seeds, out_cap=cap)
+        return outs, stats, 1
+
+    def multijoin(self, parts, cap, seed):
+        if len(parts) == 2:
+            out, st = R.dist_join(self.spmd, parts[0], parts[1], seed=seed, out_cap=cap)
+            return out, st, 1
+        return Engine.multijoin(self, parts, cap, seed)
+
+
+@register_engine("grid")
+class GridEngine(Engine):
+    """Paper-faithful Lemmas 8/10 (skew-proof, B(X, M) = X^2/M comm)."""
+
+    def semijoin_many(self, ss, rs, cap, seeds):
+        outs, stats = B.grid_semijoin_many(self.spmd, ss, rs, seeds=seeds, out_cap=cap)
+        return outs, stats, 2
+
+    def join_many(self, as_, bs, cap, seeds):
+        outs, stats = B.grid_join_many(self.spmd, as_, bs, out_cap=cap)
+        return outs, stats, 1
+
+
+# --------------------------------------------------------------------------
+# capacity management (the paper's abort-and-retry, centralized)
+# --------------------------------------------------------------------------
+class CapacityManager:
+    """Per-GHD-node output capacities + overflow policy.
+
+    - ``cap_for(nodes)``: pow2 capacity for an op writing into ``nodes``.
+    - ``grow(nodes, dropped)``: multiplicative growth past the observed
+      overflow (drop count bounds the shortfall across all shards), the
+      retry-convergence rule the driver previously inlined twice.
+    - ``presize_join(a, b, seed)``: EXACT per-shard output count of the
+      blown join via a key-only counting dispatch — the retry is floored
+      at the true requirement instead of walking up by growth factors.
+      (Retries reseed the hash partition, which can shift per-shard counts
+      slightly; the multiplicative growth above still guarantees
+      termination, the exact floor just makes one retry almost always
+      enough.)
+    """
+
+    def __init__(self, spmd: SPMD, growth: int = 4):
+        self.spmd = spmd
+        self.growth = growth
+        self.caps: Dict[int, int] = {}
+
+    def cap_for(self, nodes: Sequence[int]) -> int:
+        return pow2(max(self.caps.get(v, 4) for v in nodes))
+
+    def ensure(self, v: int, cap: int) -> None:
+        self.caps[v] = max(self.caps.get(v, 0), cap)
+
+    def grow(self, nodes: Sequence[int], dropped: int) -> None:
+        for v in nodes:
+            self.caps[v] = pow2(self.caps.get(v, 4) * self.growth + int(dropped))
+
+    def grow_node(self, v: int) -> None:
+        self.caps[v] = pow2(self.caps.get(v, 4) * self.growth)
+
+    def presize_join(self, a: DTable, b: DTable, seed: int) -> int:
+        counts = R.dist_join_count(self.spmd, a, b, seed=seed)
+        return pow2(max(4, int(counts.max())))
+
+    def floor(self, nodes: Sequence[int], cap: int) -> None:
+        for v in nodes:
+            self.ensure(v, cap)
+
+
+# --------------------------------------------------------------------------
+# lowering: logical Op -> staged physical dataflow over named slots
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class PhysOp:
+    """One physical operator instance.
+
+    Slots: ``tab:v`` (node v's table), ``up:v`` (node v read through its
+    upward accumulator if present), ``tmp:j:i`` (temporary i of logical op
+    j).  ``cap_nodes`` are the GHD nodes whose managed capacity sizes this
+    op's output; ``logical`` indexes the owning logical op for retry blame.
+    """
+
+    kind: str  # 'semijoin' | 'join' | 'intersect' | 'dedup'
+    out: str
+    a: str
+    b: Optional[str]
+    cap_nodes: Tuple[int, ...]
+    logical: int
+    seed: int = 0
+
+
+def _tab(v: int) -> str:
+    return f"tab:{v}"
+
+
+def _up(v: int) -> str:
+    return f"up:{v}"
+
+
+def lower_op(op: Op, j: int) -> Tuple[List[List[PhysOp]], Tuple[str, int, str]]:
+    """Lower one logical op: (stages, (store, node, result_slot)).
+
+    Stage i of every logical op in a round runs concurrently — the
+    single-writer property of planner rounds guarantees independence."""
+
+    def tmp(i: int) -> str:
+        return f"tmp:{j}:{i}"
+
+    k = op.kind
+    if k == "semijoin":
+        # upward L1: S := S |>< R, R read through its accumulator
+        (r,) = op.args
+        ops = [[PhysOp("semijoin", tmp(0), _tab(op.target), _up(r), (op.target,), j)]]
+        return ops, ("tab", op.target, tmp(0))
+    if k == "down_semijoin":
+        (s,) = op.args
+        ops = [[PhysOp("semijoin", tmp(0), _tab(op.target), _tab(s), (op.target,), j)]]
+        return ops, ("tab", op.target, tmp(0))
+    if k == "join":
+        (r,) = op.args
+        ops = [[PhysOp("join", tmp(0), _tab(op.target), _tab(r), (op.target,), j)]]
+        return ops, ("tab", op.target, tmp(0))
+    if k == "pair_filter":
+        s, r2 = op.args
+        stages = [
+            [
+                PhysOp("semijoin", tmp(0), _tab(s), _up(op.target), (s,), j),
+                PhysOp("semijoin", tmp(1), _tab(s), _up(r2), (s,), j),
+            ],
+            [PhysOp("intersect", tmp(2), tmp(0), tmp(1), (s,), j)],
+        ]
+        return stages, ("acc", op.target, tmp(2))
+    if k == "triple_filter":
+        s, rb, rc = op.args
+        stages = [
+            [
+                PhysOp("semijoin", tmp(0), _tab(s), _up(op.target), (s,), j),
+                PhysOp("semijoin", tmp(1), _tab(s), _up(rb), (s,), j),
+                PhysOp("semijoin", tmp(2), _tab(s), _up(rc), (s,), j),
+            ],
+            [PhysOp("intersect", tmp(3), tmp(0), tmp(1), (s,), j)],
+            [PhysOp("intersect", tmp(4), tmp(3), tmp(2), (s,), j)],
+        ]
+        return stages, ("acc", op.target, tmp(4))
+    if k == "pair_join":
+        s, r2 = op.args
+        nodes = (op.target, s, r2)
+        stages = [
+            [
+                PhysOp("join", tmp(0), _tab(op.target), _tab(s), nodes, j),
+                PhysOp("join", tmp(1), _tab(r2), _tab(s), nodes, j),
+            ],
+            [PhysOp("join", tmp(2), tmp(0), tmp(1), nodes, j)],
+        ]
+        return stages, ("tab", op.target, tmp(2))
+    if k == "triple_join":
+        s, rb, rc = op.args
+        nodes = (op.target, s, rb, rc)
+        stages = [
+            [
+                PhysOp("join", tmp(0), _tab(op.target), _tab(s), nodes, j),
+                PhysOp("join", tmp(1), _tab(rb), _tab(s), nodes, j),
+                PhysOp("join", tmp(2), _tab(rc), _tab(s), nodes, j),
+            ],
+            [PhysOp("join", tmp(3), tmp(0), tmp(1), nodes, j)],
+            [PhysOp("join", tmp(4), tmp(3), tmp(2), nodes, j)],
+        ]
+        return stages, ("tab", op.target, tmp(4))
+    raise ValueError(f"unknown op {op.kind}")
+
+
+def lower_round(rnd: Round) -> Tuple[List[List[PhysOp]], List[Tuple[str, int, str]]]:
+    """Zip-merge per-op stage lists: round stage i = all ops' stage i."""
+    stages: List[List[PhysOp]] = []
+    writes: List[Tuple[str, int, str]] = []
+    for j, op in enumerate(rnd.ops):
+        op_stages, write = lower_op(op, j)
+        while len(stages) < len(op_stages):
+            stages.append([])
+        for i, st in enumerate(op_stages):
+            stages[i].extend(st)
+        writes.append(write)
+    return stages, writes
+
+
+# --------------------------------------------------------------------------
+# executor
+# --------------------------------------------------------------------------
+class PhysicalExecutor:
+    """Runs lowered rounds (and the materialization stage) with grouping,
+    fused dispatch, and the centralized abort-retry loop.
+
+    ``fuse=False`` forces singleton groups — every physical op becomes its
+    own dispatch.  Results, stats, seeds, and retries are bit-identical to
+    the fused path (grouping only changes how work is packed into
+    programs), which is what the parity tests assert and what makes the
+    dispatch-count comparison in ``bench_fusion`` apples-to-apples."""
+
+    def __init__(
+        self,
+        spmd: SPMD,
+        strategy: str,
+        capman: CapacityManager,
+        *,
+        seed: int = 0,
+        max_retries: int = 12,
+        count_retries_comm: bool = True,
+        fuse: bool = True,
+    ):
+        self.spmd = spmd
+        self.engine = get_engine(strategy, spmd)
+        self.capman = capman
+        self.seed = seed
+        self.max_retries = max_retries
+        self.count_retries_comm = count_retries_comm
+        self.fuse = fuse
+        self._seed_ctr = 0
+
+    def _next_seed(self) -> int:
+        self._seed_ctr += 1
+        return self.seed + 7919 * self._seed_ctr
+
+    # -- grouping ----------------------------------------------------------
+    def _signature(self, op: PhysOp, resolve) -> Tuple:
+        a = resolve(op.a)
+        sig: Tuple = (op.kind, self.capman.cap_for(op.cap_nodes), a.cap, a.arity)
+        if op.b is not None:
+            b = resolve(op.b)
+            n_shared = sum(1 for x in a.schema if x in set(b.schema))
+            sig += (b.cap, b.arity, n_shared)
+        return sig
+
+    def _group(self, stage: List[PhysOp], resolve) -> List[List[PhysOp]]:
+        groups: Dict[Tuple, List[PhysOp]] = {}
+        for i, op in enumerate(stage):
+            sig = self._signature(op, resolve)
+            if not self.fuse:
+                sig += (i,)  # singleton groups: one dispatch per op
+            groups.setdefault(sig, []).append(op)
+        return list(groups.values())
+
+    def _dispatch_group(self, ops_g: List[PhysOp], resolve):
+        cap = self.capman.cap_for(ops_g[0].cap_nodes)
+        seeds = [op.seed for op in ops_g]
+        lhs = [resolve(op.a) for op in ops_g]
+        kind = ops_g[0].kind
+        if kind == "dedup":
+            return self.engine.dedup_many(lhs, cap, seeds)
+        rhs = [resolve(op.b) for op in ops_g]
+        if kind == "semijoin":
+            return self.engine.semijoin_many(lhs, rhs, cap, seeds)
+        if kind == "join":
+            return self.engine.join_many(lhs, rhs, cap, seeds)
+        if kind == "intersect":
+            return self.engine.intersect_many(lhs, rhs, cap, seeds)
+        raise ValueError(f"unknown physical op kind {kind}")
+
+    # -- one schedule round ------------------------------------------------
+    def execute_round(
+        self,
+        rnd: Round,
+        tables: Dict[int, DTable],
+        acc: Dict[int, DTable],
+        ledger: Ledger,
+    ) -> Tuple[Dict[int, DTable], Dict[int, DTable], int, int, int]:
+        """Run one logical round (with abort-retry).  Returns
+        (new_tables, new_acc, comm, claimed_rounds, dispatches)."""
+        stages, writes = lower_round(rnd)
+        d0 = self.spmd.dispatch_count
+        attempt = 0
+        comm_total = 0
+        while True:
+            attempt += 1
+            assert attempt <= self.max_retries, f"round {rnd.phase}: too many retries"
+            slots: Dict[str, DTable] = {}
+
+            def resolve(name: str) -> DTable:
+                if name.startswith("tab:"):
+                    return tables[int(name[4:])]
+                if name.startswith("up:"):
+                    v = int(name[3:])
+                    return acc.get(v, tables[v])
+                return slots[name]
+
+            comm = 0
+            claimed = 0
+            dropped_by_logical: Dict[int, int] = {}
+            blown_joins: List[Tuple[PhysOp, DTable, DTable]] = []
+            for stage in stages:
+                # seeds advance per attempt in lowering order, independent of
+                # grouping — fused and sequential execution stay identical
+                for op in stage:
+                    op.seed = self._next_seed()
+                stage_claimed = 0
+                for ops_g in self._group(stage, resolve):
+                    outs, stats, rounds = self._dispatch_group(ops_g, resolve)
+                    stage_claimed = max(stage_claimed, rounds)
+                    for op, out, st in zip(ops_g, outs, stats):
+                        slots[op.out] = out
+                        comm += st["sent"]
+                        if st["dropped"]:
+                            dropped_by_logical[op.logical] = (
+                                dropped_by_logical.get(op.logical, 0) + st["dropped"]
+                            )
+                            if op.kind == "join" and self.engine.exact_join_presize:
+                                blown_joins.append((op, resolve(op.a), resolve(op.b)))
+                claimed += stage_claimed
+            if self.count_retries_comm or not dropped_by_logical:
+                comm_total += comm
+            if not dropped_by_logical:
+                break
+            ledger.retries += 1
+            for j, d in dropped_by_logical.items():
+                lop = rnd.ops[j]
+                self.capman.grow((lop.target, *lop.args), d)
+            for op, a, b in blown_joins:
+                lop = rnd.ops[op.logical]
+                self.capman.floor(
+                    (lop.target, *lop.args), self.capman.presize_join(a, b, op.seed)
+                )
+        new_tab: Dict[int, DTable] = {}
+        new_acc: Dict[int, DTable] = {}
+        for store, node, slot in writes:
+            (new_tab if store == "tab" else new_acc)[node] = slots[slot]
+        return new_tab, new_acc, comm_total, max(1, claimed), self.spmd.dispatch_count - d0
+
+    # -- materialization (Theorem 15 stage 1) ------------------------------
+    def materialize(
+        self,
+        ghd: GHD,
+        base: Dict[str, DTable],
+        node_schema: Dict[int, Tuple[str, ...]],
+        ledger: Ledger,
+    ) -> Tuple[Dict[int, DTable], int, int, int]:
+        """Compute IDB_v per tree vertex (one grid round or a hash-join
+        cascade), with the centralized retry loop.  Returns
+        (tables, comm, claimed_rounds, dispatches)."""
+        d0 = self.spmd.dispatch_count
+        comm = 0
+        dropped_any = True
+        attempt = 0
+        max_engine_rounds = 0
+        tables: Dict[int, DTable] = {}
+        while dropped_any:
+            attempt += 1
+            assert attempt <= self.max_retries, "materialization: too many retries"
+            dropped_any = False
+            comm_try = 0
+            tables = {}
+            max_engine_rounds = 0
+            for v in ghd.nodes():
+                parts: List[DTable] = []
+                need_dedup = False
+                for alias in sorted(ghd.lam[v]):
+                    t = base[alias]
+                    keep = [a for a in t.schema if a in ghd.chi[v]]
+                    proj, _ = R.dist_project(self.spmd, t, keep, dedup=True)
+                    if len(keep) < len(t.schema):
+                        need_dedup = True  # strict projection: cross-shard dups
+                    parts.append(proj)
+                cap = self.capman.cap_for((v,))
+                out, st, er = self.engine.multijoin(parts, cap, self._next_seed())
+                sent, drop = st["sent"], st["dropped"]
+                if need_dedup:
+                    outs, dstats, r2 = self.engine.dedup_many(
+                        [out], cap, [self._next_seed()]
+                    )
+                    out = outs[0]
+                    sent += dstats[0]["sent"]
+                    drop += dstats[0]["dropped"]
+                    er += r2
+                if drop:
+                    dropped_any = True
+                    self.capman.grow_node(v)
+                comm_try += sent
+                # canonicalize column order to node schema
+                tables[v], _ = R.dist_project(self.spmd, out, node_schema[v])
+                max_engine_rounds = max(max_engine_rounds, er)
+            if self.count_retries_comm or not dropped_any:
+                comm += comm_try
+            if dropped_any:
+                ledger.retries += 1
+        for v in tables:
+            self.capman.ensure(v, tables[v].cap)
+        return tables, comm, max(1, max_engine_rounds), self.spmd.dispatch_count - d0

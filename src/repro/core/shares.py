@@ -162,5 +162,5 @@ def shares_join(
     ledger.add_round("shares", [f"hypercube {shares}"], comm, n_rounds=1)
     ledger.output_tuples = int(np.asarray(deduped.valid).sum())
     want = [a for a in query.output_attrs if a in deduped.schema]
-    out = R.dist_project(s, deduped, want)
+    out, _ = R.dist_project(s, deduped, want)
     return out.to_numpy(), out.schema, ledger

@@ -1,0 +1,437 @@
+"""Batched ("round-fused") distributed operators.
+
+A DYM round schedules k independent operator instances.  Running them as k
+separate SPMD dispatches costs k program launches and k ``all_to_all``
+barriers — but the paper's BSP model (Sec. 3.2) charges the round ONCE.
+These variants stack the k instances along a new batch axis between the
+reducer axis and the row axis — DTable (p, cap, ar) -> stacked
+(p, k, cap, ar) — and run the per-shard operator body under an inner
+``jax.vmap``, so one dispatch (and one all_to_all per shuffle stage)
+serves the whole group.
+
+Uniformity contract (enforced by the physical layer's grouping, asserted
+here): shard shapes (cap, arity), key-column COUNT, and every capacity
+static must be equal across the k instances.  Key column POSITIONS and
+hash seeds may differ per instance — they ride as int32 DATA with a
+leading k axis and are applied with ``jnp.take``, so one compiled program
+covers any mix of schemas and reseeded retries.
+
+Hash-path batched ops produce bit-identical results (and identical
+``sent``/``dropped`` stats) to their sequential counterparts in ``ops.py``
+given the same seeds and capacities; the fused/sequential parity tests
+pin this down.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grid import _grid_send_one, _grid_shares, _position_groups
+from .hashing import dense_ranks, dests_for
+from .localops import local_dedup_mask, local_join_ranked, local_semijoin_mask
+from .shuffle import exchange, exchange_multi
+from .spmd import SPMD
+from .table import DTable, schema_join
+
+
+# ------------------------------------------------------------ stack helpers
+def _stack(tables: Sequence[DTable]) -> Tuple[jax.Array, jax.Array]:
+    """(p, cap, ar) x k -> data (p, k, cap, ar), valid (p, k, cap)."""
+    assert len({(t.cap, t.arity) for t in tables}) == 1, (
+        "batched group must have uniform shard shapes: "
+        + str([(t.cap, t.arity) for t in tables])
+    )
+    data = jnp.stack([t.data for t in tables], axis=1)
+    valid = jnp.stack([t.valid for t in tables], axis=1)
+    return data, valid
+
+
+def _unstack(data, valid, schemas: Sequence[Tuple[str, ...]]) -> List[DTable]:
+    return [DTable(data[:, i], valid[:, i], s) for i, s in enumerate(schemas)]
+
+
+def _key_array(keys: Sequence[Sequence[int]], p: int) -> jax.Array:
+    """Per-instance key column indices as (p, k, n_keys) traced data."""
+    assert len({len(k) for k in keys}) == 1, "key-column count must be uniform"
+    ks = np.asarray([list(k) for k in keys], np.int32).reshape(len(keys), -1)
+    return jnp.broadcast_to(jnp.asarray(ks), (p,) + ks.shape)
+
+
+def _seed_array(seeds: Sequence[int], p: int) -> jax.Array:
+    s = jnp.asarray([int(x) & 0xFFFFFFFF for x in seeds], jnp.uint32)
+    return jnp.broadcast_to(s, (p, len(seeds)))
+
+
+def _per_op_stats(sent, dropped) -> List[Dict[str, int]]:
+    """(p, k) shard stats -> one {'sent','dropped'} dict per instance."""
+    s = np.asarray(sent).sum(axis=0)
+    d = np.asarray(dropped).sum(axis=0)
+    return [{"sent": int(a), "dropped": int(b)} for a, b in zip(s, d)]
+
+
+def _take(data: jax.Array, cols: jax.Array) -> jax.Array:
+    return jnp.take(data, cols, axis=1)
+
+
+def _dests(keys: jax.Array, valid: jax.Array, p: int, seed) -> jax.Array:
+    """Destinations from a pre-gathered (cap, n_keys) key matrix — hashes
+    columns in order, identical to ``dests_for(data, key_cols, ...)``."""
+    return dests_for(keys, valid, tuple(range(keys.shape[1])), p, seed)
+
+
+# ------------------------------------------------------------ hash semijoin
+def _semijoin_one(sd, sv, rd, rv, seed, sk, rk, *, p, c_out_s, c_out_r, cap_s, cap_r):
+    nk = rk.shape[0]
+    kcols = tuple(range(nk))
+    # ship only the deduplicated key projection of R (as in ops._semijoin_shard)
+    rkeys = _take(rd, rk)
+    rkv = local_dedup_mask(rkeys, rv, kcols)
+    rkeys = jnp.where(rkv[:, None], rkeys, 0)
+    rk2, rkv2, sent_r, dsr, drr = exchange(
+        rkeys, rkv, _dests(rkeys, rkv, p, seed), p=p, c_out=c_out_r, cap_recv=cap_r
+    )
+    rkv2 = local_dedup_mask(rk2, rkv2, kcols)
+    s2, s2v, sent_s, dss, drs = exchange(
+        sd, sv, _dests(_take(sd, sk), sv, p, seed), p=p, c_out=c_out_s, cap_recv=cap_s
+    )
+    mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, rk2, rkv2, kcols)
+    s2 = jnp.where(mask[:, None], s2, 0)
+    return s2, mask, sent_r + sent_s, dsr + drr + dss + drs
+
+
+def _semijoin_shard_b(sd, sv, rd, rv, seed, sk, rk, *, p, c_out_s, c_out_r, cap_s, cap_r):
+    one = functools.partial(
+        _semijoin_one, p=p, c_out_s=c_out_s, c_out_r=c_out_r, cap_s=cap_s, cap_r=cap_r
+    )
+    return jax.vmap(one)(sd, sv, rd, rv, seed, sk, rk)
+
+
+def dist_semijoin_many(
+    spmd: SPMD,
+    ss: Sequence[DTable],
+    rs: Sequence[DTable],
+    *,
+    seeds: Sequence[int],
+    cap_recv: Tuple[int, int],
+    c_out: Optional[Tuple[int, int]] = None,
+) -> Tuple[List[DTable], List[Dict]]:
+    """k-fold S_i |>< R_i in ONE dispatch; semantics of ``dist_semijoin``."""
+    p = spmd.p
+    shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
+    assert all(shareds), "semijoin with no shared attrs in batch"
+    c_out = c_out or (ss[0].cap, rs[0].cap)
+    sd, sv = _stack(ss)
+    rd, rv = _stack(rs)
+    sk = _key_array([s.cols(sh) for s, sh in zip(ss, shareds)], p)
+    rk = _key_array([r.cols(sh) for r, sh in zip(rs, shareds)], p)
+    od, ov, sent, dropped = spmd.run(
+        _semijoin_shard_b,
+        sd, sv, rd, rv, _seed_array(seeds, p), sk, rk,
+        p=p, c_out_s=c_out[0], c_out_r=c_out[1],
+        cap_s=cap_recv[0], cap_r=cap_recv[1],
+    )
+    return _unstack(od, ov, [s.schema for s in ss]), _per_op_stats(sent, dropped)
+
+
+# ---------------------------------------------------------------- hash join
+def _join_one(ad, av, bd, bv, seed, ak, bk, bkeep, *,
+              p, c_out_a, c_out_b, cap_a, cap_b, out_cap):
+    nk = ak.shape[0]
+    kcols = tuple(range(nk))
+    a2, a2v, sent_a, dsa, dra = exchange(
+        ad, av, _dests(_take(ad, ak), av, p, seed), p=p, c_out=c_out_a, cap_recv=cap_a
+    )
+    b2, b2v, sent_b, dsb, drb = exchange(
+        bd, bv, _dests(_take(bd, bk), bv, p, seed), p=p, c_out=c_out_b, cap_recv=cap_b
+    )
+    ra, rb = dense_ranks(_take(a2, ak), a2v, kcols, _take(b2, bk), b2v, kcols)
+    out, out_v, over = local_join_ranked(a2, a2v, ra, b2, b2v, rb, bkeep, out_cap)
+    return out, out_v, sent_a + sent_b, dsa + dra + dsb + drb + over
+
+
+def _join_shard_b(ad, av, bd, bv, seed, ak, bk, bkeep, *,
+                  p, c_out_a, c_out_b, cap_a, cap_b, out_cap):
+    one = functools.partial(
+        _join_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b,
+        cap_a=cap_a, cap_b=cap_b, out_cap=out_cap,
+    )
+    return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, bkeep)
+
+
+def dist_join_many(
+    spmd: SPMD,
+    as_: Sequence[DTable],
+    bs: Sequence[DTable],
+    *,
+    seeds: Sequence[int],
+    out_cap: int,
+    c_out: Optional[Tuple[int, int]] = None,
+    cap_recv: Optional[Tuple[int, int]] = None,
+) -> Tuple[List[DTable], List[Dict]]:
+    """k-fold A_i |><| B_i in ONE dispatch; semantics of ``dist_join``."""
+    p = spmd.p
+    shareds = [[x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)]
+    keeps = [
+        tuple(i for i, x in enumerate(b.schema) if x not in set(a.schema))
+        for a, b in zip(as_, bs)
+    ]
+    schemas = [schema_join(a.schema, b.schema) for a, b in zip(as_, bs)]
+    c_out = c_out or (as_[0].cap, bs[0].cap)
+    cap_recv = cap_recv or (p * as_[0].cap, p * bs[0].cap)
+    ad, av = _stack(as_)
+    bd, bv = _stack(bs)
+    ak = _key_array([a.cols(sh) for a, sh in zip(as_, shareds)], p)
+    bk = _key_array([b.cols(sh) for b, sh in zip(bs, shareds)], p)
+    bkeep = _key_array(keeps, p)
+    od, ov, sent, dropped = spmd.run(
+        _join_shard_b,
+        ad, av, bd, bv, _seed_array(seeds, p), ak, bk, bkeep,
+        p=p, c_out_a=c_out[0], c_out_b=c_out[1],
+        cap_a=cap_recv[0], cap_b=cap_recv[1], out_cap=out_cap,
+    )
+    return _unstack(od, ov, schemas), _per_op_stats(sent, dropped)
+
+
+# ----------------------------------------------------------- hash intersect
+def _intersect_one(ad, av, bd, bv, seed, bcols, *, p, c_out_a, c_out_b, cap_a, cap_b):
+    acols = tuple(range(ad.shape[1]))
+    a2, a2v, sent_a, dsa, dra = exchange(
+        ad, av, _dests(ad, av, p, seed), p=p, c_out=c_out_a, cap_recv=cap_a
+    )
+    b2, b2v, sent_b, dsb, drb = exchange(
+        bd, bv, _dests(_take(bd, bcols), bv, p, seed), p=p, c_out=c_out_b, cap_recv=cap_b
+    )
+    mask = local_semijoin_mask(a2, a2v, acols, _take(b2, bcols), b2v, acols)
+    a2 = jnp.where(mask[:, None], a2, 0)
+    return a2, mask, sent_a + sent_b, dsa + dra + dsb + drb
+
+
+def _intersect_shard_b(ad, av, bd, bv, seed, bcols, *, p, c_out_a, c_out_b, cap_a, cap_b):
+    one = functools.partial(
+        _intersect_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b, cap_a=cap_a, cap_b=cap_b
+    )
+    return jax.vmap(one)(ad, av, bd, bv, seed, bcols)
+
+
+def dist_intersect_many(
+    spmd: SPMD,
+    as_: Sequence[DTable],
+    bs: Sequence[DTable],
+    *,
+    seeds: Sequence[int],
+    cap_recv: Tuple[int, int],
+    c_out: Optional[Tuple[int, int]] = None,
+) -> Tuple[List[DTable], List[Dict]]:
+    """k-fold A_i ^ B_i (same attr sets) in ONE dispatch."""
+    p = spmd.p
+    for a, b in zip(as_, bs):
+        assert set(a.schema) == set(b.schema), (a.schema, b.schema)
+    c_out = c_out or (as_[0].cap, bs[0].cap)
+    ad, av = _stack(as_)
+    bd, bv = _stack(bs)
+    bcols = _key_array([b.cols(a.schema) for a, b in zip(as_, bs)], p)
+    od, ov, sent, dropped = spmd.run(
+        _intersect_shard_b,
+        ad, av, bd, bv, _seed_array(seeds, p), bcols,
+        p=p, c_out_a=c_out[0], c_out_b=c_out[1],
+        cap_a=cap_recv[0], cap_b=cap_recv[1],
+    )
+    return _unstack(od, ov, [a.schema for a in as_]), _per_op_stats(sent, dropped)
+
+
+# --------------------------------------------------------------- hash dedup
+def _dedup_one(d, v, seed, *, p, c_out, cap_recv):
+    d2, v2, sent, ds, dr = exchange(
+        d, v, _dests(d, v, p, seed), p=p, c_out=c_out, cap_recv=cap_recv
+    )
+    mask = local_dedup_mask(d2, v2, tuple(range(d.shape[1])))
+    d2 = jnp.where(mask[:, None], d2, 0)
+    return d2, mask, sent, ds + dr
+
+
+def _dedup_shard_b(d, v, seed, *, p, c_out, cap_recv):
+    one = functools.partial(_dedup_one, p=p, c_out=c_out, cap_recv=cap_recv)
+    return jax.vmap(one)(d, v, seed)
+
+
+def dist_dedup_many(
+    spmd: SPMD,
+    ts: Sequence[DTable],
+    *,
+    seeds: Sequence[int],
+    cap_recv: int,
+    c_out: Optional[int] = None,
+) -> Tuple[List[DTable], List[Dict]]:
+    p = spmd.p
+    c_out = c_out or ts[0].cap
+    d, v = _stack(ts)
+    od, ov, sent, dropped = spmd.run(
+        _dedup_shard_b, d, v, _seed_array(seeds, p),
+        p=p, c_out=c_out, cap_recv=cap_recv,
+    )
+    return _unstack(od, ov, [t.schema for t in ts]), _per_op_stats(sent, dropped)
+
+
+# ---------------------------------------------- grid semijoin (Lemma 10)
+def _grid_semijoin_mark_one(sd, sv, rd, rv, sk, rk, *,
+                            g_s, g_r, s_cap, r_cap, p, c_out_s, c_out_r, cap_s, cap_r):
+    nk = rk.shape[0]
+    kcols = tuple(range(nk))
+    grp_s = _position_groups(sv, g_s, s_cap, p)
+    offs_s = jnp.arange(g_r, dtype=jnp.int32)
+    dest_s = jnp.where(
+        (grp_s < g_s)[:, None], grp_s[:, None] * g_r + offs_s[None, :], p
+    ).astype(jnp.int32)
+    s2, s2v, sent_s, dss, drs = exchange_multi(
+        sd, sv, dest_s, p=p, c_out=c_out_s, cap_recv=cap_s
+    )
+    rkeys = _take(rd, rk)
+    rkv = local_dedup_mask(rkeys, rv, kcols)
+    rkeys = jnp.where(rkv[:, None], rkeys, 0)
+    grp_r = _position_groups(rkv, g_r, r_cap, p)
+    offs_r = jnp.arange(g_s, dtype=jnp.int32) * g_r
+    dest_r = jnp.where(
+        (grp_r < g_r)[:, None], grp_r[:, None] + offs_r[None, :], p
+    ).astype(jnp.int32)
+    r2, r2v, sent_r, dsr, drr = exchange_multi(
+        rkeys, rkv, dest_r, p=p, c_out=c_out_r, cap_recv=cap_r
+    )
+    mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, r2, r2v, kcols)
+    s2 = jnp.where(mask[:, None], s2, 0)
+    return s2, mask, sent_s + sent_r, dss + drs + dsr + drr
+
+
+def _grid_semijoin_mark_b(sd, sv, rd, rv, sk, rk, *,
+                          g_s, g_r, s_cap, r_cap, p, c_out_s, c_out_r, cap_s, cap_r):
+    one = functools.partial(
+        _grid_semijoin_mark_one,
+        g_s=g_s, g_r=g_r, s_cap=s_cap, r_cap=r_cap, p=p,
+        c_out_s=c_out_s, c_out_r=c_out_r, cap_s=cap_s, cap_r=cap_r,
+    )
+    return jax.vmap(one)(sd, sv, rd, rv, sk, rk)
+
+
+def grid_semijoin_many(
+    spmd: SPMD,
+    ss: Sequence[DTable],
+    rs: Sequence[DTable],
+    *,
+    seeds: Sequence[int],
+    out_cap: int,
+) -> Tuple[List[DTable], List[Dict]]:
+    """k-fold Lemma-10 grid semijoin: one MARK dispatch for the whole group
+    + one batched hash-dedup dispatch for the marked duplicates (2 claimed
+    BSP rounds either way)."""
+    p = spmd.p
+    s0, r0 = ss[0], rs[0]
+    shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
+    assert all(shareds)
+    sz_s, sz_r = s0.cap * s0.p, r0.cap * r0.p
+    g_s, g_r = _grid_shares([sz_s, sz_r], p)
+    cap_s = -(-sz_s // g_s)
+    cap_r = -(-sz_r // g_r)
+    sd, sv = _stack(ss)
+    rd, rv = _stack(rs)
+    sk = _key_array([s.cols(sh) for s, sh in zip(ss, shareds)], p)
+    rk = _key_array([r.cols(sh) for r, sh in zip(rs, shareds)], p)
+    md, mv, sent, dropped = spmd.run(
+        _grid_semijoin_mark_b,
+        sd, sv, rd, rv, sk, rk,
+        g_s=g_s, g_r=g_r, s_cap=s0.cap, r_cap=r0.cap, p=p,
+        c_out_s=s0.cap * g_r, c_out_r=r0.cap * g_s,
+        cap_s=cap_s, cap_r=cap_r,
+    )
+    marked = _unstack(md, mv, [s.schema for s in ss])
+    mark_stats = _per_op_stats(sent, dropped)
+    ded, ded_stats = dist_dedup_many(
+        spmd, marked, seeds=[s + 7 for s in seeds],
+        c_out=marked[0].cap, cap_recv=out_cap,
+    )
+    stats = [
+        {"sent": m["sent"] + d["sent"], "dropped": m["dropped"] + d["dropped"]}
+        for m, d in zip(mark_stats, ded_stats)
+    ]
+    return ded, stats
+
+
+# -------------------------------------------------- grid join (Lemma 8, w=2)
+def _grid_send_shard_b(data, valid, *, g_self, stride, offsets, p, cap, c_out, cap_recv):
+    one = functools.partial(
+        _grid_send_one, g_self=g_self, stride=stride, offsets=offsets,
+        p=p, cap=cap, c_out=c_out, cap_recv=cap_recv,
+    )
+    return jax.vmap(one)(data, valid)
+
+
+def _local_join_one(ad, av, bd, bv, ak, bk, bkeep, *, out_cap):
+    nk = ak.shape[0]
+    kcols = tuple(range(nk))
+    ra, rb = dense_ranks(_take(ad, ak), av, kcols, _take(bd, bk), bv, kcols)
+    out, out_v, over = local_join_ranked(ad, av, ra, bd, bv, rb, bkeep, out_cap)
+    return out, out_v, jnp.int32(0), over
+
+
+def _local_join_shard_b(ad, av, bd, bv, ak, bk, bkeep, *, out_cap):
+    one = functools.partial(_local_join_one, out_cap=out_cap)
+    return jax.vmap(one)(ad, av, bd, bv, ak, bk, bkeep)
+
+
+def grid_join_many(
+    spmd: SPMD,
+    as_: Sequence[DTable],
+    bs: Sequence[DTable],
+    *,
+    out_cap: int,
+) -> Tuple[List[DTable], List[Dict]]:
+    """k-fold Lemma-8 grid join (w=2): two batched position-group send
+    dispatches + one batched local-join dispatch — one claimed BSP round."""
+    p = spmd.p
+    a0, b0 = as_[0], bs[0]
+    sizes = [a0.cap * a0.p, b0.cap * b0.p]
+    g = _grid_shares(sizes, p)
+    # mixed-radix grid: table 0 strides by g[1], table 1 strides by 1
+    strides = [g[1], 1]
+    plans = [
+        # (g_self, stride, offsets over the OTHER dim)
+        (g[0], strides[0], tuple(c * strides[1] for c in range(g[1]))),
+        (g[1], strides[1], tuple(c * strides[0] for c in range(g[0]))),
+    ]
+    parts = []
+    send_stats = []
+    for tables, (g_self, stride, offs) in zip((as_, bs), plans):
+        t0 = tables[0]
+        d, v = _stack(tables)
+        rd, rv, stats = spmd.run(
+            _grid_send_shard_b, d, v,
+            g_self=g_self, stride=stride, offsets=offs, p=p, cap=t0.cap,
+            c_out=t0.cap * (g[0] * g[1] // g_self),
+            cap_recv=-(-(t0.p * t0.cap) // g_self),
+        )
+        parts.append((rd, rv))
+        send_stats.append(_per_op_stats(stats["sent"], stats["dropped"]))
+    shareds = [[x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)]
+    keeps = [
+        tuple(i for i, x in enumerate(b.schema) if x not in set(a.schema))
+        for a, b in zip(as_, bs)
+    ]
+    schemas = [schema_join(a.schema, b.schema) for a, b in zip(as_, bs)]
+    ak = _key_array([a.cols(sh) for a, sh in zip(as_, shareds)], p)
+    bk = _key_array([b.cols(sh) for b, sh in zip(bs, shareds)], p)
+    bkeep = _key_array(keeps, p)
+    (ad, av), (bd, bv) = parts
+    od, ov, sent_j, over = spmd.run(
+        _local_join_shard_b, ad, av, bd, bv, ak, bk, bkeep, out_cap=out_cap
+    )
+    join_stats = _per_op_stats(sent_j, over)
+    stats = [
+        {
+            "sent": sa["sent"] + sb["sent"] + sj["sent"],
+            "dropped": sa["dropped"] + sb["dropped"] + sj["dropped"],
+        }
+        for sa, sb, sj in zip(send_stats[0], send_stats[1], join_stats)
+    ]
+    return _unstack(od, ov, schemas), stats

@@ -23,7 +23,7 @@ from .spmd import AXIS, SPMD
 from .table import DTable, schema_join
 
 
-def _position_groups(valid: jax.Array, g: int, cap: int) -> jax.Array:
+def _position_groups(valid: jax.Array, g: int, cap: int, p: int) -> jax.Array:
     """Group id in [0,g) for each row by *global position* (shard-major).
 
     Positions are globally contiguous: shard s, local slot k -> s*cap + k,
@@ -31,7 +31,6 @@ def _position_groups(valid: jax.Array, g: int, cap: int) -> jax.Array:
     global slot space — size bounds hold regardless of key values (the
     paper's 'disjoint groups of size M/w').
     """
-    p = jax.lax.axis_size(AXIS)
     s = jax.lax.axis_index(AXIS)
     n = valid.shape[0]
     pos = s * cap + jnp.arange(n)
@@ -144,7 +143,7 @@ def grid_multiway_join(
 
 
 def _grid_send_one(data, valid, *, g_self, stride, offsets, p, cap, c_out, cap_recv):
-    grp = _position_groups(valid, g_self, cap)
+    grp = _position_groups(valid, g_self, cap, p)
     offs = jnp.asarray(offsets, jnp.int32)
     dests = jnp.where(
         (grp < g_self)[:, None], grp[:, None] * stride + offs[None, :], p
@@ -170,7 +169,7 @@ def _grid_semijoin_mark(
     """Round 1 of Lemma 10: grid (g_s x g_r); reducer (i,j) holds S group i
     and R-projection group j; emits S rows matched by its R block (an S row
     appears in g_r reducers -> up to g_r 'duplicates', all kept here)."""
-    grp_s = _position_groups(s_valid, g_s, s_cap)
+    grp_s = _position_groups(s_valid, g_s, s_cap, p)
     offs_s = jnp.arange(g_r, dtype=jnp.int32)
     dest_s = jnp.where(
         (grp_s < g_s)[:, None], grp_s[:, None] * g_r + offs_s[None, :], p
@@ -179,7 +178,7 @@ def _grid_semijoin_mark(
         s_data, s_valid, dest_s, p=p, c_out=c_out_s, cap_recv=cap_s
     )
     rk, rkv = local_project(r_data, r_valid, r_key, dedup=True)
-    grp_r = _position_groups(rkv, g_r, r_cap)
+    grp_r = _position_groups(rkv, g_r, r_cap, p)
     offs_r = jnp.arange(g_s, dtype=jnp.int32) * g_r
     dest_r = jnp.where(
         (grp_r < g_r)[:, None], grp_r[:, None] + offs_r[None, :], p

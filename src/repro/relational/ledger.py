@@ -13,7 +13,8 @@ class RoundRecord:
     ops: List[str]
     comm_tuples: int
     note: str = ""
-    n_rounds: int = 1  # engine BSP rounds consumed (parallel ops: the max)
+    n_rounds: int = 1  # CLAIMED engine BSP rounds (parallel ops: the max)
+    dispatches: int = 0  # MEASURED SPMD program dispatches (0 = not measured)
 
 
 class Ledger:
@@ -27,6 +28,16 @@ class Ledger:
         return sum(r.n_rounds for r in self.records)
 
     @property
+    def measured_dispatches(self) -> int:
+        """Total SPMD program dispatches actually issued across rounds.
+
+        ``rounds`` is what the schedule *claims* under the BSP model (a
+        round of k parallel ops counts once); this is what the engine
+        *did*.  With round fusion the two converge; without it this is
+        ~ops-per-round times larger."""
+        return sum(r.dispatches for r in self.records)
+
+    @property
     def comm_tuples(self) -> int:
         """Total communication: shuffled tuples + output tuples (the paper
         counts reducer output as communication)."""
@@ -37,10 +48,19 @@ class Ledger:
         return sum(r.comm_tuples for r in self.records)
 
     def add_round(
-        self, phase: str, ops: List[str], comm: int, note: str = "", n_rounds: int = 1
+        self,
+        phase: str,
+        ops: List[str],
+        comm: int,
+        note: str = "",
+        n_rounds: int = 1,
+        dispatches: int = 0,
     ) -> None:
         self.records.append(
-            RoundRecord(len(self.records), phase, list(ops), int(comm), note, n_rounds)
+            RoundRecord(
+                len(self.records), phase, list(ops), int(comm), note, n_rounds,
+                int(dispatches),
+            )
         )
 
     def rounds_in_phase(self, phase: str) -> int:
@@ -52,11 +72,13 @@ class Ledger:
     def summary(self) -> Dict[str, Any]:
         phases: Dict[str, Dict[str, int]] = {}
         for r in self.records:
-            ph = phases.setdefault(r.phase, {"rounds": 0, "comm": 0})
+            ph = phases.setdefault(r.phase, {"rounds": 0, "comm": 0, "dispatches": 0})
             ph["rounds"] += r.n_rounds
             ph["comm"] += r.comm_tuples
+            ph["dispatches"] += r.dispatches
         return {
             "rounds": self.rounds,
+            "measured_dispatches": self.measured_dispatches,
             "comm_tuples": self.comm_tuples,
             "shuffle_tuples": self.shuffle_tuples,
             "output_tuples": self.output_tuples,
@@ -67,9 +89,13 @@ class Ledger:
     def __repr__(self) -> str:
         s = self.summary()
         lines = [
-            f"Ledger(rounds={s['rounds']}, comm={s['comm_tuples']}, "
-            f"out={s['output_tuples']}, retries={s['retries']})"
+            f"Ledger(rounds={s['rounds']}, dispatches={s['measured_dispatches']}, "
+            f"comm={s['comm_tuples']}, out={s['output_tuples']}, "
+            f"retries={s['retries']})"
         ]
         for ph, v in s["phases"].items():
-            lines.append(f"  {ph}: rounds={v['rounds']} comm={v['comm']}")
+            lines.append(
+                f"  {ph}: rounds={v['rounds']} dispatches={v['dispatches']} "
+                f"comm={v['comm']}"
+            )
         return "\n".join(lines)

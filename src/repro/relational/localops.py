@@ -50,8 +50,22 @@ def local_join(
     Output rows are ``a_row ++ b_row[b_keep]`` (caller computes the joined
     schema).  Returns (out_data (out_cap, a_ar + len(b_keep)), out_valid,
     overflow_count)."""
-    na, nb = a_data.shape[0], b_data.shape[0]
     ra, rb = dense_ranks(a_data, a_valid, a_key, b_data, b_valid, b_key)
+    return local_join_ranked(a_data, a_valid, ra, b_data, b_valid, rb, b_keep, out_cap)
+
+
+def local_join_ranked(
+    a_data: jax.Array, a_valid: jax.Array, ra: jax.Array,
+    b_data: jax.Array, b_valid: jax.Array, rb: jax.Array,
+    b_keep,
+    out_cap: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Join expansion given precomputed shared key ranks (``dense_ranks``).
+
+    ``b_keep`` may be a static tuple OR a traced int32 array (the batched
+    path passes per-instance column indices as data); only its LENGTH must
+    be static."""
+    na, nb = a_data.shape[0], b_data.shape[0]
     rb_sort_key = jnp.where(b_valid, rb, _I32MAX)
     order_b = jnp.argsort(rb_sort_key)
     rb_sorted = rb_sort_key[order_b]
@@ -69,7 +83,11 @@ def local_join(
     j = order_b[j_sorted]
     out_valid = t < total
     left = a_data[i_c]
-    right = b_data[j][:, jnp.asarray(b_keep, jnp.int32)] if b_keep else jnp.zeros((out_cap, 0), a_data.dtype)
+    right = (
+        b_data[j][:, jnp.asarray(b_keep, jnp.int32)]
+        if len(b_keep)
+        else jnp.zeros((out_cap, 0), a_data.dtype)
+    )
     out = jnp.concatenate([left, right], axis=1)
     out = jnp.where(out_valid[:, None], out, 0)
     overflow = jnp.maximum(total - out_cap, 0)

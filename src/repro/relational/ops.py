@@ -21,6 +21,7 @@ from .localops import (
     local_dedup_mask,
     local_intersect_mask,
     local_join,
+    local_join_count,
     local_project,
     local_semijoin_mask,
 )
@@ -73,8 +74,8 @@ def _join_shard(
     a2, a2v, sent_a, dsa, dra = exchange(a_data, a_valid, da, p=p, c_out=c_out_a, cap_recv=cap_a)
     db = dests_for(b_data, b_valid, b_key, p, seed)
     b2, b2v, sent_b, dsb, drb = exchange(b_data, b_valid, db, p=p, c_out=c_out_b, cap_recv=cap_b)
-    a_key2 = tuple(range_idx for range_idx in a_key)  # same cols post-shuffle
-    out, out_v, over = local_join(a2, a2v, b2, b2v, a_key2, b_key, b_keep, out_cap)
+    # key columns are unchanged by the shuffle: join on a_key/b_key directly
+    out, out_v, over = local_join(a2, a2v, b2, b2v, a_key, b_key, b_keep, out_cap)
     return out, out_v, _stats(sent_a + sent_b, dsa + dra + dsb + drb + over)
 
 
@@ -318,16 +319,53 @@ def local_multiway_join(
     return DTable(od, ov, schema), agg_stats(stats)
 
 
+# ------------------------------------------------------ join output counting
+def _join_count_shard(
+    a_data, a_valid, b_data, b_valid, seed, *,
+    a_key, b_key, p, c_out_a, c_out_b, cap_a, cap_b,
+):
+    """Shuffle ONLY the key projections with the join's hash plan and count
+    the exact per-shard join output (capacity planning, no payload moved)."""
+    ak, akv = local_project(a_data, a_valid, a_key, dedup=False)
+    kc = tuple(range(len(a_key)))
+    da = dests_for(ak, akv, kc, p, seed)
+    a2, a2v, *_ = exchange(ak, akv, da, p=p, c_out=c_out_a, cap_recv=cap_a)
+    bk, bkv = local_project(b_data, b_valid, b_key, dedup=False)
+    db = dests_for(bk, bkv, kc, p, seed)
+    b2, b2v, *_ = exchange(bk, bkv, db, p=p, c_out=c_out_b, cap_recv=cap_b)
+    return local_join_count(a2, a2v, b2, b2v, kc, kc)
+
+
+def dist_join_count(spmd: SPMD, a: DTable, b: DTable, *, seed: int):
+    """Exact per-shard output size of ``dist_join(a, b, seed=seed)`` with
+    default receive capacities — (p,) int array.  Used by the capacity
+    manager to pre-size a blown join's retry instead of guessing."""
+    shared = [x for x in a.schema if x in b.schema]
+    p = spmd.p
+    counts = spmd.run(
+        _join_count_shard,
+        a.data, a.valid, b.data, b.valid, spmd.seeds(seed),
+        a_key=a.cols(shared), b_key=b.cols(shared),
+        p=p,
+        c_out_a=a.cap, c_out_b=b.cap,
+        cap_a=p * a.cap, cap_b=p * b.cap,
+    )
+    return np.asarray(counts)
+
+
 # -------------------------------------------------------------------- project
 def _project_shard(data, valid, *, cols, dedup):
     d, v = local_project(data, valid, cols, dedup)
     return d, v
 
 
-def dist_project(spmd: SPMD, t: DTable, attrs: Sequence[str], *, dedup: bool = False) -> DTable:
-    """Shard-local projection (no communication)."""
+def dist_project(
+    spmd: SPMD, t: DTable, attrs: Sequence[str], *, dedup: bool = False
+) -> Tuple[DTable, Dict]:
+    """Shard-local projection (no communication).  Returns (table, stats)
+    like every other operator; stats are identically zero."""
     d, v = spmd.run(_project_shard, t.data, t.valid, cols=t.cols(attrs), dedup=dedup)
-    return DTable(d, v, tuple(attrs))
+    return DTable(d, v, tuple(attrs)), {"sent": 0, "dropped": 0}
 
 
 def check_no_drop(stats: Dict[str, int]) -> None:

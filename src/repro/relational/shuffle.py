@@ -7,6 +7,11 @@ sends of Lemma 8 grid joins / Shares hypercube).
 
 Overflow anywhere is reported, never silently dropped — the driver retries
 the round with doubled capacities (the paper's abort-and-retry semantics).
+
+Both exchanges are batchable: the collective refers to the named reducer
+axis only, so wrapping the calling shard function in an inner (anonymous)
+``jax.vmap`` fuses k independent shuffles into one program with one
+``all_to_all`` — the mechanism behind ``relational.batched`` round fusion.
 """
 from __future__ import annotations
 

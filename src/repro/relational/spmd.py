@@ -31,6 +31,10 @@ class SPMD:
         if mesh is not None:
             assert mesh.shape[AXIS] == p, (mesh.shape, p)
         self._cache: Dict[Any, Callable] = {}
+        # program dispatches actually issued (one per ``run`` call, compiled
+        # or cache-hit) — the *measured* counterpart of the ledger's claimed
+        # BSP rounds; round fusion is proven by this counter going down.
+        self.dispatch_count: int = 0
 
     # -- execution --------------------------------------------------------
     def _build(self, fn: Callable, statics: Tuple) -> Callable:
@@ -62,6 +66,7 @@ class SPMD:
         key = (fn, tuple(sorted(statics.items())))
         if key not in self._cache:
             self._cache[key] = self._build(fn, tuple(sorted(statics.items())))
+        self.dispatch_count += 1
         return self._cache[key](*args)
 
     def seeds(self, seed: int) -> jnp.ndarray:

@@ -2,6 +2,8 @@
 backend, several shard counts), incl. hypothesis property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -150,7 +152,8 @@ def test_hypercube_grid_join_two_relations():
 def test_project_dedup():
     spmd = SPMD(3)
     t = mk([(1, 2), (1, 3), (2, 2)], ("A", "B"), 3)
-    pr = dist_project(spmd, t, ("A",), dedup=True)
+    pr, pr_stats = dist_project(spmd, t, ("A",), dedup=True)
+    assert pr_stats == {"sent": 0, "dropped": 0}
     # dedup is per-shard; global count may exceed distinct but set is right
     assert pr.to_set() <= {(1,), (2,)}
     assert {(1,), (2,)} <= pr.to_set()
