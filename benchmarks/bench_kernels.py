@@ -1,6 +1,15 @@
-"""Kernel micro-benchmarks: correctness-at-size plus CPU wall time of the
-jnp reference paths (the Pallas kernels themselves are TPU-target; on CPU
-they run in interpret mode and are validated in tests/test_kernels.py)."""
+"""Kernel benchmarks, micro AND in situ.
+
+Micro: correctness-at-size plus CPU wall time of the jnp reference paths
+(the Pallas kernels themselves are TPU-target; on CPU they run in
+interpret mode and are validated in tests/).
+
+End-to-end: the same kernels INSIDE a real ``gym()`` run — a full S_8
+query executed under ``local_backend='jnp'`` vs ``'pallas'`` (interpret
+mode on CPU).  Asserts bit parity (rows, comm_tuples, retries) and
+reports both wall clocks.  On CPU the pallas number measures the
+interpret-mode tax, not kernel speed; on a TPU the same harness measures
+the real thing."""
 from __future__ import annotations
 
 import time
@@ -9,9 +18,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.gym import GymConfig, gym
+from repro.core.queries import star_ghd, star_query
+from repro.data.synthetic import star_data_sparse
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.semijoin_probe import semijoin_probe
+from repro.kernels.sorted_probe import sorted_probe_ranges
 
 
 def _time(f, *args, n=3):
@@ -35,6 +48,13 @@ def run() -> list:
     t = _time(jax.jit(ref.semijoin_probe_ref), q, keys)
     out.append(dict(bench="kernel_probe", n=4096, m=8192, ref_ms=round(t * 1e3, 3)))
 
+    # sorted probe ranges: interpret kernel == ref at benchmark size
+    lo, hi = sorted_probe_ranges(q, keys, interpret=True)
+    rlo, rhi = ref.sorted_probe_ranges_ref(q, keys)
+    assert bool((lo == rlo).all()) and bool((hi == rhi).all())
+    t = _time(jax.jit(ref.sorted_probe_ranges_ref), q, keys)
+    out.append(dict(bench="kernel_ranges", n=4096, m=8192, ref_ms=round(t * 1e3, 3)))
+
     # flash attention: interpret kernel ~ ref at a serving-ish size
     qq = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
     kk = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
@@ -46,4 +66,38 @@ def run() -> list:
         jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, causal=True)), qq, kk, vv
     )
     out.append(dict(bench="kernel_attn", shape="1x4x256x64", ref_ms=round(t * 1e3, 3)))
+
+    # ---- end-to-end: the kernels inside a real GymDriver run ------------
+    from repro.relational.spmd import SPMD
+
+    q8, g8, data8 = star_query(8), star_ghd(8), star_data_sparse(8, seed=21)
+    res = {}
+    for backend in ("jnp", "pallas"):
+        cfg = GymConfig(strategy="hash", seed=23, local_backend=backend)
+        # jit caches live on the SPMD instance: share one across the warm
+        # and timed runs so the timed number is execution, not compilation
+        spmd = SPMD(8)
+        gym(q8, data8, ghd=g8, p=8, spmd=spmd, config=cfg)  # warm the caches
+        t0 = time.time()
+        rows, _, led = gym(q8, data8, ghd=g8, p=8, spmd=spmd, config=cfg)
+        secs = time.time() - t0
+        res[backend] = (rows, led)
+        out.append(
+            dict(
+                bench="kernel_e2e_gym",
+                query="S_8",
+                local_backend=backend,
+                rows=len(rows),
+                comm=led.comm_tuples,
+                retries=led.retries,
+                dispatches=led.measured_dispatches,
+                secs=round(secs, 2),
+            )
+        )
+    rows_j, led_j = res["jnp"]
+    rows_p, led_p = res["pallas"]
+    # the backends must be bit-identical in results AND cost accounting
+    assert {tuple(r) for r in rows_j} == {tuple(r) for r in rows_p}
+    assert led_j.comm_tuples == led_p.comm_tuples
+    assert led_j.retries == led_p.retries
     return out

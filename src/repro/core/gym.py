@@ -50,6 +50,7 @@ class GymConfig:
     max_retries: int = 12
     count_retries_comm: bool = True  # aborted rounds still moved tuples
     fused: bool = True  # one SPMD dispatch per homogeneous op group
+    local_backend: str = "jnp"  # shard-local hot loops: 'jnp' | 'pallas'
 
 
 class GymDriver:
@@ -89,18 +90,12 @@ class GymDriver:
             )
 
         cfg = self.config
-        self.capman = CapacityManager(spmd, growth=cfg.cap_growth)
+        self.capman = CapacityManager(
+            spmd, growth=cfg.cap_growth, local_backend=cfg.local_backend
+        )
         for v in self.ghd.nodes():
             self.capman.ensure(v, self._init_cap(v))
-        self.executor = PhysicalExecutor(
-            spmd,
-            cfg.strategy,
-            self.capman,
-            seed=cfg.seed,
-            max_retries=cfg.max_retries,
-            count_retries_comm=cfg.count_retries_comm,
-            fuse=cfg.fused,
-        )
+        self.executor = self._make_executor()
 
         sched = dym_d_schedule if cfg.schedule == "dym_d" else dym_n_schedule
         self.schedule: List[Round] = sched(self.ghd)
@@ -112,6 +107,19 @@ class GymDriver:
         self.cursor: int = -1  # -1 = materialization pending
         self.done = False
         self.result: Optional[DTable] = None
+
+    def _make_executor(self) -> PhysicalExecutor:
+        cfg = self.config
+        return PhysicalExecutor(
+            self.spmd,
+            cfg.strategy,
+            self.capman,
+            seed=cfg.seed,
+            max_retries=cfg.max_retries,
+            count_retries_comm=cfg.count_retries_comm,
+            fuse=cfg.fused,
+            local_backend=cfg.local_backend,
+        )
 
     # caps live in the capacity manager; kept as a property for snapshots
     @property
@@ -195,6 +203,7 @@ class GymDriver:
         meta = {
             "cursor": self.cursor,
             "done": self.done,
+            "config": dataclasses.asdict(self.config),
             "caps": {str(k): v for k, v in self.caps.items()},
             "ledger": {
                 "records": [dataclasses.asdict(r) for r in self.ledger.records],
@@ -222,6 +231,16 @@ class GymDriver:
         meta = json.loads(str(z["meta"]))
         self.cursor = meta["cursor"]
         self.done = meta["done"]
+        if "config" in meta:
+            # the snapshot's config wins (incl. local_backend): resuming on
+            # a different driver config must not change the query's plan,
+            # seeds, or backend mid-flight
+            self.config = GymConfig(**meta["config"])
+            self.capman.local_backend = self.config.local_backend
+            self.capman.growth = self.config.cap_growth
+            self.executor = self._make_executor()
+            sched = dym_d_schedule if self.config.schedule == "dym_d" else dym_n_schedule
+            self.schedule = sched(self.ghd)
         self.caps = {int(k): v for k, v in meta["caps"].items()}
         led = Ledger()
         from ..relational.ledger import RoundRecord
@@ -250,6 +269,12 @@ class GymDriver:
                     tuple(schema),
                 )
             )
+        # a post-completion snapshot has done=True but the final projection
+        # is derived state, not persisted: recompute it so ``run()`` on the
+        # resumed driver returns the result instead of tripping its assert
+        self.result = None
+        if self.done:
+            self._finish()
 
 
 def jnp_asarray(x):

@@ -70,14 +70,14 @@ def register_engine(name: str):
     return deco
 
 
-def get_engine(name: str, spmd: SPMD) -> "Engine":
+def get_engine(name: str, spmd: SPMD, local_backend: str = "jnp") -> "Engine":
     try:
         cls = ENGINES[name]
     except KeyError:
         raise ValueError(
             f"unknown engine strategy {name!r}; registered: {sorted(ENGINES)}"
         ) from None
-    return cls(spmd)
+    return cls(spmd, local_backend)
 
 
 class Engine:
@@ -95,8 +95,9 @@ class Engine:
     # (true only for hash co-partitioning; grid placement is positional)
     exact_join_presize = False
 
-    def __init__(self, spmd: SPMD):
+    def __init__(self, spmd: SPMD, local_backend: str = "jnp"):
         self.spmd = spmd
+        self.local_backend = local_backend
 
     # -- per-kind batched ops ----------------------------------------------
     def semijoin_many(self, ss, rs, cap: int, seeds) -> Tuple[List[DTable], List[Dict], int]:
@@ -109,18 +110,23 @@ class Engine:
         outs, stats = B.dist_intersect_many(
             self.spmd, as_, bs, seeds=seeds,
             cap_recv=(cap, self.spmd.p * bs[0].cap),
+            backend=self.local_backend,
         )
         return outs, stats, 1
 
     def dedup_many(self, ts, cap: int, seeds):
-        outs, stats = B.dist_dedup_many(self.spmd, ts, seeds=seeds, cap_recv=cap)
+        outs, stats = B.dist_dedup_many(
+            self.spmd, ts, seeds=seeds, cap_recv=cap, backend=self.local_backend
+        )
         return outs, stats, 1
 
     # -- materialization (unbatched; one-time per query) -------------------
     def multijoin(self, parts: List[DTable], cap: int, seed: int):
         if len(parts) == 1:
             return parts[0], {"sent": 0, "dropped": 0}, 0
-        out, st = G.grid_multiway_join(self.spmd, parts, out_cap=cap)
+        out, st = G.grid_multiway_join(
+            self.spmd, parts, out_cap=cap, backend=self.local_backend
+        )
         return out, st, 1
 
 
@@ -135,16 +141,23 @@ class HashEngine(Engine):
         outs, stats = B.dist_semijoin_many(
             self.spmd, ss, rs, seeds=seeds,
             cap_recv=(cap, self.spmd.p * rs[0].cap),
+            backend=self.local_backend,
         )
         return outs, stats, 1
 
     def join_many(self, as_, bs, cap, seeds):
-        outs, stats = B.dist_join_many(self.spmd, as_, bs, seeds=seeds, out_cap=cap)
+        outs, stats = B.dist_join_many(
+            self.spmd, as_, bs, seeds=seeds, out_cap=cap,
+            backend=self.local_backend,
+        )
         return outs, stats, 1
 
     def multijoin(self, parts, cap, seed):
         if len(parts) == 2:
-            out, st = R.dist_join(self.spmd, parts[0], parts[1], seed=seed, out_cap=cap)
+            out, st = R.dist_join(
+                self.spmd, parts[0], parts[1], seed=seed, out_cap=cap,
+                backend=self.local_backend,
+            )
             return out, st, 1
         return Engine.multijoin(self, parts, cap, seed)
 
@@ -154,11 +167,16 @@ class GridEngine(Engine):
     """Paper-faithful Lemmas 8/10 (skew-proof, B(X, M) = X^2/M comm)."""
 
     def semijoin_many(self, ss, rs, cap, seeds):
-        outs, stats = B.grid_semijoin_many(self.spmd, ss, rs, seeds=seeds, out_cap=cap)
+        outs, stats = B.grid_semijoin_many(
+            self.spmd, ss, rs, seeds=seeds, out_cap=cap,
+            backend=self.local_backend,
+        )
         return outs, stats, 2
 
     def join_many(self, as_, bs, cap, seeds):
-        outs, stats = B.grid_join_many(self.spmd, as_, bs, out_cap=cap)
+        outs, stats = B.grid_join_many(
+            self.spmd, as_, bs, out_cap=cap, backend=self.local_backend
+        )
         return outs, stats, 1
 
 
@@ -181,9 +199,10 @@ class CapacityManager:
       enough.)
     """
 
-    def __init__(self, spmd: SPMD, growth: int = 4):
+    def __init__(self, spmd: SPMD, growth: int = 4, local_backend: str = "jnp"):
         self.spmd = spmd
         self.growth = growth
+        self.local_backend = local_backend
         self.caps: Dict[int, int] = {}
 
     def cap_for(self, nodes: Sequence[int]) -> int:
@@ -200,7 +219,9 @@ class CapacityManager:
         self.caps[v] = pow2(self.caps.get(v, 4) * self.growth)
 
     def presize_join(self, a: DTable, b: DTable, seed: int) -> int:
-        counts = R.dist_join_count(self.spmd, a, b, seed=seed)
+        counts = R.dist_join_count(
+            self.spmd, a, b, seed=seed, backend=self.local_backend
+        )
         return pow2(max(4, int(counts.max())))
 
     def floor(self, nodes: Sequence[int], cap: int) -> None:
@@ -347,9 +368,11 @@ class PhysicalExecutor:
         max_retries: int = 12,
         count_retries_comm: bool = True,
         fuse: bool = True,
+        local_backend: str = "jnp",
     ):
         self.spmd = spmd
-        self.engine = get_engine(strategy, spmd)
+        self.engine = get_engine(strategy, spmd, local_backend)
+        self.local_backend = local_backend
         self.capman = capman
         self.seed = seed
         self.max_retries = max_retries

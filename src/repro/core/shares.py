@@ -98,6 +98,7 @@ def shares_join(
     out_cap: Optional[int] = None,
     seed: int = 0,
     max_retries: int = 12,
+    local_backend: str = "jnp",
 ) -> Tuple[np.ndarray, Tuple[str, ...], Ledger]:
     """One-round Shares evaluation of Q.  Returns (rows, schema, ledger)."""
     s = spmd or SPMD(p)
@@ -145,7 +146,8 @@ def shares_join(
             dropped += st["dropped"]
             parts.append(part)
         joined, st = R.local_multiway_join(
-            s, parts, out_caps=[out_cap] * (len(parts) - 1)
+            s, parts, out_caps=[out_cap] * (len(parts) - 1),
+            backend=local_backend,
         )
         dropped += st["dropped"]
         if dropped == 0:
@@ -157,7 +159,8 @@ def shares_join(
     # uniquely determined by the tuple's attribute hashes — with all output
     # attrs sharded it is unique; dedup guards the general case.
     deduped, st = R.dist_dedup(
-        s, joined, seed=seed + 101, c_out=joined.cap, cap_recv=joined.cap
+        s, joined, seed=seed + 101, c_out=joined.cap, cap_recv=joined.cap,
+        backend=local_backend,
     )
     ledger.add_round("shares", [f"hypercube {shares}"], comm, n_rounds=1)
     ledger.output_tuples = int(np.asarray(deduped.valid).sum())

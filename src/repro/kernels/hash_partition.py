@@ -10,7 +10,10 @@ TPU-native design:
     (shift/xor/multiply are all lane ops, uint32);
   - the modulo by p is strength-reduced to a multiply-shift when p is a
     power of two (mesh sizes are), else a single vector remainder;
-  - arity is a compile-time constant -> the column loop fully unrolls.
+  - arity is a compile-time constant -> the column loop fully unrolls;
+  - the seed is a TRACED (1, 1) uint32 scalar read from SMEM — reseeded
+    abort-retries reuse the compiled program, matching the engine-wide
+    seeds-ride-as-data contract (``SPMD.seeds`` / ``hash_columns``).
 
 This fuses what would otherwise be several XLA HLOs (per-column hash,
 combine, select) into one VMEM-resident pass over the rows.
@@ -22,7 +25,9 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 ROWS_BLK = 1024
 
@@ -41,10 +46,11 @@ def _mix32(x):
     return x
 
 
-def _partition_kernel(rows_ref, valid_ref, dest_ref, *, cols, p, seed):
+def _partition_kernel(seed_ref, rows_ref, valid_ref, dest_ref, *, cols, p):
     rows = rows_ref[...]  # (ROWS_BLK, arity) int32
     valid = valid_ref[...]  # (ROWS_BLK, 1) bool (2-D for TPU layout)
-    h = _mix32(jnp.full((rows.shape[0],), seed & 0xFFFFFFFF, jnp.uint32))
+    seed = seed_ref[0, 0]  # traced uint32 scalar (SMEM)
+    h = _mix32(jnp.full((rows.shape[0],), seed, jnp.uint32))
     for c in cols:  # static unroll
         h = _mix32(h ^ (_mix32(rows[:, c].astype(jnp.uint32)) + jnp.uint32(_GOLD)))
     if p & (p - 1) == 0:  # power of two: mask
@@ -54,31 +60,30 @@ def _partition_kernel(rows_ref, valid_ref, dest_ref, *, cols, p, seed):
     dest_ref[...] = jnp.where(valid[:, 0], d, p)[:, None]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("cols", "p", "seed", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=("cols", "p", "interpret"))
 def _partition_call(
+    seed: jax.Array,
     rows: jax.Array,
     valid: jax.Array,
     cols: Tuple[int, ...],
     p: int,
-    seed: int,
     interpret: bool,
 ) -> jax.Array:
     n, ar = rows.shape
     grid = (n // ROWS_BLK,)
-    kern = functools.partial(_partition_kernel, cols=cols, p=p, seed=seed)
+    kern = functools.partial(_partition_kernel, cols=cols, p=p)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
             pl.BlockSpec((ROWS_BLK, ar), lambda i: (i, 0)),
             pl.BlockSpec((ROWS_BLK, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((ROWS_BLK, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
         interpret=interpret,
-    )(rows, valid)
+    )(seed, rows, valid)
 
 
 def hash_partition(
@@ -86,16 +91,21 @@ def hash_partition(
     valid: jax.Array,
     cols: Sequence[int],
     p: int,
-    seed: int,
+    seed,
     *,
     interpret: bool = False,
 ) -> jax.Array:
     """Destination reducer per row; invalid rows -> p (drop sentinel).
 
-    Bit-identical to ``relational.hashing.dests_for`` (the jnp reference)."""
+    ``seed`` may be a python int OR a traced scalar (uint32 data operand,
+    never a jit static: retries must not recompile).  Bit-identical to
+    ``relational.hashing.dests_for`` (the jnp reference)."""
     n, ar = rows.shape
     pad = -n % ROWS_BLK
     rp = jnp.pad(rows, ((0, pad), (0, 0)))
     vp = jnp.pad(valid, (0, pad))
-    out = _partition_call(rp, vp[:, None], tuple(cols), int(p), int(seed), interpret)
+    if isinstance(seed, (int, np.integer)):
+        seed = np.uint32(int(seed) & 0xFFFFFFFF)  # top-bit-set ints overflow int32
+    s2 = jnp.reshape(jnp.asarray(seed).astype(jnp.uint32), (1, 1))
+    out = _partition_call(s2, rp, vp[:, None], tuple(cols), int(p), interpret)
     return out[:n, 0]

@@ -17,6 +17,7 @@ from .chunked import chunked_attention as _chunked
 from .flash_attention import flash_attention as _flash
 from .hash_partition import hash_partition as _hash_partition
 from .semijoin_probe import semijoin_probe as _probe
+from .sorted_probe import sorted_probe_ranges as _ranges
 
 # KV lengths >= this use the chunked (flash-style) XLA path off-TPU:
 # peak activation memory O(Sq*C) instead of O(Sq*Sk).  [Perf iteration A]
@@ -37,18 +38,30 @@ def semijoin_probe(
     return ref.semijoin_probe_ref(q, keys)
 
 
+def sorted_probe_ranges(
+    q: jax.Array, keys: jax.Array, *, use_pallas: Optional[bool] = None
+):
+    """(lo, hi) match ranges of q against SORTED keys (searchsorted pair)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _ranges(q, keys, interpret=not _on_tpu())
+    return ref.sorted_probe_ranges_ref(q, keys)
+
+
 def hash_partition(
     rows: jax.Array,
     valid: jax.Array,
     cols: Sequence[int],
     p: int,
-    seed: int,
+    seed,
     *,
     use_pallas: Optional[bool] = None,
 ) -> jax.Array:
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if use_pallas:
+    # zero key columns (seed-only hash) has no per-row work for the kernel
+    if use_pallas and len(cols):
         return _hash_partition(rows, valid, cols, p, seed, interpret=not _on_tpu())
     return ref.hash_partition_ref(rows, valid, cols, p, seed)
 

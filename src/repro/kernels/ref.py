@@ -18,6 +18,14 @@ def semijoin_probe_ref(q: jax.Array, keys: jax.Array) -> jax.Array:
     return hi > lo
 
 
+def sorted_probe_ranges_ref(q: jax.Array, keys: jax.Array):
+    """(lo, hi) = searchsorted(keys, q, 'left'/'right'); ``keys`` sorted
+    (invalid INT32_MAX slots at the back)."""
+    lo = jnp.searchsorted(keys, q, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(keys, q, side="right").astype(jnp.int32)
+    return lo, hi
+
+
 def hash_partition_ref(
     rows: jax.Array, valid: jax.Array, cols: Sequence[int], p: int, seed: int
 ) -> jax.Array:

@@ -27,11 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANES = 128
-PROBE_ROWS = 8  # (8, 128) = one VPU register tile of probes
-KEY_ROWS = 64  # (64, 128) = 8192 keys per VMEM block
-
-_PAD = jnp.int32(2**31 - 1)
+from .tiling import KEY_ROWS, LANES, PROBE_ROWS, pad_probe_key_tiles
 
 
 def _probe_kernel(q_ref, k_ref, out_ref):
@@ -78,12 +74,8 @@ def semijoin_probe(
 ) -> jax.Array:
     """mask[i] = (q[i] in keys).  Key/probe values must be < INT32_MAX
     (dense ranks are); invalid key slots should be INT32_MAX."""
-    n, m = q.shape[0], keys.shape[0]
-    npad = -n % (PROBE_ROWS * LANES)
-    mpad = -m % (KEY_ROWS * LANES)
-    # pad probes with -2**31+1 (never equals a valid key or key pad)
-    qp = jnp.pad(q, (0, npad), constant_values=jnp.int32(-(2**31) + 1))
-    kp = jnp.pad(keys, (0, mpad), constant_values=_PAD)
-    q2 = qp.reshape(-1, LANES)
-    k2 = kp.reshape(-1, LANES)
+    n = q.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    q2, k2 = pad_probe_key_tiles(q, keys)
     return _probe_call(q2, k2, interpret).reshape(-1)[:n]

@@ -1,0 +1,39 @@
+"""Shared host-side tiling for the 1-D probe/key kernels.
+
+Both probe kernels (``semijoin_probe``, ``sorted_probe``) lay their
+operands out as (rows, 128) lane tiles — (PROBE_ROWS, 128) probe blocks
+against (KEY_ROWS, 128) key blocks — with the same padding invariants:
+
+- probes pad with a value that can never equal (or count against) a live
+  key; the padded rows are trimmed from the output;
+- keys pad with INT32_MAX, the same sentinel used for invalid key slots,
+  which by contract never matches and never counts;
+- an EMPTY key vector still gets one full all-pad key block: the kernels
+  merge per-key-tile partials into the output block, so a zero-length key
+  grid axis would leave the output unwritten.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+LANES = 128
+PROBE_ROWS = 8  # (8, 128) = one VPU register tile of probes
+KEY_ROWS = 64  # (64, 128) = 8192 keys per VMEM block
+
+KEY_PAD = jnp.int32(2**31 - 1)  # == the invalid-slot sentinel
+PROBE_PAD = jnp.int32(-(2**31) + 1)  # never equals a valid key or KEY_PAD
+
+
+def pad_probe_key_tiles(
+    q: jax.Array, keys: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """(n,) probes + (m,) keys -> (nr, 128) and (mr, 128) lane tiles."""
+    n, m = q.shape[0], keys.shape[0]
+    npad = -n % (PROBE_ROWS * LANES)
+    mpad = (KEY_ROWS * LANES) if m == 0 else (-m % (KEY_ROWS * LANES))
+    q2 = jnp.pad(q, (0, npad), constant_values=PROBE_PAD).reshape(-1, LANES)
+    k2 = jnp.pad(keys, (0, mpad), constant_values=KEY_PAD).reshape(-1, LANES)
+    return q2, k2

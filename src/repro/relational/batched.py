@@ -31,8 +31,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .grid import _grid_send_one, _grid_shares, _position_groups
-from .hashing import dense_ranks, dests_for
-from .localops import local_dedup_mask, local_join_ranked, local_semijoin_mask
+from .hashing import dense_ranks
+from .localops import (
+    get_local_backend,
+    local_dedup_mask,
+    local_join_ranked,
+    local_semijoin_mask,
+)
 from .shuffle import exchange, exchange_multi
 from .spmd import SPMD
 from .table import DTable, schema_join
@@ -77,14 +82,16 @@ def _take(data: jax.Array, cols: jax.Array) -> jax.Array:
     return jnp.take(data, cols, axis=1)
 
 
-def _dests(keys: jax.Array, valid: jax.Array, p: int, seed) -> jax.Array:
+def _dests(keys: jax.Array, valid: jax.Array, p: int, seed, backend: str) -> jax.Array:
     """Destinations from a pre-gathered (cap, n_keys) key matrix — hashes
     columns in order, identical to ``dests_for(data, key_cols, ...)``."""
-    return dests_for(keys, valid, tuple(range(keys.shape[1])), p, seed)
+    be = get_local_backend(backend)
+    return be.dests(keys, valid, tuple(range(keys.shape[1])), p, seed)
 
 
 # ------------------------------------------------------------ hash semijoin
-def _semijoin_one(sd, sv, rd, rv, seed, sk, rk, *, p, c_out_s, c_out_r, cap_s, cap_r):
+def _semijoin_one(sd, sv, rd, rv, seed, sk, rk, *,
+                  p, c_out_s, c_out_r, cap_s, cap_r, backend):
     nk = rk.shape[0]
     kcols = tuple(range(nk))
     # ship only the deduplicated key projection of R (as in ops._semijoin_shard)
@@ -92,20 +99,24 @@ def _semijoin_one(sd, sv, rd, rv, seed, sk, rk, *, p, c_out_s, c_out_r, cap_s, c
     rkv = local_dedup_mask(rkeys, rv, kcols)
     rkeys = jnp.where(rkv[:, None], rkeys, 0)
     rk2, rkv2, sent_r, dsr, drr = exchange(
-        rkeys, rkv, _dests(rkeys, rkv, p, seed), p=p, c_out=c_out_r, cap_recv=cap_r
+        rkeys, rkv, _dests(rkeys, rkv, p, seed, backend),
+        p=p, c_out=c_out_r, cap_recv=cap_r,
     )
     rkv2 = local_dedup_mask(rk2, rkv2, kcols)
     s2, s2v, sent_s, dss, drs = exchange(
-        sd, sv, _dests(_take(sd, sk), sv, p, seed), p=p, c_out=c_out_s, cap_recv=cap_s
+        sd, sv, _dests(_take(sd, sk), sv, p, seed, backend),
+        p=p, c_out=c_out_s, cap_recv=cap_s,
     )
-    mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, rk2, rkv2, kcols)
+    mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, rk2, rkv2, kcols, backend)
     s2 = jnp.where(mask[:, None], s2, 0)
     return s2, mask, sent_r + sent_s, dsr + drr + dss + drs
 
 
-def _semijoin_shard_b(sd, sv, rd, rv, seed, sk, rk, *, p, c_out_s, c_out_r, cap_s, cap_r):
+def _semijoin_shard_b(sd, sv, rd, rv, seed, sk, rk, *,
+                      p, c_out_s, c_out_r, cap_s, cap_r, backend):
     one = functools.partial(
-        _semijoin_one, p=p, c_out_s=c_out_s, c_out_r=c_out_r, cap_s=cap_s, cap_r=cap_r
+        _semijoin_one, p=p, c_out_s=c_out_s, c_out_r=c_out_r,
+        cap_s=cap_s, cap_r=cap_r, backend=backend,
     )
     return jax.vmap(one)(sd, sv, rd, rv, seed, sk, rk)
 
@@ -118,6 +129,7 @@ def dist_semijoin_many(
     seeds: Sequence[int],
     cap_recv: Tuple[int, int],
     c_out: Optional[Tuple[int, int]] = None,
+    backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold S_i |>< R_i in ONE dispatch; semantics of ``dist_semijoin``."""
     p = spmd.p
@@ -132,32 +144,36 @@ def dist_semijoin_many(
         _semijoin_shard_b,
         sd, sv, rd, rv, _seed_array(seeds, p), sk, rk,
         p=p, c_out_s=c_out[0], c_out_r=c_out[1],
-        cap_s=cap_recv[0], cap_r=cap_recv[1],
+        cap_s=cap_recv[0], cap_r=cap_recv[1], backend=backend,
     )
     return _unstack(od, ov, [s.schema for s in ss]), _per_op_stats(sent, dropped)
 
 
 # ---------------------------------------------------------------- hash join
 def _join_one(ad, av, bd, bv, seed, ak, bk, bkeep, *,
-              p, c_out_a, c_out_b, cap_a, cap_b, out_cap):
+              p, c_out_a, c_out_b, cap_a, cap_b, out_cap, backend):
     nk = ak.shape[0]
     kcols = tuple(range(nk))
     a2, a2v, sent_a, dsa, dra = exchange(
-        ad, av, _dests(_take(ad, ak), av, p, seed), p=p, c_out=c_out_a, cap_recv=cap_a
+        ad, av, _dests(_take(ad, ak), av, p, seed, backend),
+        p=p, c_out=c_out_a, cap_recv=cap_a,
     )
     b2, b2v, sent_b, dsb, drb = exchange(
-        bd, bv, _dests(_take(bd, bk), bv, p, seed), p=p, c_out=c_out_b, cap_recv=cap_b
+        bd, bv, _dests(_take(bd, bk), bv, p, seed, backend),
+        p=p, c_out=c_out_b, cap_recv=cap_b,
     )
     ra, rb = dense_ranks(_take(a2, ak), a2v, kcols, _take(b2, bk), b2v, kcols)
-    out, out_v, over = local_join_ranked(a2, a2v, ra, b2, b2v, rb, bkeep, out_cap)
+    out, out_v, over = local_join_ranked(
+        a2, a2v, ra, b2, b2v, rb, bkeep, out_cap, backend
+    )
     return out, out_v, sent_a + sent_b, dsa + dra + dsb + drb + over
 
 
 def _join_shard_b(ad, av, bd, bv, seed, ak, bk, bkeep, *,
-                  p, c_out_a, c_out_b, cap_a, cap_b, out_cap):
+                  p, c_out_a, c_out_b, cap_a, cap_b, out_cap, backend):
     one = functools.partial(
         _join_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b,
-        cap_a=cap_a, cap_b=cap_b, out_cap=out_cap,
+        cap_a=cap_a, cap_b=cap_b, out_cap=out_cap, backend=backend,
     )
     return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, bkeep)
 
@@ -171,10 +187,16 @@ def dist_join_many(
     out_cap: int,
     c_out: Optional[Tuple[int, int]] = None,
     cap_recv: Optional[Tuple[int, int]] = None,
+    backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold A_i |><| B_i in ONE dispatch; semantics of ``dist_join``."""
     p = spmd.p
     shareds = [[x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)]
+    # DYM rounds only join GHD-adjacent nodes, which share attributes, so
+    # attribute-disjoint pairs cannot arrive here via the planner (a fully
+    # disconnected query already fails the upstream semijoin assert); the
+    # cross-join case is served by sequential dist_join's broadcast plan
+    assert all(shareds), "attribute-disjoint join in batch; use dist_join"
     keeps = [
         tuple(i for i, x in enumerate(b.schema) if x not in set(a.schema))
         for a, b in zip(as_, bs)
@@ -191,28 +213,32 @@ def dist_join_many(
         _join_shard_b,
         ad, av, bd, bv, _seed_array(seeds, p), ak, bk, bkeep,
         p=p, c_out_a=c_out[0], c_out_b=c_out[1],
-        cap_a=cap_recv[0], cap_b=cap_recv[1], out_cap=out_cap,
+        cap_a=cap_recv[0], cap_b=cap_recv[1], out_cap=out_cap, backend=backend,
     )
     return _unstack(od, ov, schemas), _per_op_stats(sent, dropped)
 
 
 # ----------------------------------------------------------- hash intersect
-def _intersect_one(ad, av, bd, bv, seed, bcols, *, p, c_out_a, c_out_b, cap_a, cap_b):
+def _intersect_one(ad, av, bd, bv, seed, bcols, *,
+                   p, c_out_a, c_out_b, cap_a, cap_b, backend):
     acols = tuple(range(ad.shape[1]))
     a2, a2v, sent_a, dsa, dra = exchange(
-        ad, av, _dests(ad, av, p, seed), p=p, c_out=c_out_a, cap_recv=cap_a
+        ad, av, _dests(ad, av, p, seed, backend), p=p, c_out=c_out_a, cap_recv=cap_a
     )
     b2, b2v, sent_b, dsb, drb = exchange(
-        bd, bv, _dests(_take(bd, bcols), bv, p, seed), p=p, c_out=c_out_b, cap_recv=cap_b
+        bd, bv, _dests(_take(bd, bcols), bv, p, seed, backend),
+        p=p, c_out=c_out_b, cap_recv=cap_b,
     )
-    mask = local_semijoin_mask(a2, a2v, acols, _take(b2, bcols), b2v, acols)
+    mask = local_semijoin_mask(a2, a2v, acols, _take(b2, bcols), b2v, acols, backend)
     a2 = jnp.where(mask[:, None], a2, 0)
     return a2, mask, sent_a + sent_b, dsa + dra + dsb + drb
 
 
-def _intersect_shard_b(ad, av, bd, bv, seed, bcols, *, p, c_out_a, c_out_b, cap_a, cap_b):
+def _intersect_shard_b(ad, av, bd, bv, seed, bcols, *,
+                       p, c_out_a, c_out_b, cap_a, cap_b, backend):
     one = functools.partial(
-        _intersect_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b, cap_a=cap_a, cap_b=cap_b
+        _intersect_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b,
+        cap_a=cap_a, cap_b=cap_b, backend=backend,
     )
     return jax.vmap(one)(ad, av, bd, bv, seed, bcols)
 
@@ -225,6 +251,7 @@ def dist_intersect_many(
     seeds: Sequence[int],
     cap_recv: Tuple[int, int],
     c_out: Optional[Tuple[int, int]] = None,
+    backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold A_i ^ B_i (same attr sets) in ONE dispatch."""
     p = spmd.p
@@ -238,23 +265,25 @@ def dist_intersect_many(
         _intersect_shard_b,
         ad, av, bd, bv, _seed_array(seeds, p), bcols,
         p=p, c_out_a=c_out[0], c_out_b=c_out[1],
-        cap_a=cap_recv[0], cap_b=cap_recv[1],
+        cap_a=cap_recv[0], cap_b=cap_recv[1], backend=backend,
     )
     return _unstack(od, ov, [a.schema for a in as_]), _per_op_stats(sent, dropped)
 
 
 # --------------------------------------------------------------- hash dedup
-def _dedup_one(d, v, seed, *, p, c_out, cap_recv):
+def _dedup_one(d, v, seed, *, p, c_out, cap_recv, backend):
     d2, v2, sent, ds, dr = exchange(
-        d, v, _dests(d, v, p, seed), p=p, c_out=c_out, cap_recv=cap_recv
+        d, v, _dests(d, v, p, seed, backend), p=p, c_out=c_out, cap_recv=cap_recv
     )
     mask = local_dedup_mask(d2, v2, tuple(range(d.shape[1])))
     d2 = jnp.where(mask[:, None], d2, 0)
     return d2, mask, sent, ds + dr
 
 
-def _dedup_shard_b(d, v, seed, *, p, c_out, cap_recv):
-    one = functools.partial(_dedup_one, p=p, c_out=c_out, cap_recv=cap_recv)
+def _dedup_shard_b(d, v, seed, *, p, c_out, cap_recv, backend):
+    one = functools.partial(
+        _dedup_one, p=p, c_out=c_out, cap_recv=cap_recv, backend=backend
+    )
     return jax.vmap(one)(d, v, seed)
 
 
@@ -265,20 +294,22 @@ def dist_dedup_many(
     seeds: Sequence[int],
     cap_recv: int,
     c_out: Optional[int] = None,
+    backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     p = spmd.p
     c_out = c_out or ts[0].cap
     d, v = _stack(ts)
     od, ov, sent, dropped = spmd.run(
         _dedup_shard_b, d, v, _seed_array(seeds, p),
-        p=p, c_out=c_out, cap_recv=cap_recv,
+        p=p, c_out=c_out, cap_recv=cap_recv, backend=backend,
     )
     return _unstack(od, ov, [t.schema for t in ts]), _per_op_stats(sent, dropped)
 
 
 # ---------------------------------------------- grid semijoin (Lemma 10)
 def _grid_semijoin_mark_one(sd, sv, rd, rv, sk, rk, *,
-                            g_s, g_r, s_cap, r_cap, p, c_out_s, c_out_r, cap_s, cap_r):
+                            g_s, g_r, s_cap, r_cap, p, c_out_s, c_out_r,
+                            cap_s, cap_r, backend):
     nk = rk.shape[0]
     kcols = tuple(range(nk))
     grp_s = _position_groups(sv, g_s, s_cap, p)
@@ -300,17 +331,19 @@ def _grid_semijoin_mark_one(sd, sv, rd, rv, sk, rk, *,
     r2, r2v, sent_r, dsr, drr = exchange_multi(
         rkeys, rkv, dest_r, p=p, c_out=c_out_r, cap_recv=cap_r
     )
-    mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, r2, r2v, kcols)
+    mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, r2, r2v, kcols, backend)
     s2 = jnp.where(mask[:, None], s2, 0)
     return s2, mask, sent_s + sent_r, dss + drs + dsr + drr
 
 
 def _grid_semijoin_mark_b(sd, sv, rd, rv, sk, rk, *,
-                          g_s, g_r, s_cap, r_cap, p, c_out_s, c_out_r, cap_s, cap_r):
+                          g_s, g_r, s_cap, r_cap, p, c_out_s, c_out_r,
+                          cap_s, cap_r, backend):
     one = functools.partial(
         _grid_semijoin_mark_one,
         g_s=g_s, g_r=g_r, s_cap=s_cap, r_cap=r_cap, p=p,
         c_out_s=c_out_s, c_out_r=c_out_r, cap_s=cap_s, cap_r=cap_r,
+        backend=backend,
     )
     return jax.vmap(one)(sd, sv, rd, rv, sk, rk)
 
@@ -322,6 +355,7 @@ def grid_semijoin_many(
     *,
     seeds: Sequence[int],
     out_cap: int,
+    backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold Lemma-10 grid semijoin: one MARK dispatch for the whole group
     + one batched hash-dedup dispatch for the marked duplicates (2 claimed
@@ -343,13 +377,13 @@ def grid_semijoin_many(
         sd, sv, rd, rv, sk, rk,
         g_s=g_s, g_r=g_r, s_cap=s0.cap, r_cap=r0.cap, p=p,
         c_out_s=s0.cap * g_r, c_out_r=r0.cap * g_s,
-        cap_s=cap_s, cap_r=cap_r,
+        cap_s=cap_s, cap_r=cap_r, backend=backend,
     )
     marked = _unstack(md, mv, [s.schema for s in ss])
     mark_stats = _per_op_stats(sent, dropped)
     ded, ded_stats = dist_dedup_many(
         spmd, marked, seeds=[s + 7 for s in seeds],
-        c_out=marked[0].cap, cap_recv=out_cap,
+        c_out=marked[0].cap, cap_recv=out_cap, backend=backend,
     )
     stats = [
         {"sent": m["sent"] + d["sent"], "dropped": m["dropped"] + d["dropped"]}
@@ -367,16 +401,18 @@ def _grid_send_shard_b(data, valid, *, g_self, stride, offsets, p, cap, c_out, c
     return jax.vmap(one)(data, valid)
 
 
-def _local_join_one(ad, av, bd, bv, ak, bk, bkeep, *, out_cap):
+def _local_join_one(ad, av, bd, bv, ak, bk, bkeep, *, out_cap, backend):
     nk = ak.shape[0]
     kcols = tuple(range(nk))
     ra, rb = dense_ranks(_take(ad, ak), av, kcols, _take(bd, bk), bv, kcols)
-    out, out_v, over = local_join_ranked(ad, av, ra, bd, bv, rb, bkeep, out_cap)
+    out, out_v, over = local_join_ranked(
+        ad, av, ra, bd, bv, rb, bkeep, out_cap, backend
+    )
     return out, out_v, jnp.int32(0), over
 
 
-def _local_join_shard_b(ad, av, bd, bv, ak, bk, bkeep, *, out_cap):
-    one = functools.partial(_local_join_one, out_cap=out_cap)
+def _local_join_shard_b(ad, av, bd, bv, ak, bk, bkeep, *, out_cap, backend):
+    one = functools.partial(_local_join_one, out_cap=out_cap, backend=backend)
     return jax.vmap(one)(ad, av, bd, bv, ak, bk, bkeep)
 
 
@@ -386,6 +422,7 @@ def grid_join_many(
     bs: Sequence[DTable],
     *,
     out_cap: int,
+    backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold Lemma-8 grid join (w=2): two batched position-group send
     dispatches + one batched local-join dispatch — one claimed BSP round."""
@@ -424,7 +461,8 @@ def grid_join_many(
     bkeep = _key_array(keeps, p)
     (ad, av), (bd, bv) = parts
     od, ov, sent_j, over = spmd.run(
-        _local_join_shard_b, ad, av, bd, bv, ak, bk, bkeep, out_cap=out_cap
+        _local_join_shard_b, ad, av, bd, bv, ak, bk, bkeep,
+        out_cap=out_cap, backend=backend,
     )
     join_stats = _per_op_stats(sent_j, over)
     stats = [

@@ -75,6 +75,7 @@ def grid_multiway_join(
     c_out: Optional[int] = None,
     cap_recv: Optional[int] = None,
     sizes: Optional[Sequence[int]] = None,
+    backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     """Lemma 8: join w relations in ONE round on a grid of prod(g_i) <= p
     reducers; every reducer receives one position-group per relation.
@@ -137,7 +138,7 @@ def grid_multiway_join(
     from .ops import local_multiway_join
 
     out_caps = [out_cap] * (w - 1)
-    joined, jstats = local_multiway_join(spmd, parts, out_caps)
+    joined, jstats = local_multiway_join(spmd, parts, out_caps, backend)
     stats_total["dropped"] += jstats["dropped"]
     return joined, stats_total
 
@@ -165,6 +166,7 @@ def grid_join(
 def _grid_semijoin_mark(
     s_data, s_valid, r_data, r_valid, *,
     s_key, r_key, g_s, g_r, s_cap, r_cap, p, c_out_s, c_out_r, cap_s, cap_r,
+    backend,
 ):
     """Round 1 of Lemma 10: grid (g_s x g_r); reducer (i,j) holds S group i
     and R-projection group j; emits S rows matched by its R block (an S row
@@ -187,7 +189,7 @@ def _grid_semijoin_mark(
         rk, rkv, dest_r, p=p, c_out=c_out_r, cap_recv=cap_r
     )
     kcols = tuple(range(len(r_key)))
-    mask = local_semijoin_mask(s2, s2v, s_key, r2, r2v, kcols)
+    mask = local_semijoin_mask(s2, s2v, s_key, r2, r2v, kcols, backend)
     s2 = jnp.where(mask[:, None], s2, 0)
     return s2, mask, _stats(sent_s + sent_r, dss + drs + dsr + drr)
 
@@ -199,6 +201,7 @@ def grid_semijoin(
     *,
     out_cap: Optional[int] = None,
     seed: int = 0,
+    backend: str = "jnp",
 ) -> Tuple[DTable, Dict, int]:
     """Lemma 10: S |>< R in O(1) rounds, skew-proof grid + hash dedup of the
     <= g_r marked duplicates.  Returns (table, stats, engine_rounds)."""
@@ -217,7 +220,7 @@ def grid_semijoin(
         s_key=s.cols(shared), r_key=r.cols(shared),
         g_s=g_s, g_r=g_r, s_cap=s.cap, r_cap=r.cap, p=p,
         c_out_s=s.cap * g_r, c_out_r=r.cap * g_s,
-        cap_s=cap_s, cap_r=cap_r,
+        cap_s=cap_s, cap_r=cap_r, backend=backend,
     )
     marked = DTable(md, mv, s.schema)
     st = agg_stats(stats)
@@ -225,7 +228,8 @@ def grid_semijoin(
     from .ops import dist_dedup
 
     ded, dstats = dist_dedup(
-        spmd, marked, seed=seed + 7, c_out=marked.cap, cap_recv=out_cap
+        spmd, marked, seed=seed + 7, c_out=marked.cap, cap_recv=out_cap,
+        backend=backend,
     )
     st2 = {
         "sent": st["sent"] + dstats["sent"],

@@ -13,6 +13,7 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _C1 = jnp.uint32(0x85EBCA6B)
 _C2 = jnp.uint32(0xC2B2AE35)
@@ -35,6 +36,8 @@ def hash_columns(data: jax.Array, cols: Sequence[int], seed) -> jax.Array:
 
     ``seed`` may be a python int OR a traced scalar — engine code passes it
     traced so reseeded retries reuse the compiled program."""
+    if isinstance(seed, int):
+        seed = np.uint32(seed & 0xFFFFFFFF)  # top-bit-set ints overflow int32
     s = jnp.asarray(seed).astype(jnp.uint32)
     h = mix32(jnp.broadcast_to(s, (data.shape[0],)))
     for c in cols:

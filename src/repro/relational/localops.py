@@ -1,20 +1,120 @@
-"""Per-shard (single-reducer) relational operations, pure jnp.
+"""Per-shard (single-reducer) relational operations.
 
 Everything is exact for arbitrary arities/domains: multi-column keys are
 dictionary-encoded with ``dense_ranks`` (concat + lexsort + run ids), never
 hashed.  All shapes static; "too many output tuples" surfaces as an
 overflow count (the paper's abort), never silent truncation.
+
+The *hot loops* — hash bucketing, membership probes, and sorted match
+ranges — are routed through a **local backend registry**
+(``register_local_backend``, mirroring the engine-strategy registry in
+``core.physical``):
+
+- ``'jnp'``    — the pure-jnp reference path (sort + searchsorted), the
+  CPU default;
+- ``'pallas'`` — the TPU Pallas kernels in ``repro.kernels`` (interpret
+  mode off-TPU), probing the same ``dense_ranks`` int32 encoding so
+  exactness is preserved.
+
+Both backends are bit-identical (pinned by tests/test_local_backend.py and
+the kernel property tests); the engine threads the selection down from
+``GymConfig.local_backend``.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .hashing import dense_ranks, self_ranks
+from ..kernels import ops as K
+from .hashing import dense_ranks, dests_for, self_ranks
 
 _I32MAX = jnp.int32(2**31 - 1)
+
+
+# --------------------------------------------------------------------------
+# local backend registry: who executes the per-shard hot loops
+# --------------------------------------------------------------------------
+LOCAL_BACKENDS: Dict[str, "LocalBackend"] = {}
+
+
+def register_local_backend(name: str):
+    """Class decorator: make a ``LocalBackend`` selectable by name."""
+
+    def deco(cls):
+        cls.name = name
+        LOCAL_BACKENDS[name] = cls()
+        return cls
+
+    return deco
+
+
+def get_local_backend(name: str) -> "LocalBackend":
+    try:
+        return LOCAL_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown local backend {name!r}; registered: {sorted(LOCAL_BACKENDS)}"
+        ) from None
+
+
+class LocalBackend:
+    """The three per-shard hot loops every operator is built from.
+
+    Implementations must be bit-identical: ``dests`` to
+    ``hashing.dests_for``; ``member_mask`` / ``probe_ranges`` to
+    sort+searchsorted over the ``dense_ranks`` int32 encoding (probe
+    values < INT32_MAX; invalid key slots == INT32_MAX)."""
+
+    name = "?"
+
+    def dests(self, data, valid, cols, p: int, seed) -> jax.Array:
+        """Reducer destination in [0,p) per valid row; p for invalid."""
+        raise NotImplementedError
+
+    def member_mask(self, q: jax.Array, keys: jax.Array) -> jax.Array:
+        """mask[i] = q[i] in keys (keys need NOT be sorted)."""
+        raise NotImplementedError
+
+    def probe_ranges(self, q: jax.Array, sorted_keys: jax.Array):
+        """(lo, hi) = searchsorted(sorted_keys, q, 'left'/'right')."""
+        raise NotImplementedError
+
+
+@register_local_backend("jnp")
+class JnpBackend(LocalBackend):
+    """Pure-jnp reference: XLA sort + searchsorted (CPU default).
+
+    Delegates to ``kernels.ops`` with ``use_pallas=False`` — the SAME
+    oracle (``kernels.ref``) the pallas kernels are property-tested
+    against, so there is exactly one copy of the reference semantics."""
+
+    def dests(self, data, valid, cols, p, seed):
+        return dests_for(data, valid, cols, p, seed)
+
+    def member_mask(self, q, keys):
+        return K.semijoin_probe(q, keys, use_pallas=False)
+
+    def probe_ranges(self, q, sorted_keys):
+        return K.sorted_probe_ranges(q, sorted_keys, use_pallas=False)
+
+
+@register_local_backend("pallas")
+class PallasBackend(LocalBackend):
+    """TPU Pallas kernels (``repro.kernels``); interpret mode off-TPU.
+
+    ``member_mask`` is a broadcast-compare probe (no sort of the keys at
+    all); ``probe_ranges`` is rank-by-counting over the sorted keys."""
+
+    def dests(self, data, valid, cols, p, seed):
+        return K.hash_partition(data, valid, cols, p, seed, use_pallas=True)
+
+    def member_mask(self, q, keys):
+        return K.semijoin_probe(q, keys, use_pallas=True)
+
+    def probe_ranges(self, q, sorted_keys):
+        return K.sorted_probe_ranges(q, sorted_keys, use_pallas=True)
 
 
 def compact(data: jax.Array, valid: jax.Array, out_cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -44,6 +144,7 @@ def local_join(
     a_key: Sequence[int], b_key: Sequence[int],
     b_keep: Sequence[int],
     out_cap: int,
+    backend: str = "jnp",
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Natural join on the given key columns.
 
@@ -51,7 +152,9 @@ def local_join(
     schema).  Returns (out_data (out_cap, a_ar + len(b_keep)), out_valid,
     overflow_count)."""
     ra, rb = dense_ranks(a_data, a_valid, a_key, b_data, b_valid, b_key)
-    return local_join_ranked(a_data, a_valid, ra, b_data, b_valid, rb, b_keep, out_cap)
+    return local_join_ranked(
+        a_data, a_valid, ra, b_data, b_valid, rb, b_keep, out_cap, backend
+    )
 
 
 def local_join_ranked(
@@ -59,18 +162,19 @@ def local_join_ranked(
     b_data: jax.Array, b_valid: jax.Array, rb: jax.Array,
     b_keep,
     out_cap: int,
+    backend: str = "jnp",
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Join expansion given precomputed shared key ranks (``dense_ranks``).
 
     ``b_keep`` may be a static tuple OR a traced int32 array (the batched
     path passes per-instance column indices as data); only its LENGTH must
     be static."""
+    be = get_local_backend(backend)
     na, nb = a_data.shape[0], b_data.shape[0]
     rb_sort_key = jnp.where(b_valid, rb, _I32MAX)
     order_b = jnp.argsort(rb_sort_key)
     rb_sorted = rb_sort_key[order_b]
-    lo = jnp.searchsorted(rb_sorted, ra, side="left")
-    hi = jnp.searchsorted(rb_sorted, ra, side="right")
+    lo, hi = be.probe_ranges(ra, rb_sorted)
     counts = jnp.where(a_valid, hi - lo, 0)
     offsets = jnp.cumsum(counts)
     total = offsets[-1] if na else jnp.int32(0)
@@ -95,27 +199,26 @@ def local_join_ranked(
 
 
 def local_join_count(
-    a_data, a_valid, b_data, b_valid, a_key, b_key
+    a_data, a_valid, b_data, b_valid, a_key, b_key, backend: str = "jnp"
 ) -> jax.Array:
     """Exact output size of the join (for capacity planning)."""
+    be = get_local_backend(backend)
     ra, rb = dense_ranks(a_data, a_valid, a_key, b_data, b_valid, b_key)
-    rb_sort_key = jnp.where(b_valid, rb, _I32MAX)
-    rb_sorted = jnp.sort(rb_sort_key)
-    lo = jnp.searchsorted(rb_sorted, ra, side="left")
-    hi = jnp.searchsorted(rb_sorted, ra, side="right")
+    rb_sorted = jnp.sort(jnp.where(b_valid, rb, _I32MAX))
+    lo, hi = be.probe_ranges(ra, rb_sorted)
     return jnp.where(a_valid, hi - lo, 0).sum()
 
 
 def local_semijoin_mask(
     s_data: jax.Array, s_valid: jax.Array, s_key: Sequence[int],
     r_data: jax.Array, r_valid: jax.Array, r_key: Sequence[int],
+    backend: str = "jnp",
 ) -> jax.Array:
     """Mask of S rows whose key appears in R (S |>< R)."""
+    be = get_local_backend(backend)
     rs, rr = dense_ranks(s_data, s_valid, s_key, r_data, r_valid, r_key)
-    rr_sorted = jnp.sort(jnp.where(r_valid, rr, _I32MAX))
-    lo = jnp.searchsorted(rr_sorted, rs, side="left")
-    hi = jnp.searchsorted(rr_sorted, rs, side="right")
-    return s_valid & (hi > lo)
+    keys = jnp.where(r_valid, rr, _I32MAX)
+    return s_valid & be.member_mask(rs, keys)
 
 
 def local_dedup_mask(data: jax.Array, valid: jax.Array, cols: Sequence[int]) -> jax.Array:
@@ -134,9 +237,12 @@ def local_intersect_mask(
     a_data: jax.Array, a_valid: jax.Array,
     b_data: jax.Array, b_valid: jax.Array,
     a_cols: Sequence[int], b_cols: Sequence[int],
+    backend: str = "jnp",
 ) -> jax.Array:
     """Mask of A rows present in B (full-row by aligned columns)."""
-    return local_semijoin_mask(a_data, a_valid, a_cols, b_data, b_valid, b_cols)
+    return local_semijoin_mask(
+        a_data, a_valid, a_cols, b_data, b_valid, b_cols, backend
+    )
 
 
 def local_project(

@@ -15,9 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .hashing import dests_for, hash_columns
+from .hashing import hash_columns
 from .localops import (
     compact,
+    get_local_backend,
     local_dedup_mask,
     local_intersect_mask,
     local_join,
@@ -43,14 +44,15 @@ def agg_stats(stats) -> Dict[str, int]:
 
 
 # ---------------------------------------------------------------- repartition
-def _repart_shard(data, valid, seed, *, cols, p, c_out, cap_recv):
-    dest = dests_for(data, valid, cols, p, seed)
+def _repart_shard(data, valid, seed, *, cols, p, c_out, cap_recv, backend):
+    dest = get_local_backend(backend).dests(data, valid, cols, p, seed)
     rd, rv, sent, ds, dr = exchange(data, valid, dest, p=p, c_out=c_out, cap_recv=cap_recv)
     return rd, rv, _stats(sent, ds + dr)
 
 
 def repartition(
-    spmd: SPMD, t: DTable, attrs: Sequence[str], *, seed: int, c_out: int, cap_recv: int
+    spmd: SPMD, t: DTable, attrs: Sequence[str], *, seed: int, c_out: int,
+    cap_recv: int, backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     rd, rv, stats = spmd.run(
         _repart_shard,
@@ -61,6 +63,7 @@ def repartition(
         p=spmd.p,
         c_out=c_out,
         cap_recv=cap_recv,
+        backend=backend,
     )
     return DTable(rd, rv, t.schema), agg_stats(stats)
 
@@ -68,15 +71,33 @@ def repartition(
 # ----------------------------------------------------------------------- join
 def _join_shard(
     a_data, a_valid, b_data, b_valid, seed, *,
-    a_key, b_key, b_keep, p, c_out_a, c_out_b, cap_a, cap_b, out_cap,
+    a_key, b_key, b_keep, p, c_out_a, c_out_b, cap_a, cap_b, out_cap, backend,
 ):
-    da = dests_for(a_data, a_valid, a_key, p, seed)
+    be = get_local_backend(backend)
+    da = be.dests(a_data, a_valid, a_key, p, seed)
     a2, a2v, sent_a, dsa, dra = exchange(a_data, a_valid, da, p=p, c_out=c_out_a, cap_recv=cap_a)
-    db = dests_for(b_data, b_valid, b_key, p, seed)
+    db = be.dests(b_data, b_valid, b_key, p, seed)
     b2, b2v, sent_b, dsb, drb = exchange(b_data, b_valid, db, p=p, c_out=c_out_b, cap_recv=cap_b)
     # key columns are unchanged by the shuffle: join on a_key/b_key directly
-    out, out_v, over = local_join(a2, a2v, b2, b2v, a_key, b_key, b_keep, out_cap)
+    out, out_v, over = local_join(a2, a2v, b2, b2v, a_key, b_key, b_keep, out_cap, backend)
     return out, out_v, _stats(sent_a + sent_b, dsa + dra + dsb + drb + over)
+
+
+def _cross_join_shard(
+    a_data, a_valid, b_data, b_valid, *, b_keep, p, c_out_b, cap_b, out_cap, backend,
+):
+    """Attribute-disjoint join: A stays put, B broadcasts to every reducer
+    (comm = p * |B|), then an empty-key local join expands A_shard x B.
+    Parallelism p is preserved — unlike hashing on zero columns, which is
+    seed-only and funnels BOTH relations onto a single reducer."""
+    dests = jnp.broadcast_to(jnp.arange(p, dtype=jnp.int32), (b_data.shape[0], p))
+    b2, b2v, sent_b, dsb, drb = exchange_multi(
+        b_data, b_valid, dests, p=p, c_out=c_out_b, cap_recv=cap_b
+    )
+    out, out_v, over = local_join(
+        a_data, a_valid, b2, b2v, (), (), b_keep, out_cap, backend
+    )
+    return out, out_v, _stats(sent_b, dsb + drb + over)
 
 
 def dist_join(
@@ -88,8 +109,12 @@ def dist_join(
     out_cap: int,
     c_out: Optional[Tuple[int, int]] = None,
     cap_recv: Optional[Tuple[int, int]] = None,
+    backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
-    """Hash join of a and b on their shared attributes (co-partitioning)."""
+    """Hash join of a and b on their shared attributes (co-partitioning).
+
+    With NO shared attributes this is an explicit broadcast cross join —
+    every reducer keeps its A shard and receives all of B."""
     shared = [x for x in a.schema if x in b.schema]
     a_key = a.cols(shared)
     b_key = b.cols(shared)
@@ -98,6 +123,15 @@ def dist_join(
     p = spmd.p
     c_out = c_out or (a.cap, b.cap)           # safe: one shard sends all
     cap_recv = cap_recv or (p * a.cap, p * b.cap)  # safe: one shard gets all
+    if not shared:
+        od, ov, stats = spmd.run(
+            _cross_join_shard,
+            a.data, a.valid, b.data, b.valid,
+            b_keep=b_keep, p=p,
+            c_out_b=c_out[1], cap_b=cap_recv[1],
+            out_cap=out_cap, backend=backend,
+        )
+        return DTable(od, ov, out_schema), agg_stats(stats)
     od, ov, stats = spmd.run(
         _join_shard,
         a.data, a.valid, b.data, b.valid, spmd.seeds(seed),
@@ -105,7 +139,7 @@ def dist_join(
         p=p,
         c_out_a=c_out[0], c_out_b=c_out[1],
         cap_a=cap_recv[0], cap_b=cap_recv[1],
-        out_cap=out_cap,
+        out_cap=out_cap, backend=backend,
     )
     return DTable(od, ov, out_schema), agg_stats(stats)
 
@@ -113,18 +147,19 @@ def dist_join(
 # ------------------------------------------------------------------- semijoin
 def _semijoin_shard(
     s_data, s_valid, r_data, r_valid, seed, *,
-    s_key, r_key, p, c_out_s, c_out_r, cap_s, cap_r,
+    s_key, r_key, p, c_out_s, c_out_r, cap_s, cap_r, backend,
 ):
+    be = get_local_backend(backend)
     # ship only the deduplicated key projection of R (S |>< R = S |><
     # pi_{S&R}(R)), as in Sec. 4.1
     rk, rkv = local_project(r_data, r_valid, r_key, dedup=True)
     kcols = tuple(range(len(r_key)))
-    dr_dest = dests_for(rk, rkv, kcols, p, seed)
+    dr_dest = be.dests(rk, rkv, kcols, p, seed)
     rk2, rkv2, sent_r, dsr, drr = exchange(rk, rkv, dr_dest, p=p, c_out=c_out_r, cap_recv=cap_r)
     rkv2 = local_dedup_mask(rk2, rkv2, kcols)
-    ds_dest = dests_for(s_data, s_valid, s_key, p, seed)
+    ds_dest = be.dests(s_data, s_valid, s_key, p, seed)
     s2, s2v, sent_s, dss, drs = exchange(s_data, s_valid, ds_dest, p=p, c_out=c_out_s, cap_recv=cap_s)
-    mask = local_semijoin_mask(s2, s2v, s_key, rk2, rkv2, kcols)
+    mask = local_semijoin_mask(s2, s2v, s_key, rk2, rkv2, kcols, backend)
     s2 = jnp.where(mask[:, None], s2, 0)
     return s2, mask, _stats(sent_r + sent_s, dsr + drr + dss + drs)
 
@@ -137,6 +172,7 @@ def dist_semijoin(
     seed: int,
     c_out: Optional[Tuple[int, int]] = None,
     cap_recv: Optional[Tuple[int, int]] = None,
+    backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     """S |>< R on shared attributes; result has S's schema (repartitioned)."""
     shared = [x for x in s.schema if x in r.schema]
@@ -151,6 +187,7 @@ def dist_semijoin(
         p=p,
         c_out_s=c_out[0], c_out_r=c_out[1],
         cap_s=cap_recv[0], cap_r=cap_recv[1],
+        backend=backend,
     )
     return DTable(sd, sv, s.schema), agg_stats(stats)
 
@@ -158,13 +195,14 @@ def dist_semijoin(
 # ------------------------------------------------------------------ intersect
 def _intersect_shard(
     a_data, a_valid, b_data, b_valid, seed, *,
-    a_cols, b_cols, p, c_out_a, c_out_b, cap_a, cap_b,
+    a_cols, b_cols, p, c_out_a, c_out_b, cap_a, cap_b, backend,
 ):
-    da = dests_for(a_data, a_valid, a_cols, p, seed)
+    be = get_local_backend(backend)
+    da = be.dests(a_data, a_valid, a_cols, p, seed)
     a2, a2v, sent_a, dsa, dra = exchange(a_data, a_valid, da, p=p, c_out=c_out_a, cap_recv=cap_a)
-    db = dests_for(b_data, b_valid, b_cols, p, seed)
+    db = be.dests(b_data, b_valid, b_cols, p, seed)
     b2, b2v, sent_b, dsb, drb = exchange(b_data, b_valid, db, p=p, c_out=c_out_b, cap_recv=cap_b)
-    mask = local_intersect_mask(a2, a2v, b2, b2v, a_cols, b_cols)
+    mask = local_intersect_mask(a2, a2v, b2, b2v, a_cols, b_cols, backend)
     a2 = jnp.where(mask[:, None], a2, 0)
     return a2, mask, _stats(sent_a + sent_b, dsa + dra + dsb + drb)
 
@@ -173,6 +211,7 @@ def dist_intersect(
     spmd: SPMD, a: DTable, b: DTable, *, seed: int,
     c_out: Optional[Tuple[int, int]] = None,
     cap_recv: Optional[Tuple[int, int]] = None,
+    backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     """A intersect B (same attr sets, any column order); result: A's rows."""
     assert set(a.schema) == set(b.schema), (a.schema, b.schema)
@@ -187,13 +226,14 @@ def dist_intersect(
         a_cols=a_cols, b_cols=b_cols, p=p,
         c_out_a=c_out[0], c_out_b=c_out[1],
         cap_a=cap_recv[0], cap_b=cap_recv[1],
+        backend=backend,
     )
     return DTable(ad, av, a.schema), agg_stats(stats)
 
 
 # ---------------------------------------------------------------------- dedup
-def _dedup_shard(data, valid, seed, *, cols, p, c_out, cap_recv):
-    dest = dests_for(data, valid, cols, p, seed)
+def _dedup_shard(data, valid, seed, *, cols, p, c_out, cap_recv, backend):
+    dest = get_local_backend(backend).dests(data, valid, cols, p, seed)
     d2, v2, sent, ds, dr = exchange(data, valid, dest, p=p, c_out=c_out, cap_recv=cap_recv)
     mask = local_dedup_mask(d2, v2, cols)
     d2 = jnp.where(mask[:, None], d2, 0)
@@ -203,6 +243,7 @@ def _dedup_shard(data, valid, seed, *, cols, p, c_out, cap_recv):
 def dist_dedup(
     spmd: SPMD, t: DTable, *, seed: int,
     c_out: Optional[int] = None, cap_recv: Optional[int] = None,
+    backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     p = spmd.p
     c_out = c_out or t.cap
@@ -210,7 +251,7 @@ def dist_dedup(
     cols = tuple(range(len(t.schema)))
     d, v, stats = spmd.run(
         _dedup_shard, t.data, t.valid, spmd.seeds(seed),
-        cols=cols, p=p, c_out=c_out, cap_recv=cap_recv,
+        cols=cols, p=p, c_out=c_out, cap_recv=cap_recv, backend=backend,
     )
     return DTable(d, v, t.schema), agg_stats(stats)
 
@@ -275,7 +316,7 @@ def hypercube_partition(
 
 
 # ------------------------------------------------------- local multiway join
-def _multijoin_shard(*arrays, plan, out_caps):
+def _multijoin_shard(*arrays, plan, out_caps, backend):
     """arrays: d0,v0,d1,v1,...; plan: tuple of (a_key, b_key, b_keep) for the
     left-deep fold; out_caps: per-step output capacities."""
     k = len(arrays) // 2
@@ -287,14 +328,15 @@ def _multijoin_shard(*arrays, plan, out_caps):
         a_key, b_key, b_keep = plan[step]
         acc_d, acc_v, over = local_join(
             acc_d, acc_v, datas[step + 1], valids[step + 1],
-            a_key, b_key, b_keep, out_caps[step],
+            a_key, b_key, b_keep, out_caps[step], backend,
         )
         over_total = over_total + over
     return acc_d, acc_v, _stats(jnp.int32(0), over_total)
 
 
 def local_multiway_join(
-    spmd: SPMD, tables: List[DTable], out_caps: Sequence[int]
+    spmd: SPMD, tables: List[DTable], out_caps: Sequence[int],
+    backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     """Per-shard left-deep multiway join (no communication — reducers join
     their co-located buckets, the reduce stage of Lemma 8)."""
@@ -314,7 +356,8 @@ def local_multiway_join(
     for t in tables:
         args.extend([t.data, t.valid])
     od, ov, stats = spmd.run(
-        _multijoin_shard, *args, plan=tuple(plan), out_caps=tuple(out_caps)
+        _multijoin_shard, *args,
+        plan=tuple(plan), out_caps=tuple(out_caps), backend=backend,
     )
     return DTable(od, ov, schema), agg_stats(stats)
 
@@ -322,21 +365,24 @@ def local_multiway_join(
 # ------------------------------------------------------ join output counting
 def _join_count_shard(
     a_data, a_valid, b_data, b_valid, seed, *,
-    a_key, b_key, p, c_out_a, c_out_b, cap_a, cap_b,
+    a_key, b_key, p, c_out_a, c_out_b, cap_a, cap_b, backend,
 ):
     """Shuffle ONLY the key projections with the join's hash plan and count
     the exact per-shard join output (capacity planning, no payload moved)."""
+    be = get_local_backend(backend)
     ak, akv = local_project(a_data, a_valid, a_key, dedup=False)
     kc = tuple(range(len(a_key)))
-    da = dests_for(ak, akv, kc, p, seed)
+    da = be.dests(ak, akv, kc, p, seed)
     a2, a2v, *_ = exchange(ak, akv, da, p=p, c_out=c_out_a, cap_recv=cap_a)
     bk, bkv = local_project(b_data, b_valid, b_key, dedup=False)
-    db = dests_for(bk, bkv, kc, p, seed)
+    db = be.dests(bk, bkv, kc, p, seed)
     b2, b2v, *_ = exchange(bk, bkv, db, p=p, c_out=c_out_b, cap_recv=cap_b)
-    return local_join_count(a2, a2v, b2, b2v, kc, kc)
+    return local_join_count(a2, a2v, b2, b2v, kc, kc, backend)
 
 
-def dist_join_count(spmd: SPMD, a: DTable, b: DTable, *, seed: int):
+def dist_join_count(
+    spmd: SPMD, a: DTable, b: DTable, *, seed: int, backend: str = "jnp"
+):
     """Exact per-shard output size of ``dist_join(a, b, seed=seed)`` with
     default receive capacities — (p,) int array.  Used by the capacity
     manager to pre-size a blown join's retry instead of guessing."""
@@ -349,6 +395,7 @@ def dist_join_count(spmd: SPMD, a: DTable, b: DTable, *, seed: int):
         p=p,
         c_out_a=a.cap, c_out_b=b.cap,
         cap_a=p * a.cap, cap_b=p * b.cap,
+        backend=backend,
     )
     return np.asarray(counts)
 

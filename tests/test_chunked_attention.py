@@ -26,6 +26,7 @@ from repro.kernels.ref import attention_ref
     causal=st.booleans(),
     chunk=st.sampled_from([8, 16, 64]),
 )
+@pytest.mark.slow
 def test_chunked_matches_dense(b, kvh, g, sq, sk, d, causal, chunk):
     if causal and sq != sk:
         sk = sq  # causal masks assume aligned positions here

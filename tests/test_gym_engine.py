@@ -52,6 +52,7 @@ def oracle_rows(query: Query, data):
 @pytest.mark.parametrize(
     "qname", ["chain4", "star4", "tc2", "example4", "selfjoin"]
 )
+@pytest.mark.slow
 def test_gym_matches_oracle(strategy, qname):
     rng = random.Random(hash((strategy, qname)) & 0xFFFF)
     if qname == "chain4":
@@ -78,6 +79,7 @@ def test_gym_matches_oracle(strategy, qname):
     assert ledger.rounds >= 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n", [2, 3, 5, 8])
 def test_gym_random_acyclic(n):
     rng = random.Random(100 + n)
@@ -89,6 +91,7 @@ def test_gym_random_acyclic(n):
         assert canon(got) == want, f"{q.name} trial {trial}"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n", [3, 4, 6])
 def test_gym_random_cyclic(n):
     rng = random.Random(300 + n)
@@ -112,6 +115,7 @@ def test_gym_empty_result():
     assert ledger.output_tuples == 0
 
 
+@pytest.mark.slow
 def test_gym_via_loggta_and_acqmr():
     rng = random.Random(7)
     q = triangle_chain_query(3)
@@ -123,6 +127,7 @@ def test_gym_via_loggta_and_acqmr():
     assert canon(got2) == want
 
 
+@pytest.mark.slow
 def test_shares_matches_oracle():
     rng = random.Random(11)
     for q in [chain_query(3), star_query(3), triangle_chain_query(1)]:
@@ -180,6 +185,7 @@ def test_schedule_single_writer_per_round():
 
 
 # ---------------------------------------------------------- fault tolerance
+@pytest.mark.slow
 def test_driver_snapshot_resume(tmp_path):
     rng = random.Random(42)
     q = chain_query(5)
@@ -201,6 +207,7 @@ def test_driver_snapshot_resume(tmp_path):
     assert canon(out.to_numpy()) == want
 
 
+@pytest.mark.slow
 def test_grid_strategy_skew_immune():
     """All tuples share one key value: hash co-partition would funnel them
     to a single reducer; the grid path bounds every reducer by position."""

@@ -1,0 +1,211 @@
+"""Property tests pinning Pallas(interpret) == pure-jnp reference for the
+join-engine kernels at the ragged edges: n not a multiple of the block
+size, arity 1-4, non-power-of-two p, empty / all-invalid inputs, and key
+values at the INT32 pad sentinels.
+
+The deterministic sweeps below always run; the hypothesis fuzzers ride on
+top when hypothesis is installed (CI's full lane)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.hash_partition import ROWS_BLK, hash_partition
+from repro.kernels.semijoin_probe import semijoin_probe
+from repro.kernels.sorted_probe import sorted_probe_ranges
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI's fast lane / bare containers
+    HAVE_HYPOTHESIS = False
+
+I32MAX = 2**31 - 1
+I32MIN = -(2**31)
+
+# values at and around the kernels' pad sentinels (key pad = INT32_MAX,
+# probe pad = INT32_MIN + 1), plus a small colliding pool
+EDGE_VALS = [I32MAX - 1, I32MIN + 1, I32MIN + 2, -5, -1, 0, 1, 5]
+
+
+# ------------------------------------------------ deterministic sweeps
+def _probe_arrays(rng, n, m, nvalid):
+    q = rng.choice(EDGE_VALS, size=n).astype(np.int32)
+    keys = rng.choice(EDGE_VALS, size=m).astype(np.int32)
+    keys[nvalid:] = I32MAX
+    return jnp.asarray(q), jnp.asarray(keys)
+
+
+# sizes straddle the (8*128) probe tile and (64*128) key tile boundaries
+@pytest.mark.parametrize(
+    "n,m,nvalid",
+    [
+        (1, 1, 1),
+        (7, 5, 3),
+        (1023, 1025, 1000),  # just off the probe tile boundary
+        (1024, 1024, 1024),  # exactly one probe tile
+        (1025, 8193, 8192),  # just past probe/key tile boundaries
+        (13, 0, 0),          # empty key table
+        (17, 9, 0),          # all-invalid key table
+        (0, 5, 5),           # no probes at all
+    ],
+)
+def test_probe_kernels_ragged_edges(n, m, nvalid):
+    rng = np.random.default_rng(n * 31 + m * 7 + nvalid)
+    q, keys = _probe_arrays(rng, n, m, nvalid)
+
+    got = semijoin_probe(q, keys, interpret=True)
+    want = ref.semijoin_probe_ref(q, keys)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    ks = jnp.sort(keys)
+    lo, hi = sorted_probe_ranges(q, ks, interpret=True)
+    rlo, rhi = ref.sorted_probe_ranges_ref(q, ks)
+    np.testing.assert_array_equal(np.asarray(lo), np.asarray(rlo))
+    np.testing.assert_array_equal(np.asarray(hi), np.asarray(rhi))
+    # the ranges really are match ranges: hi > lo <=> membership
+    np.testing.assert_array_equal(np.asarray(hi > lo), np.asarray(want))
+
+
+@pytest.mark.parametrize("ar", [1, 2, 3, 4])
+@pytest.mark.parametrize("p", [1, 3, 4, 7, 31])  # incl. non-powers-of-two
+def test_hash_partition_ragged_edges(ar, p):
+    rng = np.random.default_rng(ar * 100 + p)
+    n = ROWS_BLK + 17  # not a multiple of the row block
+    rows = jnp.asarray(
+        rng.choice(EDGE_VALS + [I32MAX, I32MIN], size=(n, ar)).astype(np.int32)
+    )
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    cols = tuple(range(ar))[: max(1, ar - 1)]
+    for seed in (0, 13):
+        got = hash_partition(rows, valid, cols, p, seed, interpret=True)
+        want = ref.hash_partition_ref(rows, valid, cols, p, seed)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        g, v = np.asarray(got), np.asarray(valid)
+        assert (g[v] < p).all() and (g[~v] == p).all()
+
+
+def test_hash_partition_traced_seed_matches_static():
+    """Regression: seed is a traced operand — a traced uint32 seed must
+    hash identically to the same python-int seed (and to the jnp ref)."""
+    rng = np.random.default_rng(3)
+    rows = jnp.asarray(rng.integers(-100, 100, (ROWS_BLK + 17, 3)), jnp.int32)
+    valid = jnp.asarray(rng.random(ROWS_BLK + 17) < 0.8)
+    for seed in (0, 13, 2**32 - 1):
+        a = hash_partition(rows, valid, (1, 0), 7, seed, interpret=True)
+        b = hash_partition(rows, valid, (1, 0), 7, jnp.uint32(seed), interpret=True)
+        c = ref.hash_partition_ref(rows, valid, (1, 0), 7, seed)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_hash_partition_traced_seed_no_recompile():
+    """Distinct traced seeds must reuse ONE compiled program (the whole
+    point of taking the seed as data: reseeded abort-retries are free)."""
+    from repro.kernels.hash_partition import _partition_call
+
+    rng = np.random.default_rng(4)
+    rows = jnp.asarray(rng.integers(0, 100, (64, 2)), jnp.int32)
+    valid = jnp.asarray(np.ones(64, bool))
+    n0 = _partition_call._cache_size()
+    for s in range(5):
+        hash_partition(rows, valid, (0,), 4, jnp.uint32(s), interpret=True)
+    assert _partition_call._cache_size() - n0 <= 1
+
+
+def test_all_invalid_inputs():
+    """Empty and all-invalid inputs at block-unaligned sizes."""
+    q = jnp.asarray([1, 2, 3], jnp.int32)
+    no_keys = jnp.zeros((0,), jnp.int32)
+    assert not np.asarray(semijoin_probe(q, no_keys, interpret=True)).any()
+    lo, hi = sorted_probe_ranges(q, no_keys, interpret=True)
+    assert (np.asarray(lo) == 0).all() and (np.asarray(hi) == 0).all()
+
+    all_invalid = jnp.full((13,), I32MAX, jnp.int32)
+    assert not np.asarray(semijoin_probe(q, all_invalid, interpret=True)).any()
+    lo, hi = sorted_probe_ranges(q, all_invalid, interpret=True)
+    assert (np.asarray(lo) == 0).all() and (np.asarray(hi) == 0).all()
+
+    rows = jnp.zeros((5, 2), jnp.int32)
+    invalid = jnp.zeros((5,), bool)
+    got = hash_partition(rows, invalid, (0,), 4, 9, interpret=True)
+    assert (np.asarray(got) == 4).all()
+
+
+# ------------------------------------------------- hypothesis fuzzers
+if HAVE_HYPOTHESIS:
+    _sizes = st.integers(min_value=0, max_value=40)
+    _vals = st.one_of(
+        st.integers(min_value=-5, max_value=5),
+        st.sampled_from([I32MAX - 1, I32MIN + 1, I32MIN + 2, 0]),
+    )
+
+    @st.composite
+    def probe_case(draw):
+        n = draw(_sizes)
+        m = draw(_sizes)
+        q = draw(st.lists(_vals, min_size=n, max_size=n))
+        nvalid = draw(st.integers(min_value=0, max_value=m))
+        keys = draw(st.lists(_vals, min_size=nvalid, max_size=nvalid))
+        keys = keys + [I32MAX] * (m - nvalid)  # invalid slots = pad sentinel
+        return (
+            jnp.asarray(np.asarray(q, np.int32).reshape(n)),
+            jnp.asarray(np.asarray(keys, np.int32).reshape(m)),
+        )
+
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None)
+    @given(probe_case())
+    def test_semijoin_probe_property(case):
+        q, keys = case
+        got = semijoin_probe(q, keys, interpret=True)
+        want = ref.semijoin_probe_ref(q, keys)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None)
+    @given(probe_case())
+    def test_sorted_probe_property(case):
+        q, keys = case
+        # contract: probes < INT32_MAX; keys sorted (sentinels to the back)
+        q = jnp.minimum(q, I32MAX - 1)
+        keys = jnp.sort(keys)
+        lo, hi = sorted_probe_ranges(q, keys, interpret=True)
+        rlo, rhi = ref.sorted_probe_ranges_ref(q, keys)
+        np.testing.assert_array_equal(np.asarray(lo), np.asarray(rlo))
+        np.testing.assert_array_equal(np.asarray(hi), np.asarray(rhi))
+
+    @st.composite
+    def partition_case(draw):
+        n = draw(st.integers(min_value=1, max_value=ROWS_BLK + 40))
+        ar = draw(st.integers(min_value=1, max_value=4))
+        ncols = draw(st.integers(min_value=1, max_value=ar))
+        cols = tuple(draw(st.permutations(range(ar)))[:ncols])
+        p = draw(st.sampled_from([1, 2, 3, 4, 7, 16, 31]))
+        seed = draw(st.integers(min_value=0, max_value=2**32 - 1))
+        rows = draw(
+            st.lists(
+                st.lists(_vals, min_size=ar, max_size=ar), min_size=n, max_size=n
+            )
+        )
+        valid = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+        return (
+            jnp.asarray(np.asarray(rows, np.int32).reshape(n, ar)),
+            jnp.asarray(np.asarray(valid, bool).reshape(n)),
+            cols,
+            p,
+            seed,
+        )
+
+    @pytest.mark.slow
+    @settings(max_examples=25, deadline=None)
+    @given(partition_case())
+    def test_hash_partition_property(case):
+        rows, valid, cols, p, seed = case
+        got = hash_partition(rows, valid, cols, p, seed, interpret=True)
+        want = ref.hash_partition_ref(rows, valid, cols, p, seed)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,230 @@
+"""Local kernel backend ('jnp' | 'pallas'): the Pallas kernels wired into
+the shard-local compute path must be bit-identical to the jnp reference —
+per local op, per distributed op, and for a full ``gym()`` query (rows,
+ledger comm_tuples, retry counts) — plus the engine bugfix batch:
+cross joins, traced kernel seeds, and post-completion snapshot resume."""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.decompose import ghd_for
+from repro.core.gym import GymConfig, GymDriver, gym
+from repro.core.hypergraph import Atom, Query
+from repro.core.queries import chain_query, chain_ghd, star_query, star_ghd
+from repro.data.synthetic import chain_data_sparse, star_data_sparse
+from repro.relational.localops import (
+    LOCAL_BACKENDS,
+    get_local_backend,
+    local_join,
+    local_join_count,
+    local_semijoin_mask,
+)
+from repro.relational.oracle import canon, np_query_answer, reorder
+from repro.relational.ops import dist_join
+from repro.relational.spmd import SPMD
+from repro.relational.table import DTable
+
+
+def oracle_rows(query, data):
+    atoms = [(a.alias, a.attrs) for a in query.atoms]
+    d = {a.alias: data[a.rel] for a in query.atoms}
+    rows, schema = np_query_answer(atoms, d)
+    return canon(reorder(rows, schema, query.output_attrs))
+
+
+# ------------------------------------------------------------- registry
+def test_backend_registry():
+    assert {"jnp", "pallas"} <= set(LOCAL_BACKENDS)
+    assert get_local_backend("jnp").name == "jnp"
+    assert get_local_backend("pallas").name == "pallas"
+    with pytest.raises(ValueError, match="unknown local backend"):
+        get_local_backend("cuda")
+
+
+# ------------------------------------------------- per-localop parity
+def _rand_tables(rng, na, nb, ar=3, dom=7):
+    ad = jnp.asarray(rng.integers(0, dom, (na, ar)), jnp.int32)
+    av = jnp.asarray(rng.random(na) < 0.8)
+    bd = jnp.asarray(rng.integers(0, dom, (nb, ar)), jnp.int32)
+    bv = jnp.asarray(rng.random(nb) < 0.8)
+    return ad, av, bd, bv
+
+
+@pytest.mark.parametrize("na,nb,all_invalid", [(16, 16, False), (37, 129, False), (8, 6, True)])
+def test_localops_backend_parity(na, nb, all_invalid):
+    rng = np.random.default_rng(na * 1000 + nb)
+    ad, av, bd, bv = _rand_tables(rng, na, nb)
+    if all_invalid:  # "empty" operand the way the engine represents it
+        bv = jnp.zeros_like(bv)
+    key = (0, 2)
+    ref_mask = local_semijoin_mask(ad, av, key, bd, bv, key, "jnp")
+    got_mask = local_semijoin_mask(ad, av, key, bd, bv, key, "pallas")
+    np.testing.assert_array_equal(np.asarray(got_mask), np.asarray(ref_mask))
+
+    ref_cnt = local_join_count(ad, av, bd, bv, key, key, "jnp")
+    got_cnt = local_join_count(ad, av, bd, bv, key, key, "pallas")
+    assert int(ref_cnt) == int(got_cnt)
+
+    out_cap = max(4, int(ref_cnt) + 3)
+    ref_j = local_join(ad, av, bd, bv, key, key, (1,), out_cap, "jnp")
+    got_j = local_join(ad, av, bd, bv, key, key, (1,), out_cap, "pallas")
+    for r, g in zip(ref_j, got_j):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
+
+
+# ------------------------------------------- end-to-end gym() parity
+CASES = {
+    "chain8": lambda: (chain_query(8), chain_ghd(8), chain_data_sparse(8, seed=7)),
+    "star5": lambda: (star_query(5), star_ghd(5), star_data_sparse(5, seed=9)),
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["hash", "grid"])
+@pytest.mark.parametrize("qname", sorted(CASES))
+def test_gym_backend_parity(strategy, qname):
+    """Acceptance: a full gym() query is bit-identical under
+    local_backend='jnp' and 'pallas' — rows, comm_tuples, retries."""
+    q, g, data = CASES[qname]()
+    want = oracle_rows(q, data)
+    got = {}
+    for be in ("jnp", "pallas"):
+        rows, schema, ledger = gym(
+            q, data, ghd=g, p=4,
+            config=GymConfig(strategy=strategy, seed=3, local_backend=be),
+        )
+        assert canon(rows) == want, (qname, strategy, be)
+        got[be] = (canon(rows), ledger.comm_tuples, ledger.retries)
+    assert got["jnp"] == got["pallas"], (qname, strategy)
+
+
+def test_gym_backend_parity_with_retries():
+    """Skewed data forces overflow-retries: the retry path (reseeded
+    dests + exact join presize) must agree across backends too."""
+    q = chain_query(2)
+    n = 24
+    data = {
+        "R1": np.stack([np.arange(n, dtype=np.int32), np.zeros(n, np.int32)], 1),
+        "R2": np.stack([np.zeros(n, np.int32), np.arange(n, dtype=np.int32)], 1),
+    }
+    want = oracle_rows(q, data)
+    got = {}
+    for be in ("jnp", "pallas"):
+        rows, _, ledger = gym(
+            q, data, p=4, config=GymConfig(seed=3, local_backend=be)
+        )
+        assert canon(rows) == want
+        got[be] = (canon(rows), ledger.comm_tuples, ledger.retries)
+    assert got["jnp"]
+    assert got["jnp"] == got["pallas"]
+
+
+# --------------------------------------------------- cross join bugfix
+def _mk(rows, schema, p=4, cap=4):
+    return DTable.scatter_numpy(np.asarray(rows, np.int32), schema, p, cap=cap)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_dist_join_no_shared_attrs_is_parallel_cross_join(backend):
+    """Attribute-disjoint dist_join must be an explicit broadcast cross
+    join — correct result, comm = p * |B|, and NOT funneled through a
+    single reducer (the old behavior hashed every row to one shard)."""
+    spmd = SPMD(4)
+    a_rows = [[0, 1], [2, 3], [4, 5], [6, 7], [8, 9]]
+    b_rows = [[7, 8], [9, 10]]
+    a = _mk(a_rows, ("A", "B"))
+    b = _mk(b_rows, ("C", "D"))
+    out, st = dist_join(spmd, a, b, seed=11, out_cap=64, backend=backend)
+    assert out.schema == ("A", "B", "C", "D")
+    want = {tuple(ar) + tuple(br) for ar in a_rows for br in b_rows}
+    assert out.to_set() == want
+    assert st["dropped"] == 0
+    assert st["sent"] == spmd.p * len(b_rows)  # only B moves, replicated
+    # A never moved: each reducer holds its own A shard, so the per-shard
+    # output count mirrors the A scatter instead of collapsing to one shard
+    per_shard = np.asarray(out.valid).sum(axis=1)
+    a_per_shard = np.asarray(a.valid).sum(axis=1)
+    np.testing.assert_array_equal(per_shard, a_per_shard * len(b_rows))
+
+
+def test_gym_cartesian_bag():
+    """A single GHD bag holding attribute-disjoint relations exercises the
+    broadcast cross join inside materialization (HashEngine.multijoin of
+    two parts with no shared attributes)."""
+    from repro.core.ghd import GHD
+
+    q = Query(
+        [Atom("R1", "R", ("A", "B")), Atom("S1", "S", ("C", "D"))],
+        name="Cartesian",
+    )
+    g = GHD.build(
+        0, [], {0: ("A", "B", "C", "D")}, {0: frozenset(["R1", "S1"])}
+    )
+    rng = np.random.default_rng(5)
+    data = {
+        "R": rng.integers(0, 4, (6, 2)).astype(np.int32),
+        "S": rng.integers(0, 4, (5, 2)).astype(np.int32),
+    }
+    want = oracle_rows(q, data)
+    for be in ("jnp", "pallas"):
+        rows, schema, _ = gym(
+            q, data, ghd=g, p=4, config=GymConfig(seed=2, local_backend=be)
+        )
+        assert canon(rows) == want, be
+
+
+# ------------------------------------- snapshot / resume regressions
+def test_snapshot_roundtrips_local_backend(tmp_path):
+    """GymConfig.local_backend must survive save/load — a resumed driver
+    keeps computing on the backend the snapshot was taken with."""
+    rng = random.Random(42)
+    q = chain_query(4)
+    data = {
+        f"R{i}": np.asarray(
+            [[rng.randint(0, 5), rng.randint(0, 5)] for _ in range(10)], np.int32
+        )
+        for i in range(1, 5)
+    }
+    want = oracle_rows(q, data)
+    drv = GymDriver(
+        q, ghd_for(q), data, SPMD(4), GymConfig(seed=1, local_backend="pallas")
+    )
+    drv.step()
+    drv.step()
+    snap = str(tmp_path / "snap.npz")
+    drv.save(snap)
+    # resume under a DIFFERENT config: the snapshot's must win
+    drv2 = GymDriver(q, ghd_for(q), data, SPMD(4), GymConfig(seed=1))
+    drv2.load(snap)
+    assert drv2.config.local_backend == "pallas"
+    assert drv2.executor.local_backend == "pallas"
+    assert drv2.capman.local_backend == "pallas"
+    out = drv2.run()
+    assert canon(out.to_numpy()) == want
+
+
+def test_post_completion_snapshot_resume(tmp_path):
+    """Regression: loading a snapshot taken AFTER completion (done=True)
+    used to leave self.result unset, so run() tripped its assert."""
+    rng = random.Random(7)
+    q = chain_query(3)
+    data = {
+        f"R{i}": np.asarray(
+            [[rng.randint(0, 4), rng.randint(0, 4)] for _ in range(8)], np.int32
+        )
+        for i in range(1, 4)
+    }
+    drv = GymDriver(q, ghd_for(q), data, SPMD(4), GymConfig(seed=1))
+    first = drv.run()
+    assert drv.done
+    snap = str(tmp_path / "done.npz")
+    drv.save(snap)
+    drv2 = GymDriver(q, ghd_for(q), data, SPMD(4), GymConfig(seed=1))
+    drv2.load(snap)
+    out = drv2.run()  # must not raise
+    assert out.to_set() == first.to_set()
+    assert drv2.ledger.output_tuples == drv.ledger.output_tuples

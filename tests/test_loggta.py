@@ -71,6 +71,7 @@ def test_loggta_triangle_chain_family(n_tri):
 
 
 # ------------------------------------------------------------ property tests
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(st.integers(min_value=2, max_value=28), st.randoms(use_true_random=False))
 def test_loggta_property_acyclic(n_atoms, rnd):
@@ -84,6 +85,7 @@ def test_loggta_property_acyclic(n_atoms, rnd):
     assert out.depth <= _log_bound(g.size())
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.integers(min_value=2, max_value=16), st.randoms(use_true_random=False))
 def test_loggta_prime_property(n_atoms, rnd):

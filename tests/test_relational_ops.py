@@ -44,6 +44,7 @@ def test_join_small(p):
     assert out.to_set() == canon(expect)
 
 
+@pytest.mark.slow
 @settings(max_examples=30, deadline=None)
 @given(rows_strategy, rows_strategy, st.integers(1, 5))
 def test_join_property(a_rows, b_rows, p):
@@ -61,6 +62,7 @@ def test_join_property(a_rows, b_rows, p):
     assert out.to_set() == canon(expect)
 
 
+@pytest.mark.slow
 @settings(max_examples=30, deadline=None)
 @given(rows_strategy, rows_strategy, st.integers(1, 5))
 def test_semijoin_property(s_rows, r_rows, p):
@@ -95,6 +97,7 @@ def test_semijoin_ships_projection_only():
     assert out.count() == 40
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(rows_strategy, st.integers(1, 5))
 def test_dedup_property(rows, p):
@@ -109,6 +112,7 @@ def test_dedup_property(rows, p):
     assert int(out.count()) == len(np_dedup(dup, 2))
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(rows_strategy, rows_strategy, st.integers(1, 4))
 def test_intersect_property(a_rows, b_rows, p):

@@ -119,6 +119,7 @@ CASES = {
 }
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("strategy", ["hash", "grid"])
 @pytest.mark.parametrize("qname", sorted(CASES))
 def test_fused_sequential_parity(strategy, qname):
@@ -155,6 +156,7 @@ def test_chain_dispatches_at_most_ops_per_round():
         assert 0 < r.dispatches <= len(r.ops), (r.phase, r.ops, r.dispatches)
 
 
+@pytest.mark.slow
 def test_star_fusion_strictly_fewer_dispatches():
     """A star's DYM-d rounds carry parallel op groups: fused execution must
     strictly beat sequential on measured dispatches."""
