@@ -1,0 +1,145 @@
+"""Plan advisor sweep over the Table-1 query families: run every manual
+(schedule x engine) pick on the hand GHD, run ``GymConfig(plan="auto")``,
+and hold the advisor to its contract — the auto pick's measured
+communication must never exceed the WORST manual pick's.
+
+Also renders ``explain()``'s predicted-vs-measured table per family (the
+``optimizer_explain`` rows) and demonstrates the calibration loop: per-
+engine constants fitted on two families strictly reduce prediction error
+on the held-out third (``optimizer_calibration`` row).
+"""
+from __future__ import annotations
+
+from repro.core.costs import fit_calibration, prediction_error
+from repro.core.gym import GymConfig, gym
+from repro.core.optimizer import (
+    MachineProfile,
+    choose_plan,
+    enumerate_plans,
+    explain,
+    stats_from_data,
+)
+from repro.core.queries import (
+    chain_ghd,
+    chain_query,
+    star_ghd,
+    star_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+from repro.data.synthetic import chain_data_sparse, star_data_sparse, tc_data_sparse
+
+P = 8
+SEED = 33
+SCHEDULES = ("dym_d", "dym_n")
+ENGINES = ("hash", "grid")
+
+
+def _families():
+    return [
+        ("S_8", star_query(8), star_ghd(8), star_data_sparse(8, seed=21)),
+        ("C_8", chain_query(8), chain_ghd(8), chain_data_sparse(8, seed=11)),
+        ("TC_9", triangle_chain_query(3), triangle_chain_ghd(3),
+         tc_data_sparse(3, seed=22)),
+    ]
+
+
+def run() -> list:
+    out = []
+    profile = MachineProfile(p=P)
+    records = {}  # family -> list of calibration records (manual runs)
+    per_family = {}
+    for name, q, g, data in _families():
+        stats = stats_from_data(q, data)
+        plans = {
+            pl.key: pl
+            for pl in enumerate_plans(q, stats, profile=profile, hand_ghd=g)
+        }
+        measured = {}
+        recs = []
+        for sched in SCHEDULES:
+            for eng in ENGINES:
+                cfg = GymConfig(strategy=eng, schedule=sched, seed=SEED)
+                _, _, led = gym(q, data, ghd=g, p=P, config=cfg)
+                key = f"hand|{sched}|{eng}|fused"
+                measured[key] = led
+                recs.append(
+                    led.calibration_record(
+                        engine=eng,
+                        schedule=sched,
+                        query=name,
+                        predicted_comm=plans[key].predicted_comm,
+                    )
+                )
+        records[name] = recs
+        chosen = choose_plan(q, stats, profile=profile, hand_ghd=g)
+        _, _, led_auto = gym(q, data, ghd=g, p=P, config=GymConfig(plan="auto", seed=SEED))
+        measured[chosen.key] = led_auto
+        per_family[name] = (q, g, stats, chosen, measured)
+
+        manual_comms = {
+            k: v.comm_tuples for k, v in measured.items() if k.startswith("hand|")
+        }
+        worst, best = max(manual_comms.values()), min(manual_comms.values())
+        # the advisor's contract (acceptance criterion): never worse than
+        # the worst manual (schedule x engine) pick
+        assert led_auto.comm_tuples <= worst, (
+            name, chosen.key, led_auto.comm_tuples, worst
+        )
+        out.append(
+            dict(
+                bench="optimizer",
+                query=name,
+                plan=chosen.key,
+                predicted_comm=round(chosen.predicted_comm, 1),
+                auto_comm=led_auto.comm_tuples,
+                auto_rounds=led_auto.rounds,
+                best_manual=best,
+                worst_manual=worst,
+                ok=True,
+            )
+        )
+
+    # predicted-vs-measured tables (markdown), one per family
+    for name, (q, g, stats, chosen, measured) in per_family.items():
+        md = explain(
+            q, stats, hand_ghd=g, profile=profile, measured=measured,
+            fmt="markdown",
+        )
+        out.append(dict(bench="optimizer_explain", query=name, explain=md))
+
+    # calibration loop: fit per-engine constants on S_8 + C_8, evaluate
+    # on the held-out TC_9 hand plans
+    train = records["S_8"] + records["C_8"]
+    cal = fit_calibration(train)
+    q, g, stats, _, measured = per_family["TC_9"]
+    plans_u = {
+        pl.key: pl for pl in enumerate_plans(q, stats, profile=profile, hand_ghd=g)
+    }
+    plans_c = {
+        pl.key: pl
+        for pl in enumerate_plans(
+            q, stats, profile=profile, hand_ghd=g, calibration=cal
+        )
+    }
+    err_u = err_c = 0.0
+    n = 0
+    for key, led in measured.items():
+        if not key.startswith("hand|"):
+            continue
+        err_u += prediction_error(plans_u[key].predicted_comm, led.comm_tuples)
+        err_c += prediction_error(plans_c[key].predicted_comm, led.comm_tuples)
+        n += 1
+    err_u, err_c = err_u / n, err_c / n
+    assert err_c < err_u, (err_c, err_u)  # calibration must help held-out
+    out.append(
+        dict(
+            bench="optimizer_calibration",
+            train="S_8+C_8",
+            test="TC_9",
+            scale={k: round(v, 3) for k, v in cal.comm_scale.items()},
+            err_uncalibrated=round(err_u, 4),
+            err_calibrated=round(err_c, 4),
+        )
+    )
+    return out

@@ -1,5 +1,7 @@
 """Render EXPERIMENTS.md's §Dry-run and §Roofline tables from the dry-run
-JSONs (baseline + optimized).  Run after a sweep:
+JSONs (baseline + optimized), plus the provenance table that links every
+*predicted* benchmark column back to the formula (and paper citation) in
+``repro.core.costs`` that produced it.  Run after a sweep:
 
     PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
 """
@@ -9,6 +11,45 @@ import json
 import os
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# Every predicted column a benchmark emits, mapped to the formula that
+# computes it.  Each formula's docstring in ``repro.core.costs`` (or the
+# schedule registry in ``repro.core.planner``) carries the full paper
+# citation; this table is how a reader gets from a JSON row back to the
+# equation.
+PREDICTED_COLUMNS = [
+    # (benchmark, column, formula, paper source)
+    ("lemmas", "analytic", "repro.core.costs.lemma8_join_comm /"
+     " lemma10_semijoin_comm", "Lemmas 8 & 10 (Sec. 3.3)"),
+    ("table2/table3", "worst-case comm", "repro.core.costs.shares_comm_star /"
+     " shares_comm_tc / gym_comm / acqmr_comm",
+     "Tables 2 & 3; Theorem 15; Sec. 2.2/2.3"),
+    ("table1", "width / depth / iw", "repro.core.ghd.GHD.width / .depth /"
+     " .intersection_width", "Table 1 / Sec. 3.1"),
+    ("fig6", "width_out / depth_out bounds", "repro.core.loggta.log_gta",
+     "Theorem 23 / Sec. 6 (Figure 6)"),
+    ("optimizer", "predicted_comm", "repro.core.costs.predict_plan_cost",
+     "per-op Lemmas 8/10 + Theorem 15 stage walk; Appendix A sizes"),
+    ("optimizer", "pred_rounds", "repro.core.costs.predict_plan_cost +"
+     " repro.core.planner.SCHEDULES",
+     "Theorem 12 (Sec. 4.2) / Theorem 14 (Sec. 4.3)"),
+    ("optimizer_explain", "err", "repro.core.optimizer.explain",
+     "signed relative error (pred - meas) / meas of the explain() table"),
+    ("optimizer_calibration", "err_uncalibrated / err_calibrated",
+     "repro.core.costs.prediction_error / fit_calibration",
+     "|log(pred/meas)| — the quantity the log-space fit minimizes"),
+]
+
+
+def provenance_table() -> str:
+    head = (
+        "| benchmark | predicted column | formula (see its docstring for the"
+        " equation) | paper source |\n|---|---|---|---|"
+    )
+    rows = [
+        f"| {b} | {c} | `{f}` | {s} |" for b, c, f, s in PREDICTED_COLUMNS
+    ]
+    return head + "\n" + "\n".join(rows)
 
 
 def load(name):
@@ -70,17 +111,24 @@ def roofline_table(db, db_opt, mesh="single"):
 
 
 def main():
-    base = load("dryrun_results_baseline.json")
     try:
-        opt = load("dryrun_results.json")
+        base = load("dryrun_results_baseline.json")
     except FileNotFoundError:
-        opt = {}
-    print("### Single-pod (16x16 = 256 chips) — baseline dry-run\n")
-    print(dryrun_table(base, "single"))
-    print("\n### Multi-pod (2x16x16 = 512 chips) — baseline dry-run\n")
-    print(dryrun_table(base, "multi"))
-    print("\n### Roofline (single-pod, baseline terms; optimized bound alongside)\n")
-    print(roofline_table(base, opt))
+        base = None
+        print("(no dryrun_results_baseline.json — skipping dry-run/roofline tables)")
+    if base is not None:
+        try:
+            opt = load("dryrun_results.json")
+        except FileNotFoundError:
+            opt = {}
+        print("### Single-pod (16x16 = 256 chips) — baseline dry-run\n")
+        print(dryrun_table(base, "single"))
+        print("\n### Multi-pod (2x16x16 = 512 chips) — baseline dry-run\n")
+        print(dryrun_table(base, "multi"))
+        print("\n### Roofline (single-pod, baseline terms; optimized bound alongside)\n")
+        print(roofline_table(base, opt))
+    print("\n### Predicted-column provenance (benchmarks/run.py output)\n")
+    print(provenance_table())
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from . import (
     bench_kernels,
     bench_lemmas,
     bench_lm,
+    bench_optimizer,
     bench_table1,
     bench_table2,
     bench_table3,
@@ -35,6 +36,7 @@ ALL = {
     "engine": bench_engine,
     "fusion": bench_fusion,
     "kernels": bench_kernels,
+    "optimizer": bench_optimizer,
     "lm": bench_lm,
 }
 

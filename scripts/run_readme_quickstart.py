@@ -1,0 +1,39 @@
+"""Extract the README quickstart code block and execute it verbatim.
+
+CI's docs lane runs this (see .github/workflows/ci.yml), so the README
+can never drift from the actual API: if the quickstart stops running,
+the lane fails.
+
+    PYTHONPATH=src python scripts/run_readme_quickstart.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+README = pathlib.Path(__file__).resolve().parents[1] / "README.md"
+
+
+def extract_quickstart(text: str) -> str:
+    m = re.search(
+        r"<!-- quickstart -->\s*```python\n(.*?)```\s*<!-- /quickstart -->",
+        text,
+        re.S,
+    )
+    if not m:
+        sys.exit("README.md: quickstart block markers not found")
+    return m.group(1)
+
+
+def main() -> None:
+    code = extract_quickstart(README.read_text())
+    print("--- README quickstart ---")
+    print(code)
+    print("--- output ---")
+    exec(compile(code, "README.md:quickstart", "exec"), {"__name__": "__main__"})
+    print("README quickstart OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -109,6 +109,28 @@ class GHD:
     def size(self) -> int:
         return len(self.chi)
 
+    # -- serialization (snapshots must replay the exact decomposition) --------
+    def to_dict(self) -> Dict:
+        return {
+            "root": self.root,
+            "parent": {str(n): p for n, p in self.parent.items()},
+            "children": {str(n): list(c) for n, c in self.children.items()},
+            "chi": {str(n): sorted(v) for n, v in self.chi.items()},
+            "lam": {str(n): sorted(v) for n, v in self.lam.items()},
+        }
+
+    @staticmethod
+    def from_dict(d: Dict) -> "GHD":
+        g = GHD(
+            root=int(d["root"]),
+            parent={int(n): p for n, p in d["parent"].items()},
+            children={int(n): list(c) for n, c in d["children"].items()},
+            chi={int(n): frozenset(v) for n, v in d["chi"].items()},
+            lam={int(n): frozenset(v) for n, v in d["lam"].items()},
+        )
+        g._check_tree()
+        return g
+
     # -- subtree / ordering helpers -------------------------------------------
     def topo_order(self) -> List[int]:
         """Root-first order."""

@@ -35,7 +35,7 @@ from ..relational.table import DTable
 from .ghd import GHD
 from .hypergraph import Query
 from .physical import CapacityManager, PhysicalExecutor, pow2 as _pow2
-from .planner import Round, dym_d_schedule, dym_n_schedule
+from .planner import Round, get_schedule
 
 
 # --------------------------------------------------------------------------
@@ -51,6 +51,12 @@ class GymConfig:
     count_retries_comm: bool = True  # aborted rounds still moved tuples
     fused: bool = True  # one SPMD dispatch per homogeneous op group
     local_backend: str = "jnp"  # shard-local hot loops: 'jnp' | 'pallas'
+    # 'manual' = run exactly the knobs above; 'auto' = let the advisor
+    # (core/optimizer.py) pick GHD/schedule/engine/fusion from stats.
+    # After resolution the field holds the chosen Plan.key, so snapshots
+    # record — and resume replays — the decision, never re-optimizing
+    # mid-query.
+    plan: str = "manual"
 
 
 class GymDriver:
@@ -63,10 +69,40 @@ class GymDriver:
         data: Dict[str, np.ndarray],
         spmd: SPMD,
         config: Optional[GymConfig] = None,
+        plan=None,  # Optional[optimizer.Plan]: execute this plan directly
     ):
         self.query = query
         self.config = config or GymConfig()
         self.spmd = spmd
+        # dedup base relations once (relations are sets); the distinct row
+        # counts double as the advisor's table statistics
+        dedup_rows: Dict[str, np.ndarray] = {}
+        for atom in query.atoms:
+            rows = np.asarray(data[atom.rel], dtype=np.int32).reshape(
+                -1, len(atom.attrs)
+            )
+            if rows.shape[0]:
+                rows = np.unique(rows, axis=0)
+            dedup_rows[atom.alias] = rows
+        if plan is None and self.config.plan == "auto":
+            from .optimizer import MachineProfile, choose_plan
+
+            stats = {
+                a.rel: int(dedup_rows[a.alias].shape[0]) for a in query.atoms
+            }
+            plan = choose_plan(
+                query,
+                stats,
+                profile=MachineProfile(p=spmd.p),
+                hand_ghd=ghd,
+                local_backend=self.config.local_backend,
+            )
+        self.plan = plan
+        if plan is not None:
+            # the plan decides GHD + engine knobs; config mirrors it so
+            # snapshots round-trip the full decision
+            ghd = plan.ghd
+            self.config = plan.to_config(self.config)
         self.ghd = ghd.make_complete(query)
         self.ledger = Ledger()
 
@@ -81,9 +117,7 @@ class GymDriver:
         p = spmd.p
         self.base: Dict[str, DTable] = {}
         for atom in query.atoms:
-            rows = np.asarray(data[atom.rel], dtype=np.int32).reshape(-1, len(atom.attrs))
-            if rows.shape[0]:
-                rows = np.unique(rows, axis=0)  # relations are sets
+            rows = dedup_rows[atom.alias]
             cap = _pow2(max(1, -(-rows.shape[0] // p)))  # pow2: shape reuse
             self.base[atom.alias] = spmd.device_put(
                 DTable.scatter_numpy(rows, atom.attrs, p, cap=cap)
@@ -97,8 +131,7 @@ class GymDriver:
             self.capman.ensure(v, self._init_cap(v))
         self.executor = self._make_executor()
 
-        sched = dym_d_schedule if cfg.schedule == "dym_d" else dym_n_schedule
-        self.schedule: List[Round] = sched(self.ghd)
+        self.schedule: List[Round] = get_schedule(cfg.schedule).fn(self.ghd)
         self.tables: Dict[int, DTable] = {}
         # Upward-phase L2 accumulators: the paper's "replace R1 ... for the
         # duration of the upward semijoin phase".  Node tables stay intact
@@ -110,6 +143,18 @@ class GymDriver:
 
     def _make_executor(self) -> PhysicalExecutor:
         cfg = self.config
+        if self.plan is not None:
+            # config mirrors the plan by construction (to_config in
+            # __init__); load() clears self.plan before rebuilding, so a
+            # restored snapshot config can never disagree with this path
+            return PhysicalExecutor.from_plan(
+                self.spmd,
+                self.plan,
+                self.capman,
+                seed=cfg.seed,
+                max_retries=cfg.max_retries,
+                count_retries_comm=cfg.count_retries_comm,
+            )
         return PhysicalExecutor(
             self.spmd,
             cfg.strategy,
@@ -204,6 +249,10 @@ class GymDriver:
             "cursor": self.cursor,
             "done": self.done,
             "config": dataclasses.asdict(self.config),
+            # the (complete) GHD actually being executed: an auto/plan run
+            # may use a different decomposition than the resuming driver
+            # was constructed with, so resume must replay THIS tree
+            "ghd": self.ghd.to_dict(),
             "caps": {str(k): v for k, v in self.caps.items()},
             "ledger": {
                 "records": [dataclasses.asdict(r) for r in self.ledger.records],
@@ -231,16 +280,27 @@ class GymDriver:
         meta = json.loads(str(z["meta"]))
         self.cursor = meta["cursor"]
         self.done = meta["done"]
+        if "ghd" in meta:
+            # the snapshot's GHD wins: tables/caps/schedule are all keyed
+            # by ITS node ids, which (for plan="auto" runs) need not match
+            # the decomposition the resuming driver was constructed with
+            self.ghd = GHD.from_dict(meta["ghd"])
+            attr_order = {a: i for i, a in enumerate(self.query.output_attrs)}
+            self.node_schema = {
+                v: tuple(sorted(self.ghd.chi[v], key=lambda a: attr_order[a]))
+                for v in self.ghd.nodes()
+            }
         if "config" in meta:
             # the snapshot's config wins (incl. local_backend): resuming on
             # a different driver config must not change the query's plan,
-            # seeds, or backend mid-flight
+            # seeds, or backend mid-flight.  The constructor's in-memory
+            # Plan (if any) is superseded by the restored config.
             self.config = GymConfig(**meta["config"])
+            self.plan = None
             self.capman.local_backend = self.config.local_backend
             self.capman.growth = self.config.cap_growth
             self.executor = self._make_executor()
-            sched = dym_d_schedule if self.config.schedule == "dym_d" else dym_n_schedule
-            self.schedule = sched(self.ghd)
+            self.schedule = get_schedule(self.config.schedule).fn(self.ghd)
         self.caps = {int(k): v for k, v in meta["caps"].items()}
         led = Ledger()
         from ..relational.ledger import RoundRecord
@@ -294,12 +354,23 @@ def gym(
     p: int = 4,
     spmd: Optional[SPMD] = None,
     config: Optional[GymConfig] = None,
+    plan=None,  # Optional[optimizer.Plan]
 ) -> Tuple[np.ndarray, Tuple[str, ...], Ledger]:
-    """Evaluate Q with GYM.  Returns (rows, schema, ledger)."""
+    """Evaluate Q with GYM.  Returns (rows, schema, ledger).
+
+    Three ways to pick the physical plan:
+      - manual (default): ``ghd`` + ``GymConfig`` knobs as given;
+      - ``config=GymConfig(plan="auto")``: the cost-based advisor
+        (``core/optimizer.py``) enumerates GHD x schedule x engine x
+        fusion candidates and executes the argmin (``ghd``, if given,
+        joins the candidate set as the 'hand' GHD);
+      - ``plan=<Plan>``: execute a plan the caller already chose, e.g.
+        from ``optimizer.enumerate_plans`` or a previous ``explain()``.
+    """
     from .decompose import ghd_for
 
-    g = ghd if ghd is not None else ghd_for(query)
+    g = ghd if ghd is not None else (plan.ghd if plan is not None else ghd_for(query))
     s = spmd if spmd is not None else SPMD(p)
-    drv = GymDriver(query, g, data, s, config)
+    drv = GymDriver(query, g, data, s, config, plan=plan)
     out = drv.run()
     return out.to_numpy(), out.schema, drv.ledger

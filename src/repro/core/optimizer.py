@@ -1,0 +1,412 @@
+"""Cost-based plan advisor: enumerate (GHD x schedule x engine x fusion)
+candidates, score them with the paper's formulas (``core/costs.py``),
+and return the argmin as an executable ``Plan``.
+
+The paper's headline contribution is a *spectrum* of round/communication
+tradeoffs: the same query runs as O(n)-round DYM on a width-w GHD
+(Theorem 12), O(log n)-round GYM on a Log-GTA decomposition of width
+max(w, 3iw) (Theorem 23), or anywhere in between via C-GTA (Theorem 25).
+This module turns that spectrum into a decision:
+
+  1. **GHD candidates** — the hand GHD (if given), the generic
+     ``ghd_for`` construction, Log-GTA (Sec. 6), Log-GTA' (Appendix
+     D.2), and one C-GTA pass composed with Log-GTA (Sec. 7), deduped by
+     structural signature.
+  2. **Schedules** — every entry of ``planner.SCHEDULES`` (``dym_n``:
+     Sec. 4.2 / Theorem 12; ``dym_d``: Sec. 4.3 / Theorem 14).
+  3. **Engines** — the ``core.physical`` strategy registry: ``'hash'``
+     (comm ~ inputs+outputs, skew-sensitive) and ``'grid'`` (Lemmas
+     8/10, skew-proof, B(X, M) = X^2/M).
+  4. **Fusion** — one SPMD dispatch per homogeneous op group, or one
+     per op.  Identical comm/rounds; distinguished by the predicted
+     dispatch count.
+
+Scoring walks the *actual* schedule op-by-op (``predict_plan_cost``)
+under a machine profile (p, M) and an optional ``CostCalibration``
+fitted from measured ``Ledger`` numbers.  Ranking is lexicographic:
+calibrated predicted communication, then claimed BSP rounds, then
+predicted dispatches — the paper's two cost metrics (Sec. 3.2) plus the
+engine's own measure of dispatch overhead.
+
+``explain()`` renders the full candidate table (plain text or markdown,
+with predicted-vs-measured error when ledgers are supplied), so the
+advisor doubles as the repo's teaching tool.  ``GymConfig(plan="auto")``
+runs ``choose_plan`` inside the driver and executes the winner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cgta import cgta
+from .costs import (
+    OP_STAGES,
+    CostCalibration,
+    predict_plan_cost,
+)
+from .decompose import ghd_for
+from .ghd import GHD
+from .hypergraph import Query
+from .loggta import log_gta
+from .loggta_prime import log_gta_prime
+from .planner import SCHEDULES, Round, get_schedule
+
+
+# --------------------------------------------------------------------------
+# inputs: machine profile + table statistics
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MachineProfile:
+    """The paper's machine model (Sec. 3.2): p machines with M tuples of
+    memory each.  ``M=None`` derives a default from the input size —
+    4 * IN / p, floored — matching Assumption 3 (inputs fit with room to
+    rehash)."""
+
+    p: int = 4
+    M: Optional[float] = None
+
+    def memory(self, total_input: float) -> float:
+        if self.M is not None:
+            return float(self.M)
+        return max(16.0, 4.0 * float(total_input) / max(1, self.p))
+
+
+def stats_from_data(query: Query, data: Mapping[str, np.ndarray]) -> Dict[str, int]:
+    """Table-size statistics (distinct rows per base relation) — the
+    driver casts to int32 and dedups relations on load
+    (``GymDriver.__init__``), so the SAME cast+dedup here guarantees the
+    advisor scores exactly the tables the engine will see."""
+    sizes: Dict[str, int] = {}
+    for atom in query.atoms:
+        if atom.rel in sizes:
+            continue
+        rows = np.asarray(data[atom.rel], dtype=np.int32).reshape(
+            -1, len(atom.attrs)
+        )
+        sizes[atom.rel] = (
+            int(np.unique(rows, axis=0).shape[0]) if rows.shape[0] else 0
+        )
+    return sizes
+
+
+# --------------------------------------------------------------------------
+# the Plan: a fully-resolved, directly-executable choice
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Plan:
+    """One point on the paper's tradeoff spectrum, resolved to something
+    the driver can execute: a complete GHD plus the engine knobs.
+
+    ``key`` is the stable identity (``source|schedule|engine|fusion``)
+    used by explain() tables, measured-ledger joins, and snapshots
+    (``GymConfig.plan`` records it so resume stays on the same plan).
+    """
+
+    key: str
+    ghd_source: str  # 'hand' | 'auto' | 'loggta' | 'loggta_prime' | 'cgta1'
+    schedule: str  # planner.SCHEDULES name
+    engine: str  # physical.ENGINES name
+    fused: bool
+    local_backend: str
+    ghd: GHD  # complete (Lemma 7) form
+    width: int
+    depth: int
+    iw: int
+    nodes: int
+    predicted_comm: float
+    predicted_rounds: float
+    predicted_dispatches: float
+    out_est: float
+    calibrated: bool
+
+    def to_config(self, base=None):
+        """A ``GymConfig`` with this plan's choices applied (engine,
+        schedule, fusion, backend) and ``plan`` set to the key so
+        snapshots round-trip the decision."""
+        from .gym import GymConfig
+
+        base = base if base is not None else GymConfig()
+        return dataclasses.replace(
+            base,
+            strategy=self.engine,
+            schedule=self.schedule,
+            fused=self.fused,
+            local_backend=self.local_backend,
+            plan=self.key,
+        )
+
+
+def _plan_order(p: Plan) -> Tuple:
+    return (p.predicted_comm, p.predicted_rounds, p.predicted_dispatches, p.key)
+
+
+# --------------------------------------------------------------------------
+# candidate enumeration
+# --------------------------------------------------------------------------
+def candidate_ghds(
+    query: Query, hand_ghd: Optional[GHD] = None
+) -> List[Tuple[str, GHD]]:
+    """The GHD leg of the spectrum, all in complete (Lemma 7) form:
+    hand / auto (GYO or min-fill) / Log-GTA / Log-GTA' / C-GTA+Log-GTA.
+    Structurally identical candidates are deduped (first source wins, so
+    'hand' shadows an identical 'auto')."""
+    out: List[Tuple[str, GHD]] = []
+    seen: set = set()
+
+    def add(source: str, g: GHD) -> None:
+        try:
+            gc = g.make_complete(query)
+        except (AssertionError, ValueError):
+            return
+        sig = tuple(
+            sorted(
+                (tuple(sorted(gc.chi[v])), tuple(sorted(gc.lam[v])))
+                for v in gc.nodes()
+            )
+        ) + (gc.depth,)
+        if sig in seen:
+            return
+        seen.add(sig)
+        out.append((source, gc))
+
+    if hand_ghd is not None:
+        add("hand", hand_ghd)
+    add("auto", ghd_for(query))
+    if not out:
+        raise ValueError(
+            f"no valid GHD candidate for query {query.name!r}: the hand GHD "
+            "(if any) and the constructed one both failed completion"
+        )
+    base = out[0][1]  # best-known starting point for the transforms
+    for source, transform in (
+        ("loggta", lambda g: log_gta(g, query)),
+        ("loggta_prime", lambda g: log_gta_prime(g, query)),
+        ("cgta1", lambda g: cgta(g, query, passes=1)),
+    ):
+        try:
+            add(source, transform(base.copy()))
+        except (AssertionError, ValueError):
+            continue  # transform not applicable (e.g. trivial trees)
+    return out
+
+
+def _predicted_dispatches(rounds: Sequence[Round], fused: bool) -> float:
+    """Schedule-phase dispatch estimate: fused execution issues ~one SPMD
+    program per (stage, op kind) group; sequential issues one per
+    physical op (``costs.OP_STAGES`` carries the per-stage instance
+    counts of ``physical.lower_op``).  Materialization is counted as one
+    — a deliberate simplification (its dispatch count varies per bag), so
+    this column is a relative tie-break, not a measured-dispatch
+    prediction."""
+    total = 1.0  # materialization
+    for rnd in rounds:
+        per_stage: Dict[int, List] = {}
+        for op in rnd.ops:
+            for i, (sk, n_ops) in enumerate(OP_STAGES[op.kind]):
+                per_stage.setdefault(i, []).append((sk, n_ops))
+        for stage in per_stage.values():
+            if fused:
+                total += len({sk for sk, _ in stage})
+            else:
+                total += sum(n for _, n in stage)
+    return total
+
+
+def enumerate_plans(
+    query: Query,
+    stats: Mapping[str, int],
+    *,
+    profile: Optional[MachineProfile] = None,
+    hand_ghd: Optional[GHD] = None,
+    calibration: Optional[CostCalibration] = None,
+    local_backend: str = "jnp",
+    engines: Sequence[str] = ("hash", "grid"),
+    schedules: Optional[Sequence[str]] = None,
+    fused_options: Sequence[bool] = (True, False),
+) -> List[Plan]:
+    """Score every candidate plan; returns them best-first."""
+    profile = profile or MachineProfile()
+    schedules = tuple(schedules) if schedules is not None else tuple(sorted(SCHEDULES))
+    alias_sizes = {a.alias: float(stats[a.rel]) for a in query.atoms}
+    plans: List[Plan] = []
+    for source, g in candidate_ghds(query, hand_ghd):
+        width, depth, nodes = g.width, g.depth, g.size()
+        iw = g.intersection_width(query)
+        for sched in schedules:
+            rounds = get_schedule(sched).fn(g)
+            for engine in engines:
+                cost = predict_plan_cost(
+                    query, g, rounds, engine, alias_sizes, profile.p, calibration
+                )
+                for fused in fused_options:
+                    plans.append(
+                        Plan(
+                            key=f"{source}|{sched}|{engine}|"
+                            + ("fused" if fused else "seq"),
+                            ghd_source=source,
+                            schedule=sched,
+                            engine=engine,
+                            fused=fused,
+                            local_backend=local_backend,
+                            ghd=g,
+                            width=width,
+                            depth=depth,
+                            iw=iw,
+                            nodes=nodes,
+                            predicted_comm=cost["comm"],
+                            predicted_rounds=cost["rounds"],
+                            predicted_dispatches=_predicted_dispatches(
+                                rounds, fused
+                            ),
+                            out_est=cost["out_est"],
+                            calibrated=calibration is not None,
+                        )
+                    )
+    plans.sort(key=_plan_order)
+    return plans
+
+
+def choose_plan(
+    query: Query,
+    stats: Mapping[str, int],
+    *,
+    profile: Optional[MachineProfile] = None,
+    hand_ghd: Optional[GHD] = None,
+    calibration: Optional[CostCalibration] = None,
+    local_backend: str = "jnp",
+) -> Plan:
+    """The advisor's decision: argmin over the candidate plans by
+    (calibrated predicted comm, claimed rounds, predicted dispatches)."""
+    plans = enumerate_plans(
+        query,
+        stats,
+        profile=profile,
+        hand_ghd=hand_ghd,
+        calibration=calibration,
+        local_backend=local_backend,
+    )
+    assert plans, "no executable plan candidates"
+    return plans[0]
+
+
+# --------------------------------------------------------------------------
+# explain(): the candidate table as a teaching tool
+# --------------------------------------------------------------------------
+def _measured_comm(entry) -> Optional[float]:
+    if entry is None:
+        return None
+    if hasattr(entry, "comm_tuples"):  # a Ledger
+        return float(entry.comm_tuples)
+    return float(entry)
+
+
+def _render_table(header: List[str], rows: List[List[str]], fmt: str) -> str:
+    if fmt == "markdown":
+        lines = [
+            "| " + " | ".join(header) + " |",
+            "|" + "|".join("---" for _ in header) + "|",
+        ]
+        lines += ["| " + " | ".join(r) + " |" for r in rows]
+        return "\n".join(lines)
+    widths = [
+        max(len(header[i]), *(len(r[i]) for r in rows)) if rows else len(header[i])
+        for i in range(len(header))
+    ]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(header, widths)).rstrip()]
+    lines.append("  ".join("-" * w for w in widths))
+    lines += [
+        "  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip() for r in rows
+    ]
+    return "\n".join(lines)
+
+
+def _fmt_num(x: float) -> str:
+    if x >= 1e6 or (x != 0 and x < 0.01):
+        return f"{x:.3g}"
+    if float(x).is_integer():
+        return str(int(x))
+    return f"{x:.1f}"
+
+
+def explain(
+    query: Query,
+    stats: Mapping[str, int],
+    *,
+    hand_ghd: Optional[GHD] = None,
+    profile: Optional[MachineProfile] = None,
+    p: Optional[int] = None,
+    M: Optional[float] = None,
+    calibration: Optional[CostCalibration] = None,
+    measured: Optional[Mapping[str, object]] = None,
+    local_backend: str = "jnp",
+    fmt: str = "text",
+) -> str:
+    """Render the advisor's full candidate table.
+
+    ``measured`` maps plan keys to ``Ledger`` objects (or plain measured
+    comm numbers); when given, the table grows measured-comm and
+    prediction-error columns, turning explain() into the
+    predicted-vs-measured report of ``benchmarks/bench_optimizer.py``.
+    Output is deterministic for fixed inputs (stable ordering and
+    formatting), which the tests pin.
+    """
+    assert fmt in ("text", "markdown"), fmt
+    profile = profile or MachineProfile(p=p if p is not None else 4, M=M)
+    plans = enumerate_plans(
+        query,
+        stats,
+        profile=profile,
+        hand_ghd=hand_ghd,
+        calibration=calibration,
+        local_backend=local_backend,
+    )
+    chosen = plans[0]
+    with_measured = measured is not None
+    header = [
+        "plan",
+        "ghd(w/iw/d/n)",
+        "pred_rounds",
+        "pred_comm",
+        "pred_dispatches",
+    ]
+    if with_measured:
+        header += ["meas_comm", "err"]
+    rows = []
+    for pl in plans:
+        mark = "*" if pl.key == chosen.key else " "
+        row = [
+            f"{mark} {pl.key}",
+            f"{pl.width}/{pl.iw}/{pl.depth}/{pl.nodes}",
+            _fmt_num(pl.predicted_rounds),
+            _fmt_num(pl.predicted_comm),
+            _fmt_num(pl.predicted_dispatches),
+        ]
+        if with_measured:
+            meas = _measured_comm(measured.get(pl.key))
+            if meas is None:
+                row += ["-", "-"]
+            else:
+                err = (pl.predicted_comm - meas) / max(1.0, meas)
+                row += [_fmt_num(meas), f"{100 * err:+.0f}%"]
+        rows.append(row)
+    total_in = sum(float(stats[a.rel]) for a in query.atoms)
+    cal = (
+        "none"
+        if calibration is None
+        else " ".join(
+            f"{e}x{s:.3g}" for e, s in sorted(calibration.comm_scale.items())
+        )
+        or "identity"
+    )
+    body = _render_table(header, rows, fmt)
+    footer = (
+        f"query={query.name} atoms={query.n} IN={_fmt_num(total_in)} "
+        f"profile: p={profile.p} M={_fmt_num(profile.memory(total_in))} "
+        f"calibration: {cal}\n"
+        f"chosen: {chosen.key} — lowest predicted comm, then claimed BSP "
+        f"rounds ({get_schedule(chosen.schedule).paper}, "
+        f"{get_schedule(chosen.schedule).claimed_rounds}), then dispatches"
+    )
+    return body + "\n" + footer

@@ -380,6 +380,32 @@ class PhysicalExecutor:
         self.fuse = fuse
         self._seed_ctr = 0
 
+    @classmethod
+    def from_plan(
+        cls,
+        spmd: SPMD,
+        plan,  # optimizer.Plan
+        capman: CapacityManager,
+        *,
+        seed: int = 0,
+        max_retries: int = 12,
+        count_retries_comm: bool = True,
+    ) -> "PhysicalExecutor":
+        """Build an executor straight from an advisor ``Plan``: engine
+        strategy, round fusion, and local backend all come from the plan
+        (``core/optimizer.py``), so a chosen plan needs no hand-threading
+        of knobs through configs."""
+        return cls(
+            spmd,
+            plan.engine,
+            capman,
+            seed=seed,
+            max_retries=max_retries,
+            count_retries_comm=count_retries_comm,
+            fuse=plan.fused,
+            local_backend=plan.local_backend,
+        )
+
     def _next_seed(self) -> int:
         self._seed_ctr += 1
         return self.seed + 7919 * self._seed_ctr

@@ -5,12 +5,15 @@ emits a round-by-round schedule of semijoin/intersection/join operations.
 The executor (``gym.py``) runs each schedule round as one BSP round-group
 and the ledger accounts actual engine rounds + tuples moved.
 
-Schedules:
-  - ``dym_n_schedule``: the serial Yannakakis order (Sec. 4.1/4.2): 2(n-1)
-    semijoins one-at-a-time, then n-1 bottom-up joins -> O(n) rounds.
-  - ``dym_d_schedule``: the parallel-contraction order (Sec. 4.3):
-    upward semijoin phase + downward semijoin phase + join phase, each
-    contracting all eligible leaves per iteration -> O(d + log n) rounds.
+Schedules (both registered in ``SCHEDULES`` with their paper metadata,
+which is what the plan advisor in ``core/optimizer.py`` enumerates):
+  - ``dym_n_schedule``: the serial Yannakakis order (Sec. 4.1/4.2,
+    Theorem 12): 2(n-1) semijoins one-at-a-time, then n-1 bottom-up
+    joins -> O(n) rounds, O(n * B(IN + OUT, M)) communication.
+  - ``dym_d_schedule``: the parallel-contraction order (Sec. 4.3,
+    Theorem 14): upward semijoin phase + downward semijoin phase + join
+    phase, each contracting all eligible leaves per iteration
+    -> O(d + log n) rounds at the same communication bound.
 
 Op kinds (target := result):
   semijoin      (S, R)          S := S |>< R                [upward L1]
@@ -23,7 +26,8 @@ Op kinds (target := result):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import math
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .ghd import GHD
 
@@ -144,7 +148,8 @@ def _downward_rounds(g: GHD) -> List[Round]:
 
 
 def dym_d_schedule(g: GHD) -> List[Round]:
-    """Sec. 4.3: O(d + log n) upward + O(d) downward + O(d + log n) join."""
+    """Sec. 4.3 / Theorem 14: O(d + log n) upward contraction rounds +
+    O(d) downward rounds + O(d + log n) join contraction rounds."""
     return (
         _contraction_rounds(g, "upward", join=False)
         + _downward_rounds(g)
@@ -153,7 +158,8 @@ def dym_d_schedule(g: GHD) -> List[Round]:
 
 
 def dym_n_schedule(g: GHD) -> List[Round]:
-    """Sec. 4.2 (serial Yannakakis order): one op per round.
+    """Sec. 4.2 / Theorem 12 (serial Yannakakis order): one op per round,
+    3(n-1) rounds total on an n-node GHD.
 
     Upward: recursive leaf-at-a-time semijoins into parents; Downward:
     reverse order parent->child semijoins; Join: bottom-up one at a time.
@@ -183,6 +189,65 @@ def dym_n_schedule(g: GHD) -> List[Round]:
         joins.append(Round("join", [Op("join", p, (l,))]))
         t2.remove_leaf(l)
     return up + down + joins
+
+
+# --------------------------------------------------------------------------
+# schedule registry: paper metadata the plan advisor enumerates over
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ScheduleInfo:
+    """One named schedule with its claimed paper bounds.
+
+    ``round_bound(g)`` is the *claimed* worst-case round count on GHD
+    ``g`` (with the same constants the round-bound tests assert);
+    ``fn(g)`` emits the actual rounds.  The advisor uses ``fn`` for
+    exact per-plan costing and ``round_bound``/``claimed_rounds`` for
+    the explain() teaching columns.
+    """
+
+    name: str
+    fn: Callable[[GHD], List["Round"]]
+    paper: str  # section / theorem this schedule implements
+    claimed_rounds: str  # the O(.) round bound, human-readable
+    round_bound: Callable[[GHD], int]
+
+
+def _dym_n_bound(g: GHD) -> int:
+    # Theorem 12: 2(n-1) semijoin rounds + (n-1) join rounds
+    return 3 * max(1, g.size() - 1)
+
+
+def _dym_d_bound(g: GHD) -> int:
+    # Theorem 14: O(d + log n) per phase, 3 phases (constants as asserted
+    # by tests/test_gym_engine.py round-bound tests)
+    return 3 * (g.depth + int(math.ceil(math.log2(max(2, g.size())))) + 2)
+
+
+SCHEDULES: Dict[str, ScheduleInfo] = {
+    "dym_n": ScheduleInfo(
+        name="dym_n",
+        fn=dym_n_schedule,
+        paper="Sec. 4.2 / Theorem 12",
+        claimed_rounds="O(n)",
+        round_bound=_dym_n_bound,
+    ),
+    "dym_d": ScheduleInfo(
+        name="dym_d",
+        fn=dym_d_schedule,
+        paper="Sec. 4.3 / Theorem 14",
+        claimed_rounds="O(d + log n)",
+        round_bound=_dym_d_bound,
+    ),
+}
+
+
+def get_schedule(name: str) -> ScheduleInfo:
+    try:
+        return SCHEDULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown schedule {name!r}; registered: {sorted(SCHEDULES)}"
+        ) from None
 
 
 def schedule_stats(rounds: List[Round]) -> Dict[str, int]:

@@ -69,6 +69,35 @@ class Ledger:
     def comm_in_phase(self, phase: str) -> int:
         return sum(r.comm_tuples for r in self.records if r.phase == phase)
 
+    def calibration_record(
+        self,
+        *,
+        engine: str,
+        schedule: str = "",
+        query: str = "",
+        predicted_comm: float = 0.0,
+        predicted_rounds: float = 0.0,
+    ) -> Dict[str, Any]:
+        """One measured sample for ``core.costs.fit_calibration``.
+
+        Pairs this execution's ground truth (comm_tuples, rounds,
+        retries) with the advisor's *uncalibrated* predictions so the
+        per-engine constants of the cost model can be fitted from real
+        runs."""
+        return {
+            "engine": engine,
+            "schedule": schedule,
+            "query": query,
+            "predicted_comm": float(predicted_comm),
+            "predicted_rounds": float(predicted_rounds),
+            "measured_comm": int(self.comm_tuples),
+            "measured_shuffle": int(self.shuffle_tuples),
+            "measured_rounds": int(self.rounds),
+            "measured_dispatches": int(self.measured_dispatches),
+            "output_tuples": int(self.output_tuples),
+            "retries": int(self.retries),
+        }
+
     def summary(self) -> Dict[str, Any]:
         phases: Dict[str, Dict[str, int]] = {}
         for r in self.records:

@@ -1,0 +1,305 @@
+"""Plan advisor: enumeration/ranking invariants, explain() stability on
+S_8 and the Figure-1 cyclic example (TC), calibration math + strict
+held-out error reduction, and plan round-trip through snapshot/resume."""
+from __future__ import annotations
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.costs import (
+    CostCalibration,
+    engine_op_comm,
+    fit_calibration,
+    join_size_estimate,
+    prediction_error,
+)
+from repro.core.gym import GymConfig, GymDriver, gym
+from repro.core.optimizer import (
+    MachineProfile,
+    Plan,
+    candidate_ghds,
+    choose_plan,
+    enumerate_plans,
+    explain,
+    stats_from_data,
+)
+from repro.core.planner import SCHEDULES, get_schedule
+from repro.core.queries import (
+    chain_ghd,
+    chain_query,
+    star_ghd,
+    star_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+from repro.data.synthetic import chain_data_sparse, star_data_sparse, tc_data_sparse
+from repro.relational.oracle import canon, np_query_answer, reorder
+from repro.relational.spmd import SPMD
+
+
+def _cases():
+    # S_8 (Figure 1a) and the Figure-1c cyclic example (triangle chain)
+    return [
+        ("S_8", star_query(8), star_ghd(8), star_data_sparse(8, seed=21)),
+        (
+            "TC_9",
+            triangle_chain_query(3),
+            triangle_chain_ghd(3),
+            tc_data_sparse(3, seed=22),
+        ),
+    ]
+
+
+def _oracle(query, data):
+    atoms = [(a.alias, a.attrs) for a in query.atoms]
+    d = {a.alias: data[a.rel] for a in query.atoms}
+    rows, schema = np_query_answer(atoms, d)
+    return canon(reorder(rows, schema, query.output_attrs))
+
+
+# ------------------------------------------------------------ enumeration
+def test_enumeration_covers_spectrum_and_ranks():
+    for name, q, g, data in _cases():
+        stats = stats_from_data(q, data)
+        plans = enumerate_plans(q, stats, profile=MachineProfile(p=8), hand_ghd=g)
+        keys = [p.key for p in plans]
+        assert len(keys) == len(set(keys)), "plan keys must be unique"
+        # the full grid: every schedule x engine x fusion appears for 'hand'
+        for sched in SCHEDULES:
+            for eng in ("hash", "grid"):
+                for fz in ("fused", "seq"):
+                    assert f"hand|{sched}|{eng}|{fz}" in keys, (name, sched, eng, fz)
+        # ranked best-first by (comm, rounds, dispatches)
+        order = [
+            (p.predicted_comm, p.predicted_rounds, p.predicted_dispatches)
+            for p in plans
+        ]
+        assert order == sorted(order)
+        assert all(p.predicted_comm > 0 and p.predicted_rounds >= 2 for p in plans)
+        chosen = choose_plan(q, stats, profile=MachineProfile(p=8), hand_ghd=g)
+        assert chosen.key == plans[0].key
+
+
+def test_candidate_ghds_complete_and_deduped():
+    for name, q, g, _ in _cases():
+        cands = candidate_ghds(q, hand_ghd=g)
+        sources = [s for s, _ in cands]
+        assert sources[0] == "hand"
+        assert len(sources) == len(set(sources))
+        for src, cg in cands:
+            cg.validate(q)
+            assert cg.is_strongly_complete(q), (name, src)
+
+
+def test_fused_preferred_on_ties():
+    q, g = star_query(6), star_ghd(6)
+    stats = stats_from_data(q, star_data_sparse(6, seed=3))
+    plans = enumerate_plans(q, stats, profile=MachineProfile(p=4), hand_ghd=g)
+    by_cfg = {}
+    for p in plans:
+        by_cfg.setdefault((p.ghd_source, p.schedule, p.engine), []).append(p)
+    for (src, sched, eng), pair in by_cfg.items():
+        assert len(pair) == 2
+        # identical predicted comm/rounds; fused wins on dispatches
+        assert pair[0].predicted_comm == pair[1].predicted_comm
+        assert pair[0].fused and not pair[1].fused
+
+
+def test_schedule_registry_bounds():
+    for n in (4, 8, 16):
+        for qf, gf in ((chain_query, chain_ghd), (star_query, star_ghd)):
+            q = qf(n)
+            g = gf(n).make_complete(q)
+            for name, info in SCHEDULES.items():
+                assert len(info.fn(g)) <= info.round_bound(g), (name, n)
+    with pytest.raises(ValueError):
+        get_schedule("nope")
+
+
+def test_plan_to_config_round_trips_choice():
+    q, g = star_query(5), star_ghd(5)
+    stats = stats_from_data(q, star_data_sparse(5, seed=1))
+    plan = choose_plan(q, stats, profile=MachineProfile(p=4), hand_ghd=g)
+    cfg = plan.to_config(GymConfig(seed=9, max_retries=7))
+    assert cfg.strategy == plan.engine
+    assert cfg.schedule == plan.schedule
+    assert cfg.fused == plan.fused
+    assert cfg.local_backend == plan.local_backend
+    assert cfg.plan == plan.key
+    # unrelated knobs preserved
+    assert cfg.seed == 9 and cfg.max_retries == 7
+
+
+# ---------------------------------------------------------------- explain
+def test_explain_stable_and_marks_choice():
+    for name, q, g, data in _cases():
+        stats = stats_from_data(q, data)
+        kw = dict(hand_ghd=g, p=8)
+        text1 = explain(q, stats, **kw)
+        text2 = explain(q, stats, **kw)
+        assert text1 == text2, f"explain() not deterministic on {name}"
+        chosen = choose_plan(q, stats, profile=MachineProfile(p=8), hand_ghd=g)
+        assert f"* {chosen.key}" in text1
+        assert f"chosen: {chosen.key}" in text1
+        assert "pred_comm" in text1 and "pred_rounds" in text1
+        md = explain(q, stats, fmt="markdown", **kw)
+        assert md.splitlines()[0].startswith("| plan |")
+        assert f"chosen: {chosen.key}" in md
+
+
+def test_explain_measured_columns():
+    q, g = star_query(5), star_ghd(5)
+    data = star_data_sparse(5, seed=2)
+    stats = stats_from_data(q, data)
+    chosen = choose_plan(q, stats, profile=MachineProfile(p=4), hand_ghd=g)
+    out = explain(
+        q, stats, hand_ghd=g, p=4, measured={chosen.key: 1234}
+    )
+    assert "meas_comm" in out and "1234" in out and "%" in out
+
+
+# ------------------------------------------------------------ calibration
+def test_fit_calibration_geometric_mean():
+    recs = [
+        {"engine": "hash", "predicted_comm": 100.0, "measured_comm": 200.0},
+        {"engine": "hash", "predicted_comm": 100.0, "measured_comm": 800.0},
+        {"engine": "grid", "predicted_comm": 50.0, "measured_comm": 25.0},
+        {"engine": "hash", "predicted_comm": 0.0, "measured_comm": 10.0},  # skipped
+    ]
+    cal = fit_calibration(recs)
+    assert cal.samples == 3
+    assert cal.comm_factor("hash") == pytest.approx(4.0)  # gm of 2x and 8x
+    assert cal.comm_factor("grid") == pytest.approx(0.5)
+    assert cal.comm_factor("unknown") == 1.0
+    assert cal.apply("hash", 10.0) == pytest.approx(40.0)
+    # serialization round-trip
+    back = CostCalibration.from_dict(cal.to_dict())
+    assert back.comm_scale == pytest.approx(cal.comm_scale)
+
+
+def test_cost_model_units():
+    # hash op comm is input-sized; grid pays replication on p
+    assert engine_op_comm("hash", "join", 10, 20, p=16) == 30
+    assert engine_op_comm("grid", "join", 10, 20, p=16) == pytest.approx(120.0)
+    assert engine_op_comm("grid", "semijoin", 10, 20, p=16) > engine_op_comm(
+        "hash", "semijoin", 10, 20, p=16
+    )
+    # cartesian blowup when operands share no attribute
+    assert join_size_estimate(10, 20, shared=False) == 200
+    assert join_size_estimate(10, 20, shared=True) == 20
+    with pytest.raises(AssertionError):
+        prediction_error(0.0, 1.0)
+
+
+@pytest.mark.slow
+def test_calibration_strictly_reduces_heldout_error():
+    """Fit per-engine constants on S_8 + C_8 measured ledgers; the
+    prediction error on the held-out TC_9 manual plans must strictly
+    drop."""
+    profile = MachineProfile(p=8)
+    fams = [
+        ("S_8", star_query(8), star_ghd(8), star_data_sparse(8, seed=21)),
+        ("C_8", chain_query(8), chain_ghd(8), chain_data_sparse(8, seed=11)),
+        ("TC_9", triangle_chain_query(3), triangle_chain_ghd(3),
+         tc_data_sparse(3, seed=22)),
+    ]
+    recs = []
+    measured_tc = {}
+    for name, q, g, data in fams:
+        stats = stats_from_data(q, data)
+        plans = {
+            p.key: p
+            for p in enumerate_plans(q, stats, profile=profile, hand_ghd=g)
+        }
+        for eng in ("hash", "grid"):
+            key = f"hand|dym_d|{eng}|fused"
+            _, _, led = gym(
+                q, data, ghd=g, p=8,
+                config=GymConfig(strategy=eng, schedule="dym_d", seed=33),
+            )
+            if name == "TC_9":
+                measured_tc[key] = (plans[key].predicted_comm, led.comm_tuples)
+            else:
+                recs.append(
+                    led.calibration_record(
+                        engine=eng, query=name,
+                        predicted_comm=plans[key].predicted_comm,
+                    )
+                )
+    cal = fit_calibration(recs)
+    err_u = err_c = 0.0
+    for key, (pred, meas) in measured_tc.items():
+        eng = key.split("|")[2]
+        err_u += prediction_error(pred, meas)
+        err_c += prediction_error(cal.apply(eng, pred), meas)
+    assert err_c < err_u, (err_c, err_u)
+
+
+# ------------------------------------------- auto plan execution + resume
+@pytest.mark.slow
+def test_auto_plan_matches_oracle():
+    for name, q, g, data in _cases():
+        want = _oracle(q, data)
+        rows, schema, led = gym(
+            q, data, ghd=g, p=4, config=GymConfig(plan="auto", seed=5)
+        )
+        assert tuple(schema) == q.output_attrs
+        assert canon(rows) == want, name
+        assert led.rounds >= 1
+
+
+@pytest.mark.slow
+def test_chosen_plan_round_trips_snapshot_resume(tmp_path):
+    q, g = star_query(8), star_ghd(8)
+    data = star_data_sparse(8, seed=21)
+    want = _oracle(q, data)
+
+    drv = GymDriver(q, g, data, SPMD(4), GymConfig(plan="auto", seed=2))
+    chosen_key = drv.config.plan
+    assert chosen_key not in ("auto", "manual")  # resolved to a Plan.key
+    assert drv.plan is not None and drv.plan.key == chosen_key
+    assert drv.config.strategy == drv.plan.engine
+    assert drv.config.schedule == drv.plan.schedule
+    drv.step()
+    drv.step()
+    snap = str(tmp_path / "auto_plan_snapshot.npz")
+    drv.save(snap)
+
+    # a fresh driver re-advises deterministically, then the snapshot's
+    # resolved config wins — same plan either way
+    drv2 = GymDriver(q, g, data, SPMD(4), GymConfig(plan="auto", seed=2))
+    drv2.load(snap)
+    assert drv2.config.plan == chosen_key
+    assert drv2.config.strategy == drv.config.strategy
+    assert drv2.config.schedule == drv.config.schedule
+    assert drv2.config.fused == drv.config.fused
+    out = drv2.run()
+    assert canon(out.to_numpy()) == want
+
+
+@pytest.mark.slow
+def test_snapshot_replays_plan_ghd_on_plain_driver(tmp_path):
+    """An auto-plan run may execute a different GHD than the hand one; the
+    snapshot carries that decomposition, so a resuming driver built with
+    the hand GHD and a plain manual config still replays the plan's tree
+    instead of mispairing tables with its own."""
+    q, g = triangle_chain_query(3), triangle_chain_ghd(3)
+    data = tc_data_sparse(3, seed=22)
+    want = _oracle(q, data)
+
+    drv = GymDriver(q, g, data, SPMD(4), GymConfig(plan="auto", seed=3))
+    drv.step()
+    drv.step()
+    snap = str(tmp_path / "auto_plan_tc.npz")
+    drv.save(snap)
+
+    drv2 = GymDriver(q, g, data, SPMD(4), GymConfig(seed=3))  # manual driver
+    drv2.load(snap)
+    assert sorted(drv2.ghd.nodes()) == sorted(drv.ghd.nodes())
+    assert drv2.config.plan == drv.config.plan
+    assert drv2.config.strategy == drv.config.strategy
+    out = drv2.run()
+    assert canon(out.to_numpy()) == want
