@@ -1,0 +1,129 @@
+"""Occupancy-adaptive shuffle: count-calibrated capacities vs the fixed
+worst-case capacities, on the Table-1 families (S_8 / C_8 / TC_9, hash
+engine, p=8).
+
+The acceptance bar this bench enforces:
+
+- results are bit-identical (rows, ``comm_tuples``) across the two modes;
+- measured ``padded_slots`` drops >= 2x with calibration;
+- the families complete with ZERO abort-retries when the count pre-pass
+  is enabled (blown capacities are pre-floored from measured counts).
+
+Besides printing JSON rows, the run writes ``BENCH_shuffle.json`` at the
+repo root — the persistent perf trajectory (wall time, comm, padded
+slots, retries, dispatches per family x mode) future PRs regress
+against.  ``BENCH_SHUFFLE_ONLY=S_8`` (comma list) limits the families;
+filtered runs write ``BENCH_shuffle.partial.json`` instead so they never
+clobber the committed full baseline (the CI smoke step runs just S_8).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.gym import GymConfig, gym
+from repro.core.queries import (
+    chain_ghd,
+    chain_query,
+    star_ghd,
+    star_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+from repro.data.synthetic import chain_data_sparse, star_data_sparse, tc_data_sparse
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_shuffle.json")
+# filtered runs (BENCH_SHUFFLE_ONLY, e.g. the CI S_8 smoke) must not
+# clobber the committed full-family trajectory baseline
+PARTIAL_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_shuffle.partial.json"
+)
+
+# Sized so each shard holds a real workload (dozens-to-hundreds of rows):
+# at toy sizes every capacity bottoms out at the pow2 floor and the fixed
+# baseline has nothing to waste.  These are the matching-database shapes
+# of Appendix A at p=8 scale.
+FAMILIES = {
+    "S_8": lambda: (
+        star_query(8),
+        star_ghd(8),
+        star_data_sparse(8, domain=64, hub_rows=256, spoke_extra=64, seed=21),
+    ),
+    "C_8": lambda: (
+        chain_query(8),
+        chain_ghd(8),
+        chain_data_sparse(8, domain=256, ident=64, extra=192, seed=24),
+    ),
+    "TC_9": lambda: (
+        triangle_chain_query(3),
+        triangle_chain_ghd(3),
+        tc_data_sparse(3, domain=128, ident=32, extra=96, seed=22),
+    ),
+}
+
+
+def _one(q, g, data, *, calibrate: bool, p: int = 8):
+    cfg = GymConfig(strategy="hash", seed=23, calibrate_shuffle=calibrate)
+    t0 = time.time()
+    rows, _, led = gym(q, data, ghd=g, p=p, config=cfg)
+    secs = time.time() - t0
+    return rows, led, secs
+
+
+def run() -> list:
+    only = os.environ.get("BENCH_SHUFFLE_ONLY")
+    names = only.split(",") if only else list(FAMILIES)
+    out = []
+    trajectory = []
+    for name in names:
+        q, g, data = FAMILIES[name]()
+        res = {}
+        for calibrate in (False, True):
+            rows, led, secs = _one(q, g, data, calibrate=calibrate)
+            res[calibrate] = (rows, led)
+            rec = dict(
+                bench="shuffle",
+                query=name,
+                engine="hash",
+                mode="calibrated" if calibrate else "fixed",
+                secs=round(secs, 2),
+                comm_tuples=led.comm_tuples,
+                shuffle_tuples=led.shuffle_tuples,
+                padded_slots=led.padded_slots,
+                payload_efficiency=round(led.payload_efficiency, 4),
+                retries=led.retries,
+                dispatches=led.measured_dispatches,
+                rounds_claimed=led.rounds,
+                output_tuples=led.output_tuples,
+            )
+            out.append(rec)
+            trajectory.append(rec)
+        rows_f, led_f = res[False]
+        rows_c, led_c = res[True]
+        # calibration must not change WHAT moves — only how it is packed
+        assert {tuple(r) for r in rows_c} == {tuple(r) for r in rows_f}, name
+        assert led_c.comm_tuples == led_f.comm_tuples, (
+            name, led_c.comm_tuples, led_f.comm_tuples,
+        )
+        # acceptance: the wire ships >= 2x fewer slots, calibrated
+        assert 2 * led_c.padded_slots <= led_f.padded_slots, (
+            name, led_c.padded_slots, led_f.padded_slots,
+        )
+        # acceptance: the count pre-pass pre-floors every blown capacity
+        assert led_c.retries == 0, (name, led_c.retries)
+    path = OUT_PATH if not only else PARTIAL_PATH
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "bench": "shuffle",
+                "p": 8,
+                "engine": "hash",
+                "families": names,
+                "results": trajectory,
+            },
+            f,
+            indent=2,
+        )
+        f.write("\n")
+    return out

@@ -38,6 +38,14 @@ PREDICTED_COLUMNS = [
     ("optimizer_calibration", "err_uncalibrated / err_calibrated",
      "repro.core.costs.prediction_error / fit_calibration",
      "|log(pred/meas)| — the quantity the log-space fit minimizes"),
+    ("optimizer/optimizer_explain", "pred_wire",
+     "repro.core.costs.predict_plan_cost + shuffle_pad_factor",
+     "Sec. 3.2 useful-tuple comm inflated to the dense all_to_all slots"
+     " the wire ships (fixed capacity ~p x; count-calibrated < 2x)"),
+    ("shuffle", "padded_slots / payload_efficiency",
+     "repro.relational.ledger.Ledger.padded_slots / .payload_efficiency",
+     "measured dense slots shipped vs Sec. 3.2 useful tuples; calibration"
+     " per Hu & Yi / Joglekar & Ré count statistics (PAPERS.md)"),
 ]
 
 

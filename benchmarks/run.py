@@ -21,6 +21,7 @@ from . import (
     bench_lemmas,
     bench_lm,
     bench_optimizer,
+    bench_shuffle,
     bench_table1,
     bench_table2,
     bench_table3,
@@ -37,6 +38,7 @@ ALL = {
     "fusion": bench_fusion,
     "kernels": bench_kernels,
     "optimizer": bench_optimizer,
+    "shuffle": bench_shuffle,
     "lm": bench_lm,
 }
 

@@ -152,6 +152,22 @@ def join_size_estimate(a: float, b: float, shared: bool = True) -> float:
     return max(a, b)
 
 
+def shuffle_pad_factor(p: int, calibrated: bool) -> float:
+    """Predicted inflation of wire slots over useful tuples for one hash
+    exchange on a p-shard SPMD.
+
+    The physical shuffle ships the dense ``(p, c_out)`` bucket buffer per
+    shard (``relational.shuffle``).  With a FIXED global capacity, c_out
+    is the worst-case shard cap, so the fleet ships ~p x the useful
+    volume (each shard pays all p buckets at full depth).  With the
+    count-calibrated pre-pass c_out hugs the true max bucket, leaving
+    only the pow2 rounding loss (< 2x) plus per-bucket remainders.  The
+    paper prices *useful* tuples (Sec. 3.2); this factor converts that to
+    what the wire actually carries, so the advisor can rank by shipped
+    slots (``predict_plan_cost(..., calibrate_shuffle=...)``)."""
+    return 2.0 if calibrated else 2.0 * float(max(1, p))
+
+
 def grid_replication(p: int, w: int = 2) -> float:
     """Per-tuple replication of a w-way grid op on p reducers: each
     relation is sent to p^((w-1)/w) grid cells (Lemma 8's g_i sizing).
@@ -227,11 +243,12 @@ def predict_plan_cost(
     alias_sizes: Mapping[str, float],
     p: int,
     calibration: Optional["CostCalibration"] = None,
+    calibrate_shuffle: bool = True,
 ) -> Dict[str, float]:
     """Walk one planner schedule op-by-op and price it under ``engine``
     on a p-shard SPMD.
 
-    Returns ``{"comm", "rounds", "ops", "out_est"}`` where
+    Returns ``{"comm", "rounds", "ops", "out_est", "wire"}`` where
 
     - ``comm`` = materialization (Theorem 15 stage 1) + per-op shuffle
       (Lemma 8/10 grid replication for grid, inputs-sized for hash) +
@@ -240,7 +257,12 @@ def predict_plan_cost(
       constant when given;
     - ``rounds`` = claimed BSP rounds: 1 for materialization plus, per
       logical round, the max over its ops of the stage count (grid
-      semijoin stages claim 2 rounds each, per Lemma 10).
+      semijoin stages claim 2 rounds each, per Lemma 10);
+    - ``wire`` = predicted SLOTS shipped: the shuffled volume inflated by
+      ``shuffle_pad_factor`` (fixed capacities pad ~p x; the
+      count-calibrated pre-pass pads < 2x) plus the un-padded output.
+      This is what the advisor ranks by — the wire carries slots, not
+      the paper's useful tuples.
 
     Node sizes evolve under the matching-database assumption
     (``join_size_estimate``); semijoins never grow a table, so sizes are
@@ -316,14 +338,21 @@ def predict_plan_cost(
         claimed += round_claim
 
     out_est = est[ghd.root]
+    shuffled = comm  # everything priced so far moved through an exchange
     comm += out_est  # Sec. 3.2: output tuples count as communication
     if calibration is not None:
         comm = calibration.apply(engine, comm)
+        shuffled = calibration.apply(engine, shuffled)
+    # the wire ships padded slots for the shuffled part; the output is
+    # written compacted, so it rides un-inflated (same calibration scale
+    # as ``comm`` so the two stay comparable)
+    wire = shuffled * shuffle_pad_factor(p, calibrate_shuffle) + (comm - shuffled)
     return {
         "comm": comm,
         "rounds": float(claimed),
         "ops": float(n_ops),
         "out_est": out_est,
+        "wire": wire,
     }
 
 

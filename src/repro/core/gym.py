@@ -50,6 +50,10 @@ class GymConfig:
     max_retries: int = 12
     count_retries_comm: bool = True  # aborted rounds still moved tuples
     fused: bool = True  # one SPMD dispatch per homogeneous op group
+    # occupancy-adaptive shuffle: a count-only pre-pass per op group picks
+    # tight pow2 exchange capacities (and pre-floors blown ones) instead of
+    # shipping worst-case-padded all_to_all buffers
+    calibrate_shuffle: bool = True
     local_backend: str = "jnp"  # shard-local hot loops: 'jnp' | 'pallas'
     # 'manual' = run exactly the knobs above; 'auto' = let the advisor
     # (core/optimizer.py) pick GHD/schedule/engine/fusion from stats.
@@ -96,6 +100,7 @@ class GymDriver:
                 profile=MachineProfile(p=spmd.p),
                 hand_ghd=ghd,
                 local_backend=self.config.local_backend,
+                calibrate_shuffle=self.config.calibrate_shuffle,
             )
         self.plan = plan
         if plan is not None:
@@ -154,6 +159,7 @@ class GymDriver:
                 seed=cfg.seed,
                 max_retries=cfg.max_retries,
                 count_retries_comm=cfg.count_retries_comm,
+                calibrate=cfg.calibrate_shuffle,
             )
         return PhysicalExecutor(
             self.spmd,
@@ -163,6 +169,7 @@ class GymDriver:
             max_retries=cfg.max_retries,
             count_retries_comm=cfg.count_retries_comm,
             fuse=cfg.fused,
+            calibrate=cfg.calibrate_shuffle,
             local_backend=cfg.local_backend,
         )
 
@@ -189,7 +196,7 @@ class GymDriver:
         if self.done:
             return False
         if self.cursor < 0:
-            tables, comm, claimed, dispatches = self.executor.materialize(
+            tables, comm, padded, claimed, dispatches = self.executor.materialize(
                 self.ghd, self.base, self.node_schema, self.ledger
             )
             self.tables = tables
@@ -199,6 +206,7 @@ class GymDriver:
                 comm,
                 n_rounds=claimed,
                 dispatches=dispatches,
+                padded=padded,
             )
             self.cursor = 0
             return True
@@ -206,8 +214,8 @@ class GymDriver:
             self._finish()
             return False
         rnd = self.schedule[self.cursor]
-        new_tab, new_acc, comm, claimed, dispatches = self.executor.execute_round(
-            rnd, self.tables, self.acc, self.ledger
+        new_tab, new_acc, comm, padded, claimed, dispatches = (
+            self.executor.execute_round(rnd, self.tables, self.acc, self.ledger)
         )
         self.tables = {**self.tables, **new_tab}
         self.acc = {**self.acc, **new_acc}
@@ -217,6 +225,7 @@ class GymDriver:
             comm,
             n_rounds=claimed,
             dispatches=dispatches,
+            padded=padded,
         )
         self.cursor += 1
         if self.cursor >= len(self.schedule):

@@ -24,9 +24,12 @@ This module turns that spectrum into a decision:
 Scoring walks the *actual* schedule op-by-op (``predict_plan_cost``)
 under a machine profile (p, M) and an optional ``CostCalibration``
 fitted from measured ``Ledger`` numbers.  Ranking is lexicographic:
-calibrated predicted communication, then claimed BSP rounds, then
-predicted dispatches — the paper's two cost metrics (Sec. 3.2) plus the
-engine's own measure of dispatch overhead.
+predicted WIRE slots (communication inflated by the shuffle pad factor
+for the configured capacity policy — what the all_to_all actually
+ships), then calibrated predicted communication, then claimed BSP
+rounds, then predicted dispatches — the paper's two cost metrics
+(Sec. 3.2) seen through the physical shuffle, plus the engine's own
+measure of dispatch overhead.
 
 ``explain()`` renders the full candidate table (plain text or markdown,
 with predicted-vs-measured error when ledgers are supplied), so the
@@ -116,6 +119,7 @@ class Plan:
     iw: int
     nodes: int
     predicted_comm: float
+    predicted_wire: float  # comm inflated by the shuffle pad factor
     predicted_rounds: float
     predicted_dispatches: float
     out_est: float
@@ -139,7 +143,15 @@ class Plan:
 
 
 def _plan_order(p: Plan) -> Tuple:
-    return (p.predicted_comm, p.predicted_rounds, p.predicted_dispatches, p.key)
+    # ranked by what the wire actually carries (padded slots), then the
+    # paper's two metrics, then dispatch overhead
+    return (
+        p.predicted_wire,
+        p.predicted_comm,
+        p.predicted_rounds,
+        p.predicted_dispatches,
+        p.key,
+    )
 
 
 # --------------------------------------------------------------------------
@@ -225,8 +237,10 @@ def enumerate_plans(
     engines: Sequence[str] = ("hash", "grid"),
     schedules: Optional[Sequence[str]] = None,
     fused_options: Sequence[bool] = (True, False),
+    calibrate_shuffle: bool = True,
 ) -> List[Plan]:
-    """Score every candidate plan; returns them best-first."""
+    """Score every candidate plan; returns them best-first (by predicted
+    wire slots under the given shuffle mode, see ``_plan_order``)."""
     profile = profile or MachineProfile()
     schedules = tuple(schedules) if schedules is not None else tuple(sorted(SCHEDULES))
     alias_sizes = {a.alias: float(stats[a.rel]) for a in query.atoms}
@@ -238,7 +252,8 @@ def enumerate_plans(
             rounds = get_schedule(sched).fn(g)
             for engine in engines:
                 cost = predict_plan_cost(
-                    query, g, rounds, engine, alias_sizes, profile.p, calibration
+                    query, g, rounds, engine, alias_sizes, profile.p, calibration,
+                    calibrate_shuffle=calibrate_shuffle,
                 )
                 for fused in fused_options:
                     plans.append(
@@ -256,6 +271,7 @@ def enumerate_plans(
                             iw=iw,
                             nodes=nodes,
                             predicted_comm=cost["comm"],
+                            predicted_wire=cost["wire"],
                             predicted_rounds=cost["rounds"],
                             predicted_dispatches=_predicted_dispatches(
                                 rounds, fused
@@ -276,9 +292,13 @@ def choose_plan(
     hand_ghd: Optional[GHD] = None,
     calibration: Optional[CostCalibration] = None,
     local_backend: str = "jnp",
+    calibrate_shuffle: bool = True,
 ) -> Plan:
     """The advisor's decision: argmin over the candidate plans by
-    (calibrated predicted comm, claimed rounds, predicted dispatches)."""
+    (predicted wire slots under the configured shuffle mode, calibrated
+    predicted comm, claimed rounds, predicted dispatches).  Pass the
+    execution's ``GymConfig.calibrate_shuffle`` so the pad factor the
+    ranking uses matches the shuffle the plan will actually run on."""
     plans = enumerate_plans(
         query,
         stats,
@@ -286,6 +306,7 @@ def choose_plan(
         hand_ghd=hand_ghd,
         calibration=calibration,
         local_backend=local_backend,
+        calibrate_shuffle=calibrate_shuffle,
     )
     assert plans, "no executable plan candidates"
     return plans[0]
@@ -300,6 +321,14 @@ def _measured_comm(entry) -> Optional[float]:
     if hasattr(entry, "comm_tuples"):  # a Ledger
         return float(entry.comm_tuples)
     return float(entry)
+
+
+def _measured_padded(entry) -> Optional[Tuple[float, float]]:
+    """(padded_slots, payload_efficiency) from a Ledger entry, or None for
+    plain measured-comm numbers (which carry no wire accounting)."""
+    if entry is None or not hasattr(entry, "padded_slots"):
+        return None
+    return float(entry.padded_slots), float(entry.payload_efficiency)
 
 
 def _render_table(header: List[str], rows: List[List[str]], fmt: str) -> str:
@@ -341,13 +370,15 @@ def explain(
     calibration: Optional[CostCalibration] = None,
     measured: Optional[Mapping[str, object]] = None,
     local_backend: str = "jnp",
+    calibrate_shuffle: bool = True,
     fmt: str = "text",
 ) -> str:
     """Render the advisor's full candidate table.
 
     ``measured`` maps plan keys to ``Ledger`` objects (or plain measured
-    comm numbers); when given, the table grows measured-comm and
-    prediction-error columns, turning explain() into the
+    comm numbers); when given, the table grows measured-comm,
+    prediction-error, and wire-level (``meas_padded`` slots shipped /
+    ``eff`` payload efficiency) columns, turning explain() into the
     predicted-vs-measured report of ``benchmarks/bench_optimizer.py``.
     Output is deterministic for fixed inputs (stable ordering and
     formatting), which the tests pin.
@@ -361,6 +392,7 @@ def explain(
         hand_ghd=hand_ghd,
         calibration=calibration,
         local_backend=local_backend,
+        calibrate_shuffle=calibrate_shuffle,
     )
     chosen = plans[0]
     with_measured = measured is not None
@@ -369,10 +401,11 @@ def explain(
         "ghd(w/iw/d/n)",
         "pred_rounds",
         "pred_comm",
+        "pred_wire",
         "pred_dispatches",
     ]
     if with_measured:
-        header += ["meas_comm", "err"]
+        header += ["meas_comm", "err", "meas_padded", "eff"]
     rows = []
     for pl in plans:
         mark = "*" if pl.key == chosen.key else " "
@@ -381,15 +414,22 @@ def explain(
             f"{pl.width}/{pl.iw}/{pl.depth}/{pl.nodes}",
             _fmt_num(pl.predicted_rounds),
             _fmt_num(pl.predicted_comm),
+            _fmt_num(pl.predicted_wire),
             _fmt_num(pl.predicted_dispatches),
         ]
         if with_measured:
-            meas = _measured_comm(measured.get(pl.key))
+            entry = measured.get(pl.key)
+            meas = _measured_comm(entry)
             if meas is None:
                 row += ["-", "-"]
             else:
                 err = (pl.predicted_comm - meas) / max(1.0, meas)
                 row += [_fmt_num(meas), f"{100 * err:+.0f}%"]
+            pad = _measured_padded(entry)
+            if pad is None:
+                row += ["-", "-"]
+            else:
+                row += [_fmt_num(pad[0]), f"{pad[1]:.2f}"]
         rows.append(row)
     total_in = sum(float(stats[a.rel]) for a in query.atoms)
     cal = (
@@ -405,7 +445,8 @@ def explain(
         f"query={query.name} atoms={query.n} IN={_fmt_num(total_in)} "
         f"profile: p={profile.p} M={_fmt_num(profile.memory(total_in))} "
         f"calibration: {cal}\n"
-        f"chosen: {chosen.key} — lowest predicted comm, then claimed BSP "
+        f"chosen: {chosen.key} — lowest predicted wire slots (comm x "
+        f"shuffle pad factor), then predicted comm, then claimed BSP "
         f"rounds ({get_schedule(chosen.schedule).paper}, "
         f"{get_schedule(chosen.schedule).claimed_rounds}), then dispatches"
     )

@@ -27,9 +27,20 @@ overflow, and — for blown joins — an EXACT key-only counting dispatch
 true output size instead of guessing upward by powers of the growth
 factor.
 
-The ledger records both what a round *claims* under the BSP model
-(``n_rounds``) and what the engine *measured* (``dispatches``, counted at
-the SPMD layer); round fusion is proven by the two converging.
+Occupancy-adaptive shuffle (``calibrate=True``, the default): before each
+group's payload dispatch, the engine runs ONE count-only pre-pass
+(``relational.batched.measure_*`` — a (p,)-int ``all_to_all`` of bucket
+counts) and the group executes with tight pow2 send/receive capacities
+instead of the global worst case.  Capacities stay pow2-bucketed
+(``SideCaps``), so calibrated programs are reused across rounds with
+different occupancies; when the measured arrival (or, for hash joins, the
+exact pre-counted output) exceeds a managed capacity, the capacity is
+pre-floored and the round that would have aborted never does.
+
+The ledger records what a round *claims* under the BSP model
+(``n_rounds``), what the engine *measured* (``dispatches``, counted at
+the SPMD layer; fusion is proven by claims and measurements converging),
+and what the wire *carried* (``padded_slots`` vs useful ``comm_tuples``).
 """
 from __future__ import annotations
 
@@ -39,18 +50,16 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..relational import batched as B
 from ..relational import grid as G
 from ..relational import ops as R
+from ..relational.batched import GroupMeasure
 from ..relational.ledger import Ledger
+from ..relational.shuffle import pow2
 from ..relational.spmd import SPMD
 from ..relational.table import DTable
 from .ghd import GHD
 from .planner import Op, Round
 
-
-def pow2(x: int) -> int:
-    """Round capacities up to powers of two: distinct shapes collapse, so
-    the per-op jit cache is reused across nodes/rounds/retries — and
-    uniform shapes are what make op groups batchable at all."""
-    return 1 << max(2, int(x - 1).bit_length())
+# ``pow2`` now lives in ``relational.shuffle`` (capacity bucketing is a
+# shuffle concern since calibration); re-exported here for existing callers.
 
 
 # --------------------------------------------------------------------------
@@ -83,7 +92,8 @@ def get_engine(name: str, spmd: SPMD, local_backend: str = "jnp") -> "Engine":
 class Engine:
     """Strategy interface: batched group execution of homogeneous physical
     ops.  Each ``*_many`` method takes k uniform instances plus per-instance
-    seeds and returns (outputs, per-instance stats, claimed BSP rounds).
+    seeds (and an optional ``xcaps`` measurement from ``measure_group``)
+    and returns (outputs, per-instance stats, claimed BSP rounds).
 
     Intersect and dedup have no grid variant (they only ever run on
     already-bounded intermediates), so their hash implementations are
@@ -99,33 +109,65 @@ class Engine:
         self.spmd = spmd
         self.local_backend = local_backend
 
+    # -- calibration pre-pass ----------------------------------------------
+    def measure_group(
+        self, kind: str, lhs, rhs, seeds
+    ) -> Optional[GroupMeasure]:
+        """ONE count-only dispatch for the whole group: tight pow2
+        send/receive capacities per exchange side (max over the group),
+        plus the output-side arrival bound where the output IS an exchange
+        buffer.  Returns None for kinds this strategy cannot pre-measure
+        (the payload then runs with the worst-case defaults)."""
+        if kind == "intersect":
+            return B.measure_intersect_many(
+                self.spmd, lhs, rhs, seeds=seeds, backend=self.local_backend
+            )
+        if kind == "dedup":
+            return B.measure_dedup_many(
+                self.spmd, lhs, seeds=seeds, backend=self.local_backend
+            )
+        return None
+
     # -- per-kind batched ops ----------------------------------------------
-    def semijoin_many(self, ss, rs, cap: int, seeds) -> Tuple[List[DTable], List[Dict], int]:
+    def semijoin_many(
+        self, ss, rs, cap: int, seeds, xcaps: Optional[GroupMeasure] = None
+    ) -> Tuple[List[DTable], List[Dict], int]:
         raise NotImplementedError
 
-    def join_many(self, as_, bs, cap: int, seeds) -> Tuple[List[DTable], List[Dict], int]:
+    def join_many(
+        self, as_, bs, cap: int, seeds, xcaps: Optional[GroupMeasure] = None
+    ) -> Tuple[List[DTable], List[Dict], int]:
         raise NotImplementedError
 
-    def intersect_many(self, as_, bs, cap: int, seeds):
+    def intersect_many(self, as_, bs, cap: int, seeds, xcaps=None):
+        kw = {}
+        if xcaps is not None:
+            kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
+            kw["cap_recv"] = (max(cap, xcaps.lhs.cap_recv), xcaps.rhs.cap_recv)
+        else:
+            kw["cap_recv"] = (cap, self.spmd.p * bs[0].cap)
         outs, stats = B.dist_intersect_many(
-            self.spmd, as_, bs, seeds=seeds,
-            cap_recv=(cap, self.spmd.p * bs[0].cap),
-            backend=self.local_backend,
+            self.spmd, as_, bs, seeds=seeds, backend=self.local_backend, **kw
         )
         return outs, stats, 1
 
-    def dedup_many(self, ts, cap: int, seeds):
+    def dedup_many(self, ts, cap: int, seeds, xcaps=None):
+        kw = {"cap_recv": cap}
+        if xcaps is not None:
+            kw["c_out"] = xcaps.lhs.c_out
+            kw["cap_recv"] = max(cap, xcaps.lhs.cap_recv)
         outs, stats = B.dist_dedup_many(
-            self.spmd, ts, seeds=seeds, cap_recv=cap, backend=self.local_backend
+            self.spmd, ts, seeds=seeds, backend=self.local_backend, **kw
         )
         return outs, stats, 1
 
     # -- materialization (unbatched; one-time per query) -------------------
-    def multijoin(self, parts: List[DTable], cap: int, seed: int):
+    def multijoin(self, parts: List[DTable], cap: int, seed: int, calibrate=False):
         if len(parts) == 1:
-            return parts[0], {"sent": 0, "dropped": 0}, 0
+            return parts[0], {"sent": 0, "dropped": 0, "padded": 0}, 0
         out, st = G.grid_multiway_join(
-            self.spmd, parts, out_cap=cap, backend=self.local_backend
+            self.spmd, parts, out_cap=cap, calibrate=calibrate,
+            backend=self.local_backend,
         )
         return out, st, 1
 
@@ -137,45 +179,85 @@ class HashEngine(Engine):
 
     exact_join_presize = True
 
-    def semijoin_many(self, ss, rs, cap, seeds):
+    def measure_group(self, kind, lhs, rhs, seeds):
+        if kind == "semijoin":
+            return B.measure_semijoin_many(
+                self.spmd, lhs, rhs, seeds=seeds, backend=self.local_backend
+            )
+        if kind == "join":
+            return B.measure_join_many(
+                self.spmd, lhs, rhs, seeds=seeds, backend=self.local_backend
+            )
+        return Engine.measure_group(self, kind, lhs, rhs, seeds)
+
+    def semijoin_many(self, ss, rs, cap, seeds, xcaps=None):
+        kw = {}
+        if xcaps is not None:
+            kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
+            # S receives the output: never below the managed capacity (so
+            # fixed/calibrated stay bit-identical when nothing overflows)
+            kw["cap_recv"] = (max(cap, xcaps.lhs.cap_recv), xcaps.rhs.cap_recv)
+        else:
+            kw["cap_recv"] = (cap, self.spmd.p * rs[0].cap)
         outs, stats = B.dist_semijoin_many(
-            self.spmd, ss, rs, seeds=seeds,
-            cap_recv=(cap, self.spmd.p * rs[0].cap),
-            backend=self.local_backend,
+            self.spmd, ss, rs, seeds=seeds, backend=self.local_backend, **kw
         )
         return outs, stats, 1
 
-    def join_many(self, as_, bs, cap, seeds):
+    def join_many(self, as_, bs, cap, seeds, xcaps=None):
+        kw = {}
+        if xcaps is not None:
+            kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
+            kw["cap_recv"] = (xcaps.lhs.cap_recv, xcaps.rhs.cap_recv)
         outs, stats = B.dist_join_many(
             self.spmd, as_, bs, seeds=seeds, out_cap=cap,
-            backend=self.local_backend,
+            backend=self.local_backend, **kw,
         )
         return outs, stats, 1
 
-    def multijoin(self, parts, cap, seed):
+    def multijoin(self, parts, cap, seed, calibrate=False):
         if len(parts) == 2:
             out, st = R.dist_join(
                 self.spmd, parts[0], parts[1], seed=seed, out_cap=cap,
-                backend=self.local_backend,
+                calibrate=calibrate, backend=self.local_backend,
             )
             return out, st, 1
-        return Engine.multijoin(self, parts, cap, seed)
+        return Engine.multijoin(self, parts, cap, seed, calibrate)
 
 
 @register_engine("grid")
 class GridEngine(Engine):
     """Paper-faithful Lemmas 8/10 (skew-proof, B(X, M) = X^2/M comm)."""
 
-    def semijoin_many(self, ss, rs, cap, seeds):
+    def measure_group(self, kind, lhs, rhs, seeds):
+        if kind == "semijoin":
+            return B.measure_grid_semijoin_many(
+                self.spmd, lhs, rhs, backend=self.local_backend
+            )
+        if kind == "join":
+            return B.measure_grid_join_many(
+                self.spmd, lhs, rhs, backend=self.local_backend
+            )
+        return Engine.measure_group(self, kind, lhs, rhs, seeds)
+
+    def semijoin_many(self, ss, rs, cap, seeds, xcaps=None):
+        kw = {}
+        if xcaps is not None:
+            kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
+            kw["cap_recv"] = (xcaps.lhs.cap_recv, xcaps.rhs.cap_recv)
         outs, stats = B.grid_semijoin_many(
             self.spmd, ss, rs, seeds=seeds, out_cap=cap,
-            backend=self.local_backend,
+            backend=self.local_backend, **kw,
         )
         return outs, stats, 2
 
-    def join_many(self, as_, bs, cap, seeds):
+    def join_many(self, as_, bs, cap, seeds, xcaps=None):
+        kw = {}
+        if xcaps is not None:
+            kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
+            kw["cap_recv"] = (xcaps.lhs.cap_recv, xcaps.rhs.cap_recv)
         outs, stats = B.grid_join_many(
-            self.spmd, as_, bs, out_cap=cap, backend=self.local_backend
+            self.spmd, as_, bs, out_cap=cap, backend=self.local_backend, **kw
         )
         return outs, stats, 1
 
@@ -356,7 +438,15 @@ class PhysicalExecutor:
     own dispatch.  Results, stats, seeds, and retries are bit-identical to
     the fused path (grouping only changes how work is packed into
     programs), which is what the parity tests assert and what makes the
-    dispatch-count comparison in ``bench_fusion`` apples-to-apples."""
+    dispatch-count comparison in ``bench_fusion`` apples-to-apples.
+
+    ``calibrate=True`` (the default, ``GymConfig.calibrate_shuffle``): each
+    group's payload dispatch is preceded by one count-only pre-pass that
+    picks tight pow2 exchange capacities and pre-floors managed capacities
+    the measurement proves too small (``CapacityManager.floor``) — rows,
+    ``comm_tuples``, and retries stay bit-identical to the fixed-capacity
+    path whenever that path would not have aborted, while the wire ships
+    calibrated buckets (``padded_slots`` drops by ~p)."""
 
     def __init__(
         self,
@@ -368,6 +458,7 @@ class PhysicalExecutor:
         max_retries: int = 12,
         count_retries_comm: bool = True,
         fuse: bool = True,
+        calibrate: bool = True,
         local_backend: str = "jnp",
     ):
         self.spmd = spmd
@@ -378,6 +469,7 @@ class PhysicalExecutor:
         self.max_retries = max_retries
         self.count_retries_comm = count_retries_comm
         self.fuse = fuse
+        self.calibrate = calibrate
         self._seed_ctr = 0
 
     @classmethod
@@ -390,6 +482,7 @@ class PhysicalExecutor:
         seed: int = 0,
         max_retries: int = 12,
         count_retries_comm: bool = True,
+        calibrate: bool = True,
     ) -> "PhysicalExecutor":
         """Build an executor straight from an advisor ``Plan``: engine
         strategy, round fusion, and local backend all come from the plan
@@ -403,6 +496,7 @@ class PhysicalExecutor:
             max_retries=max_retries,
             count_retries_comm=count_retries_comm,
             fuse=plan.fused,
+            calibrate=calibrate,
             local_backend=plan.local_backend,
         )
 
@@ -430,19 +524,34 @@ class PhysicalExecutor:
         return list(groups.values())
 
     def _dispatch_group(self, ops_g: List[PhysOp], resolve):
-        cap = self.capman.cap_for(ops_g[0].cap_nodes)
+        """Returns (outputs, per-instance stats, claimed rounds,
+        measure_padded) — the last being the wire cells the count pre-pass
+        itself shipped, charged to the round alongside the payload."""
         seeds = [op.seed for op in ops_g]
         lhs = [resolve(op.a) for op in ops_g]
         kind = ops_g[0].kind
+        rhs = None if kind == "dedup" else [resolve(op.b) for op in ops_g]
+        xcaps = None
+        if self.calibrate:
+            xcaps = self.engine.measure_group(kind, lhs, rhs, seeds)
+            # pre-floor managed capacities the measurement proves too
+            # small: the round that would have aborted never runs short
+            need = max(
+                xcaps.out_recv or 0, xcaps.out_need or 0
+            ) if xcaps is not None else 0
+            if need:
+                for op in ops_g:
+                    self.capman.floor(op.cap_nodes, need)
+        mpad = xcaps.padded if xcaps is not None else 0
+        cap = self.capman.cap_for(ops_g[0].cap_nodes)
         if kind == "dedup":
-            return self.engine.dedup_many(lhs, cap, seeds)
-        rhs = [resolve(op.b) for op in ops_g]
+            return (*self.engine.dedup_many(lhs, cap, seeds, xcaps), mpad)
         if kind == "semijoin":
-            return self.engine.semijoin_many(lhs, rhs, cap, seeds)
+            return (*self.engine.semijoin_many(lhs, rhs, cap, seeds, xcaps), mpad)
         if kind == "join":
-            return self.engine.join_many(lhs, rhs, cap, seeds)
+            return (*self.engine.join_many(lhs, rhs, cap, seeds, xcaps), mpad)
         if kind == "intersect":
-            return self.engine.intersect_many(lhs, rhs, cap, seeds)
+            return (*self.engine.intersect_many(lhs, rhs, cap, seeds, xcaps), mpad)
         raise ValueError(f"unknown physical op kind {kind}")
 
     # -- one schedule round ------------------------------------------------
@@ -452,13 +561,24 @@ class PhysicalExecutor:
         tables: Dict[int, DTable],
         acc: Dict[int, DTable],
         ledger: Ledger,
-    ) -> Tuple[Dict[int, DTable], Dict[int, DTable], int, int, int]:
+    ) -> Tuple[Dict[int, DTable], Dict[int, DTable], int, int, int, int]:
         """Run one logical round (with abort-retry).  Returns
-        (new_tables, new_acc, comm, claimed_rounds, dispatches)."""
+        (new_tables, new_acc, comm, padded, claimed_rounds, dispatches)."""
         stages, writes = lower_round(rnd)
+        # slot liveness: tmp slots die after their last reading stage (the
+        # written results live on); dropping them frees the device buffers
+        # so multi-stage rounds (and their retries) stop double-buffering
+        last_use: Dict[str, int] = {}
+        for i, stage in enumerate(stages):
+            for op in stage:
+                for nm in (op.a, op.b):
+                    if nm is not None and nm.startswith("tmp:"):
+                        last_use[nm] = i
+        keep = {slot for _, _, slot in writes}
         d0 = self.spmd.dispatch_count
         attempt = 0
         comm_total = 0
+        padded_total = 0
         while True:
             attempt += 1
             assert attempt <= self.max_retries, f"round {rnd.phase}: too many retries"
@@ -473,21 +593,24 @@ class PhysicalExecutor:
                 return slots[name]
 
             comm = 0
+            padded = 0
             claimed = 0
             dropped_by_logical: Dict[int, int] = {}
             blown_joins: List[Tuple[PhysOp, DTable, DTable]] = []
-            for stage in stages:
+            for i, stage in enumerate(stages):
                 # seeds advance per attempt in lowering order, independent of
                 # grouping — fused and sequential execution stay identical
                 for op in stage:
                     op.seed = self._next_seed()
                 stage_claimed = 0
                 for ops_g in self._group(stage, resolve):
-                    outs, stats, rounds = self._dispatch_group(ops_g, resolve)
+                    outs, stats, rounds, mpad = self._dispatch_group(ops_g, resolve)
+                    padded += mpad
                     stage_claimed = max(stage_claimed, rounds)
                     for op, out, st in zip(ops_g, outs, stats):
                         slots[op.out] = out
                         comm += st["sent"]
+                        padded += st.get("padded", 0)
                         if st["dropped"]:
                             dropped_by_logical[op.logical] = (
                                 dropped_by_logical.get(op.logical, 0) + st["dropped"]
@@ -495,8 +618,12 @@ class PhysicalExecutor:
                             if op.kind == "join" and self.engine.exact_join_presize:
                                 blown_joins.append((op, resolve(op.a), resolve(op.b)))
                 claimed += stage_claimed
+                for nm, li in last_use.items():
+                    if li == i and nm not in keep:
+                        slots.pop(nm, None)
             if self.count_retries_comm or not dropped_by_logical:
                 comm_total += comm
+                padded_total += padded
             if not dropped_by_logical:
                 break
             ledger.retries += 1
@@ -512,7 +639,10 @@ class PhysicalExecutor:
         new_acc: Dict[int, DTable] = {}
         for store, node, slot in writes:
             (new_tab if store == "tab" else new_acc)[node] = slots[slot]
-        return new_tab, new_acc, comm_total, max(1, claimed), self.spmd.dispatch_count - d0
+        return (
+            new_tab, new_acc, comm_total, padded_total,
+            max(1, claimed), self.spmd.dispatch_count - d0,
+        )
 
     # -- materialization (Theorem 15 stage 1) ------------------------------
     def materialize(
@@ -521,12 +651,13 @@ class PhysicalExecutor:
         base: Dict[str, DTable],
         node_schema: Dict[int, Tuple[str, ...]],
         ledger: Ledger,
-    ) -> Tuple[Dict[int, DTable], int, int, int]:
+    ) -> Tuple[Dict[int, DTable], int, int, int, int]:
         """Compute IDB_v per tree vertex (one grid round or a hash-join
         cascade), with the centralized retry loop.  Returns
-        (tables, comm, claimed_rounds, dispatches)."""
+        (tables, comm, padded, claimed_rounds, dispatches)."""
         d0 = self.spmd.dispatch_count
         comm = 0
+        padded = 0
         dropped_any = True
         attempt = 0
         max_engine_rounds = 0
@@ -536,6 +667,7 @@ class PhysicalExecutor:
             assert attempt <= self.max_retries, "materialization: too many retries"
             dropped_any = False
             comm_try = 0
+            padded_try = 0
             tables = {}
             max_engine_rounds = 0
             for v in ghd.nodes():
@@ -549,27 +681,47 @@ class PhysicalExecutor:
                         need_dedup = True  # strict projection: cross-shard dups
                     parts.append(proj)
                 cap = self.capman.cap_for((v,))
-                out, st, er = self.engine.multijoin(parts, cap, self._next_seed())
+                out, st, er = self.engine.multijoin(
+                    parts, cap, self._next_seed(), calibrate=self.calibrate
+                )
                 sent, drop = st["sent"], st["dropped"]
+                pad = st.get("padded", 0)
                 if need_dedup:
+                    seeds = [self._next_seed()]
+                    dx = (
+                        self.engine.measure_group("dedup", [out], None, seeds)
+                        if self.calibrate
+                        else None
+                    )
+                    if dx is not None:
+                        pad += dx.padded
+                        if dx.out_recv and dx.out_recv > cap:
+                            self.capman.ensure(v, dx.out_recv)
+                            cap = self.capman.cap_for((v,))
                     outs, dstats, r2 = self.engine.dedup_many(
-                        [out], cap, [self._next_seed()]
+                        [out], cap, seeds, dx
                     )
                     out = outs[0]
                     sent += dstats[0]["sent"]
                     drop += dstats[0]["dropped"]
+                    pad += dstats[0].get("padded", 0)
                     er += r2
                 if drop:
                     dropped_any = True
                     self.capman.grow_node(v)
                 comm_try += sent
+                padded_try += pad
                 # canonicalize column order to node schema
                 tables[v], _ = R.dist_project(self.spmd, out, node_schema[v])
                 max_engine_rounds = max(max_engine_rounds, er)
             if self.count_retries_comm or not dropped_any:
                 comm += comm_try
+                padded += padded_try
             if dropped_any:
                 ledger.retries += 1
         for v in tables:
             self.capman.ensure(v, tables[v].cap)
-        return tables, comm, max(1, max_engine_rounds), self.spmd.dispatch_count - d0
+        return (
+            tables, comm, padded, max(1, max_engine_rounds),
+            self.spmd.dispatch_count - d0,
+        )

@@ -20,6 +20,22 @@ Hash-path batched ops produce bit-identical results (and identical
 ``sent``/``dropped`` stats) to their sequential counterparts in ``ops.py``
 given the same seeds and capacities; the fused/sequential parity tests
 pin this down.
+
+Calibration pre-passes: every payload operator here has a ``measure_*``
+sibling — ONE extra tiny dispatch per op group that runs the same
+destination logic but ships only per-destination bucket counts
+(``shuffle.exchange_counts``).  The result is a ``GroupMeasure`` of tight
+pow2 send/receive capacities (max over the group, so one program still
+serves the whole group) that the capacity manager threads back into the
+payload dispatch via the ``c_out``/``cap_recv`` parameters.  The hash
+join measure additionally exchanges the key projections and counts the
+exact join output (the ``dist_join_count`` idea, moved BEFORE the payload)
+so blown output capacities are pre-floored instead of abort-retried.
+
+Donation: the stacked ``(p, k, cap, ar)`` inputs are freshly built by
+``_stack`` and dead after the dispatch, so they are donated
+(``SPMD.run(donate=...)``) — XLA reuses their HBM for the exchange
+outputs instead of double-buffering (no-op on backends without donation).
 """
 from __future__ import annotations
 
@@ -30,15 +46,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import dataclasses
+
 from .grid import _grid_send_one, _grid_shares, _position_groups
 from .hashing import dense_ranks
 from .localops import (
     get_local_backend,
     local_dedup_mask,
+    local_join_count,
     local_join_ranked,
     local_semijoin_mask,
 )
-from .shuffle import exchange, exchange_multi
+from .shuffle import (
+    exchange,
+    exchange_counts,
+    exchange_multi,
+    padded_slots,
+    pow2,
+)
 from .spmd import SPMD
 from .table import DTable, schema_join
 
@@ -71,11 +96,57 @@ def _seed_array(seeds: Sequence[int], p: int) -> jax.Array:
     return jnp.broadcast_to(s, (p, len(seeds)))
 
 
-def _per_op_stats(sent, dropped) -> List[Dict[str, int]]:
-    """(p, k) shard stats -> one {'sent','dropped'} dict per instance."""
+def _per_op_stats(sent, dropped, padded: int = 0) -> List[Dict[str, int]]:
+    """(p, k) shard stats -> one {'sent','dropped','padded'} dict per
+    instance; ``padded`` (dense slots the wire shipped, a static of the
+    dispatch) is identical across the group's instances."""
     s = np.asarray(sent).sum(axis=0)
     d = np.asarray(dropped).sum(axis=0)
-    return [{"sent": int(a), "dropped": int(b)} for a, b in zip(s, d)]
+    return [
+        {"sent": int(a), "dropped": int(b), "padded": int(padded)}
+        for a, b in zip(s, d)
+    ]
+
+
+# --------------------------------------------------- calibration pre-passes
+@dataclasses.dataclass(frozen=True)
+class SideCaps:
+    """Tight pow2 capacities for ONE exchange side: ``c_out`` (per-
+    destination send bucket) and ``cap_recv`` (post-all_to_all compact).
+    Frozen + pow2-bucketed: equal occupancy buckets hash equal, so the
+    payload program these become statics of is reused across rounds."""
+
+    c_out: int
+    cap_recv: int
+
+    @staticmethod
+    def from_counts(out_counts, recv_tot) -> "SideCaps":
+        return SideCaps(
+            pow2(max(1, int(np.asarray(out_counts).max()))),
+            pow2(max(1, int(np.asarray(recv_tot).max()))),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupMeasure:
+    """What one count-only pre-pass dispatch learned about an op group.
+
+    ``lhs``/``rhs``: per-side tight capacities (max over the group's k
+    instances — the whole group still runs as one program).  ``out_recv``:
+    the receive requirement of the exchange whose buffer IS the op's
+    output (semijoin S side, intersect A side, dedup), so the capacity
+    manager can pre-floor a managed capacity that would have aborted.
+    ``out_need``: exact join-output requirement (hash joins only).
+    ``padded``: int32 cells the pre-pass ITSELF shipped (the (p,)-int
+    count vectors, plus the keys-only exchange of the join output count)
+    — charged to the ledger so calibrated payload efficiency never hides
+    the cost of measuring."""
+
+    lhs: SideCaps
+    rhs: Optional[SideCaps] = None
+    out_recv: Optional[int] = None
+    out_need: Optional[int] = None
+    padded: int = 0
 
 
 def _take(data: jax.Array, cols: jax.Array) -> jax.Array:
@@ -87,6 +158,280 @@ def _dests(keys: jax.Array, valid: jax.Array, p: int, seed, backend: str) -> jax
     columns in order, identical to ``dests_for(data, key_cols, ...)``."""
     be = get_local_backend(backend)
     return be.dests(keys, valid, tuple(range(keys.shape[1])), p, seed)
+
+
+# -------------------------------------------- hash-path measure dispatches
+def _measure_pair_one(ad, av, bd, bv, seed, ak, bk, *, p, dedup_b, backend):
+    """Count both sides' exchanges of one (a, b) instance with the SAME
+    seeds/keys the payload dispatch will use."""
+    da = _dests(_take(ad, ak), av, p, seed, backend)
+    oa, ra = exchange_counts(da, p)
+    bkeys = _take(bd, bk)
+    bv2 = (
+        local_dedup_mask(bkeys, bv, tuple(range(bk.shape[0])))
+        if dedup_b
+        else bv
+    )
+    db = _dests(bkeys, bv2, p, seed, backend)
+    ob, rb = exchange_counts(db, p)
+    return oa, ra, ob, rb
+
+
+def _measure_pair_shard_b(ad, av, bd, bv, seed, ak, bk, *, p, dedup_b, backend):
+    one = functools.partial(
+        _measure_pair_one, p=p, dedup_b=dedup_b, backend=backend
+    )
+    return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk)
+
+
+def _join_count_one(ad, av, bd, bv, seed, ak, bk, *,
+                    p, c_out_a, c_out_b, cap_a, cap_b, backend):
+    """Keys-only exchange at the ALREADY-CALIBRATED tight capacities,
+    then the exact per-shard join output count — the ``dist_join_count``
+    retry floor, moved BEFORE the payload at calibrated (not worst-case)
+    wire cost."""
+    akeys = _take(ad, ak)
+    da = _dests(akeys, av, p, seed, backend)
+    a2, a2v, *_ = exchange(akeys, av, da, p=p, c_out=c_out_a, cap_recv=cap_a)
+    bkeys = _take(bd, bk)
+    db = _dests(bkeys, bv, p, seed, backend)
+    b2, b2v, *_ = exchange(bkeys, bv, db, p=p, c_out=c_out_b, cap_recv=cap_b)
+    kc = tuple(range(ak.shape[0]))
+    return local_join_count(a2, a2v, b2, b2v, kc, kc, backend)
+
+
+def _join_count_shard_b(ad, av, bd, bv, seed, ak, bk, *,
+                        p, c_out_a, c_out_b, cap_a, cap_b, backend):
+    one = functools.partial(
+        _join_count_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b,
+        cap_a=cap_a, cap_b=cap_b, backend=backend,
+    )
+    return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk)
+
+
+def _measure_pair_many(
+    spmd: SPMD,
+    as_: Sequence[DTable],
+    bs: Sequence[DTable],
+    a_keys: Sequence[Sequence[int]],
+    b_keys: Sequence[Sequence[int]],
+    seeds: Sequence[int],
+    *,
+    dedup_b: bool,
+    backend: str = "jnp",
+) -> GroupMeasure:
+    p = spmd.p
+    ad, av = _stack(as_)
+    bd, bv = _stack(bs)
+    oa, ra, ob, rb = spmd.run(
+        _measure_pair_shard_b,
+        ad, av, bd, bv, _seed_array(seeds, p),
+        _key_array(a_keys, p), _key_array(b_keys, p),
+        p=p, dedup_b=dedup_b, backend=backend,
+        donate=(0, 1, 2, 3),
+    )
+    return GroupMeasure(
+        lhs=SideCaps.from_counts(oa, ra),
+        rhs=SideCaps.from_counts(ob, rb),
+        out_recv=None,
+        padded=2 * len(as_) * p * p,  # two (p,)-int count vectors each
+    )
+
+
+def measure_semijoin_many(
+    spmd: SPMD, ss, rs, *, seeds, backend: str = "jnp"
+) -> GroupMeasure:
+    """Pre-pass of ``dist_semijoin_many``: S side raw, R side the
+    deduplicated key projection — the S receive count bounds the output."""
+    shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
+    m = _measure_pair_many(
+        spmd, ss, rs,
+        [s.cols(sh) for s, sh in zip(ss, shareds)],
+        [r.cols(sh) for r, sh in zip(rs, shareds)],
+        seeds, dedup_b=True, backend=backend,
+    )
+    return dataclasses.replace(m, out_recv=m.lhs.cap_recv)
+
+
+def measure_join_many(
+    spmd: SPMD, as_, bs, *, seeds, backend: str = "jnp"
+) -> GroupMeasure:
+    """Pre-pass of ``dist_join_many``: first the count dispatch (tight
+    shuffle capacities), then a keys-only exchange AT those calibrated
+    capacities whose exact output count pre-sizes ``out_need`` — two tiny
+    dispatches, both priced into ``padded``."""
+    p = spmd.p
+    shareds = [[x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)]
+    a_keys = [a.cols(sh) for a, sh in zip(as_, shareds)]
+    b_keys = [b.cols(sh) for b, sh in zip(bs, shareds)]
+    m = _measure_pair_many(
+        spmd, as_, bs, a_keys, b_keys, seeds, dedup_b=False, backend=backend
+    )
+    ad, av = _stack(as_)
+    bd, bv = _stack(bs)
+    cnt = spmd.run(
+        _join_count_shard_b,
+        ad, av, bd, bv, _seed_array(seeds, p),
+        _key_array(a_keys, p), _key_array(b_keys, p),
+        p=p, c_out_a=m.lhs.c_out, c_out_b=m.rhs.c_out,
+        cap_a=m.lhs.cap_recv, cap_b=m.rhs.cap_recv, backend=backend,
+        donate=(0, 1, 2, 3),
+    )
+    k, nk = len(as_), len(a_keys[0])
+    return dataclasses.replace(
+        m,
+        out_need=pow2(max(1, int(np.asarray(cnt).max()))),
+        padded=m.padded
+        + k * (
+            padded_slots(p, m.lhs.c_out, nk) + padded_slots(p, m.rhs.c_out, nk)
+        ),
+    )
+
+
+def measure_intersect_many(
+    spmd: SPMD, as_, bs, *, seeds, backend: str = "jnp"
+) -> GroupMeasure:
+    """Pre-pass of ``dist_intersect_many`` (A = full row key)."""
+    m = _measure_pair_many(
+        spmd, as_, bs,
+        [tuple(range(a.arity)) for a in as_],
+        [b.cols(a.schema) for a, b in zip(as_, bs)],
+        seeds, dedup_b=False, backend=backend,
+    )
+    return dataclasses.replace(m, out_recv=m.lhs.cap_recv)
+
+
+def _measure_one_shard_b(d, v, seed, cols, *, p, backend):
+    def one(d, v, seed, cols):
+        return exchange_counts(_dests(_take(d, cols), v, p, seed, backend), p)
+
+    return jax.vmap(one)(d, v, seed, cols)
+
+
+def measure_dedup_many(
+    spmd: SPMD, ts, *, seeds, backend: str = "jnp"
+) -> GroupMeasure:
+    """Pre-pass of ``dist_dedup_many`` (full-row key, single exchange)."""
+    p = spmd.p
+    d, v = _stack(ts)
+    cols = _key_array([tuple(range(t.arity)) for t in ts], p)
+    o, r = spmd.run(
+        _measure_one_shard_b, d, v, _seed_array(seeds, p), cols,
+        p=p, backend=backend, donate=(0, 1),
+    )
+    caps = SideCaps.from_counts(o, r)
+    return GroupMeasure(
+        lhs=caps, out_recv=caps.cap_recv, padded=len(ts) * p * p
+    )
+
+
+# -------------------------------------------- grid-path measure dispatches
+def _grid_pair_dests(av, bv, *, g_a, g_b, cap_a, cap_b, offs_a, offs_b,
+                     stride_a, stride_b, p):
+    grp_a = _position_groups(av, g_a, cap_a, p)
+    dest_a = jnp.where(
+        (grp_a < g_a)[:, None],
+        grp_a[:, None] * stride_a + jnp.asarray(offs_a, jnp.int32)[None, :],
+        p,
+    ).astype(jnp.int32)
+    grp_b = _position_groups(bv, g_b, cap_b, p)
+    dest_b = jnp.where(
+        (grp_b < g_b)[:, None],
+        grp_b[:, None] * stride_b + jnp.asarray(offs_b, jnp.int32)[None, :],
+        p,
+    ).astype(jnp.int32)
+    return dest_a, dest_b
+
+
+def _grid_measure_shard_b(av, bv, *, plan, p):
+    def one(av, bv):
+        da, db = _grid_pair_dests(av, bv, p=p, **dict(plan))
+        oa, ra = exchange_counts(da, p)
+        ob, rb = exchange_counts(db, p)
+        return oa, ra, ob, rb
+
+    return jax.vmap(one)(av, bv)
+
+
+def _grid_measure_rkeys_shard_b(av, rd, rv, rk, *, plan, p):
+    """Grid semijoin pre-pass: S positional, R the dedup'd key projection
+    (its valid mask shrinks, so its position groups must be recounted on
+    the masked rows, exactly as the mark stage does)."""
+
+    def one(av, rd, rv, rk):
+        rkeys = _take(rd, rk)
+        rkv = local_dedup_mask(rkeys, rv, tuple(range(rk.shape[0])))
+        da, db = _grid_pair_dests(av, rkv, p=p, **dict(plan))
+        oa, ra = exchange_counts(da, p)
+        ob, rb = exchange_counts(db, p)
+        return oa, ra, ob, rb
+
+    return jax.vmap(one)(av, rd, rv, rk)
+
+
+def _grid_pair_plan(g_a, g_b, cap_a, cap_b):
+    """Static dest plan of a 2-relation grid — cell = grp_a * g_b + grp_b,
+    which is both the Lemma 8 (w=2) join layout and the Lemma 10 mark
+    layout (S major, R-projection minor)."""
+    stride_a, stride_b = g_b, 1
+    offs_a = tuple(range(g_b))
+    offs_b = tuple(c * g_b for c in range(g_a))
+    return (
+        ("g_a", g_a), ("g_b", g_b), ("cap_a", cap_a), ("cap_b", cap_b),
+        ("offs_a", offs_a), ("offs_b", offs_b),
+        ("stride_a", stride_a), ("stride_b", stride_b),
+    )
+
+
+def _stack_valid(tables: Sequence[DTable]) -> jax.Array:
+    """Valid masks only, (p, k, cap) — the grid pre-passes are positional,
+    so they never need the payload columns on device."""
+    assert len({t.cap for t in tables}) == 1
+    return jnp.stack([t.valid for t in tables], axis=1)
+
+
+def measure_grid_join_many(
+    spmd: SPMD, as_, bs, *, backend: str = "jnp"
+) -> GroupMeasure:
+    """Pre-pass of ``grid_join_many``: positional dests need no seeds, so
+    the counts are exact for the payload send regardless of hashing."""
+    p = spmd.p
+    a0, b0 = as_[0], bs[0]
+    g = _grid_shares([a0.cap * a0.p, b0.cap * b0.p], p)
+    plan = _grid_pair_plan(g[0], g[1], a0.cap, b0.cap)
+    oa, ra, ob, rb = spmd.run(
+        _grid_measure_shard_b, _stack_valid(as_), _stack_valid(bs),
+        plan=plan, p=p, donate=(0, 1),
+    )
+    return GroupMeasure(
+        lhs=SideCaps.from_counts(oa, ra),
+        rhs=SideCaps.from_counts(ob, rb),
+        padded=2 * len(as_) * p * p,
+    )
+
+
+def measure_grid_semijoin_many(
+    spmd: SPMD, ss, rs, *, backend: str = "jnp"
+) -> GroupMeasure:
+    """Pre-pass of ``grid_semijoin_many``'s mark stage (the trailing hash
+    dedup keeps its managed capacity — its input is the mark output, which
+    does not exist yet)."""
+    p = spmd.p
+    s0, r0 = ss[0], rs[0]
+    g_s, g_r = _grid_shares([s0.cap * s0.p, r0.cap * r0.p], p)
+    plan = _grid_pair_plan(g_s, g_r, s0.cap, r0.cap)
+    shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
+    rd, rv = _stack(rs)  # R's key projection needs the data; S only its mask
+    rk = _key_array([r.cols(sh) for r, sh in zip(rs, shareds)], p)
+    oa, ra, ob, rb = spmd.run(
+        _grid_measure_rkeys_shard_b, _stack_valid(ss), rd, rv, rk,
+        plan=plan, p=p, donate=(0, 1, 2),
+    )
+    return GroupMeasure(
+        lhs=SideCaps.from_counts(oa, ra),
+        rhs=SideCaps.from_counts(ob, rb),
+        padded=2 * len(ss) * p * p,
+    )
 
 
 # ------------------------------------------------------------ hash semijoin
@@ -145,8 +490,14 @@ def dist_semijoin_many(
         sd, sv, rd, rv, _seed_array(seeds, p), sk, rk,
         p=p, c_out_s=c_out[0], c_out_r=c_out[1],
         cap_s=cap_recv[0], cap_r=cap_recv[1], backend=backend,
+        donate=(0, 1, 2, 3),
     )
-    return _unstack(od, ov, [s.schema for s in ss]), _per_op_stats(sent, dropped)
+    return _unstack(od, ov, [s.schema for s in ss]), _per_op_stats(
+        sent, dropped,
+        # S ships full rows; R ships its deduplicated key projection
+        padded_slots(p, c_out[0], ss[0].arity)
+        + padded_slots(p, c_out[1], len(shareds[0])),
+    )
 
 
 # ---------------------------------------------------------------- hash join
@@ -214,8 +565,13 @@ def dist_join_many(
         ad, av, bd, bv, _seed_array(seeds, p), ak, bk, bkeep,
         p=p, c_out_a=c_out[0], c_out_b=c_out[1],
         cap_a=cap_recv[0], cap_b=cap_recv[1], out_cap=out_cap, backend=backend,
+        donate=(0, 1, 2, 3),
     )
-    return _unstack(od, ov, schemas), _per_op_stats(sent, dropped)
+    return _unstack(od, ov, schemas), _per_op_stats(
+        sent, dropped,
+        padded_slots(p, c_out[0], as_[0].arity)
+        + padded_slots(p, c_out[1], bs[0].arity),
+    )
 
 
 # ----------------------------------------------------------- hash intersect
@@ -266,8 +622,13 @@ def dist_intersect_many(
         ad, av, bd, bv, _seed_array(seeds, p), bcols,
         p=p, c_out_a=c_out[0], c_out_b=c_out[1],
         cap_a=cap_recv[0], cap_b=cap_recv[1], backend=backend,
+        donate=(0, 1, 2, 3),
     )
-    return _unstack(od, ov, [a.schema for a in as_]), _per_op_stats(sent, dropped)
+    return _unstack(od, ov, [a.schema for a in as_]), _per_op_stats(
+        sent, dropped,
+        padded_slots(p, c_out[0], as_[0].arity)
+        + padded_slots(p, c_out[1], bs[0].arity),
+    )
 
 
 # --------------------------------------------------------------- hash dedup
@@ -302,8 +663,11 @@ def dist_dedup_many(
     od, ov, sent, dropped = spmd.run(
         _dedup_shard_b, d, v, _seed_array(seeds, p),
         p=p, c_out=c_out, cap_recv=cap_recv, backend=backend,
+        donate=(0, 1),
     )
-    return _unstack(od, ov, [t.schema for t in ts]), _per_op_stats(sent, dropped)
+    return _unstack(od, ov, [t.schema for t in ts]), _per_op_stats(
+        sent, dropped, padded_slots(p, c_out, ts[0].arity)
+    )
 
 
 # ---------------------------------------------- grid semijoin (Lemma 10)
@@ -355,19 +719,23 @@ def grid_semijoin_many(
     *,
     seeds: Sequence[int],
     out_cap: int,
+    c_out: Optional[Tuple[int, int]] = None,
+    cap_recv: Optional[Tuple[int, int]] = None,
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold Lemma-10 grid semijoin: one MARK dispatch for the whole group
     + one batched hash-dedup dispatch for the marked duplicates (2 claimed
-    BSP rounds either way)."""
+    BSP rounds either way).  ``c_out``/``cap_recv`` (per (S, R-keys) side)
+    override the worst-case mark-stage capacities with calibrated ones
+    (``measure_grid_semijoin_many``)."""
     p = spmd.p
     s0, r0 = ss[0], rs[0]
     shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
     assert all(shareds)
     sz_s, sz_r = s0.cap * s0.p, r0.cap * r0.p
     g_s, g_r = _grid_shares([sz_s, sz_r], p)
-    cap_s = -(-sz_s // g_s)
-    cap_r = -(-sz_r // g_r)
+    c_out = c_out or (s0.cap * g_r, r0.cap * g_s)
+    cap_recv = cap_recv or (-(-sz_s // g_s), -(-sz_r // g_r))
     sd, sv = _stack(ss)
     rd, rv = _stack(rs)
     sk = _key_array([s.cols(sh) for s, sh in zip(ss, shareds)], p)
@@ -376,17 +744,26 @@ def grid_semijoin_many(
         _grid_semijoin_mark_b,
         sd, sv, rd, rv, sk, rk,
         g_s=g_s, g_r=g_r, s_cap=s0.cap, r_cap=r0.cap, p=p,
-        c_out_s=s0.cap * g_r, c_out_r=r0.cap * g_s,
-        cap_s=cap_s, cap_r=cap_r, backend=backend,
+        c_out_s=c_out[0], c_out_r=c_out[1],
+        cap_s=cap_recv[0], cap_r=cap_recv[1], backend=backend,
+        donate=(0, 1, 2, 3),
     )
     marked = _unstack(md, mv, [s.schema for s in ss])
-    mark_stats = _per_op_stats(sent, dropped)
+    mark_stats = _per_op_stats(
+        sent, dropped,
+        padded_slots(p, c_out[0], s0.arity)
+        + padded_slots(p, c_out[1], len(shareds[0])),
+    )
     ded, ded_stats = dist_dedup_many(
         spmd, marked, seeds=[s + 7 for s in seeds],
         c_out=marked[0].cap, cap_recv=out_cap, backend=backend,
     )
     stats = [
-        {"sent": m["sent"] + d["sent"], "dropped": m["dropped"] + d["dropped"]}
+        {
+            "sent": m["sent"] + d["sent"],
+            "dropped": m["dropped"] + d["dropped"],
+            "padded": m["padded"] + d["padded"],
+        }
         for m, d in zip(mark_stats, ded_stats)
     ]
     return ded, stats
@@ -422,10 +799,14 @@ def grid_join_many(
     bs: Sequence[DTable],
     *,
     out_cap: int,
+    c_out: Optional[Tuple[int, int]] = None,
+    cap_recv: Optional[Tuple[int, int]] = None,
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold Lemma-8 grid join (w=2): two batched position-group send
-    dispatches + one batched local-join dispatch — one claimed BSP round."""
+    dispatches + one batched local-join dispatch — one claimed BSP round.
+    ``c_out``/``cap_recv`` (per (A, B) relation) override the worst-case
+    send capacities with calibrated ones (``measure_grid_join_many``)."""
     p = spmd.p
     a0, b0 = as_[0], bs[0]
     sizes = [a0.cap * a0.p, b0.cap * b0.p]
@@ -439,17 +820,23 @@ def grid_join_many(
     ]
     parts = []
     send_stats = []
-    for tables, (g_self, stride, offs) in zip((as_, bs), plans):
+    for i, (tables, (g_self, stride, offs)) in enumerate(zip((as_, bs), plans)):
         t0 = tables[0]
         d, v = _stack(tables)
+        co = c_out[i] if c_out else t0.cap * (g[0] * g[1] // g_self)
+        cr = cap_recv[i] if cap_recv else -(-(t0.p * t0.cap) // g_self)
         rd, rv, stats = spmd.run(
             _grid_send_shard_b, d, v,
             g_self=g_self, stride=stride, offsets=offs, p=p, cap=t0.cap,
-            c_out=t0.cap * (g[0] * g[1] // g_self),
-            cap_recv=-(-(t0.p * t0.cap) // g_self),
+            c_out=co, cap_recv=cr,
+            donate=(0, 1),
         )
         parts.append((rd, rv))
-        send_stats.append(_per_op_stats(stats["sent"], stats["dropped"]))
+        send_stats.append(
+            _per_op_stats(
+                stats["sent"], stats["dropped"], padded_slots(p, co, t0.arity)
+            )
+        )
     shareds = [[x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)]
     keeps = [
         tuple(i for i, x in enumerate(b.schema) if x not in set(a.schema))
@@ -463,12 +850,14 @@ def grid_join_many(
     od, ov, sent_j, over = spmd.run(
         _local_join_shard_b, ad, av, bd, bv, ak, bk, bkeep,
         out_cap=out_cap, backend=backend,
+        donate=(0, 1, 2, 3),
     )
     join_stats = _per_op_stats(sent_j, over)
     stats = [
         {
             "sent": sa["sent"] + sb["sent"] + sj["sent"],
             "dropped": sa["dropped"] + sb["dropped"] + sj["dropped"],
+            "padded": sa["padded"] + sb["padded"],
         }
         for sa, sb, sj in zip(send_stats[0], send_stats[1], join_stats)
     ]

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from .localops import compact, local_dedup_mask, local_join, local_project, local_semijoin_mask
 from .ops import agg_stats, _stats
-from .shuffle import exchange, exchange_multi
+from .shuffle import exchange, exchange_counts, exchange_multi, padded_slots, pow2
 from .spmd import AXIS, SPMD
 from .table import DTable, schema_join
 
@@ -75,6 +75,7 @@ def grid_multiway_join(
     c_out: Optional[int] = None,
     cap_recv: Optional[int] = None,
     sizes: Optional[Sequence[int]] = None,
+    calibrate: bool = False,
     backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     """Lemma 8: join w relations in ONE round on a grid of prod(g_i) <= p
@@ -83,12 +84,16 @@ def grid_multiway_join(
     Skew-proof: group membership is positional.  Communication =
     sum_i |R_i| * prod_{j != i} g_j  (+ output), the paper's
     O((sum |R_i|)^w / M^{w-1} + OUT).
+
+    ``calibrate=True``: a count-only pre-pass per relation replaces the
+    worst-case send capacity (full shard cap replicated to every other
+    grid dim) with the tight pow2 occupancy of the position groups.
     """
     w = len(tables)
     assert w >= 1
     p = spmd.p
     if w == 1:
-        return tables[0], {"sent": 0, "dropped": 0}
+        return tables[0], {"sent": 0, "dropped": 0, "padded": 0}
     sizes = list(sizes) if sizes is not None else [t.cap * t.p for t in tables]
     g = _grid_shares(sizes, p)
     strides = [1] * w
@@ -98,7 +103,7 @@ def grid_multiway_join(
         acc *= g[i]
 
     parts: List[DTable] = []
-    stats_total = {"sent": 0, "dropped": 0}
+    stats_total = {"sent": 0, "dropped": 0, "padded": 0}
     for i, t in enumerate(tables):
         # offsets over all other dims
         n_other = acc // g[i]
@@ -116,6 +121,20 @@ def grid_multiway_join(
         rec(0, 0)
         co = c_out if c_out is not None else t.cap * n_other
         cr = cap_recv if cap_recv is not None else -(-(t.p * t.cap) // g[i])
+        count_pad = 0
+        if calibrate and c_out is None and cap_recv is None:
+            oc, rt = spmd.run(
+                _grid_send_count_one,
+                t.valid,
+                g_self=g[i],
+                stride=strides[i],
+                offsets=tuple(offs),
+                p=p,
+                cap=t.cap,
+            )
+            co = pow2(max(1, int(oc.max())))
+            cr = pow2(max(1, int(rt.max())))
+            count_pad = p * p  # the (p,)-int count vector itself
         grp_fn = _grid_send_one
         rd, rv, stats = spmd.run(
             grp_fn,
@@ -130,9 +149,10 @@ def grid_multiway_join(
             cap_recv=cr,
         )
         parts.append(DTable(rd, rv, t.schema))
-        s = agg_stats(stats)
+        s = agg_stats(stats, padded_slots(p, co, t.arity) + count_pad)
         stats_total["sent"] += s["sent"]
         stats_total["dropped"] += s["dropped"]
+        stats_total["padded"] += s["padded"]
 
     # local multiway join at each grid cell (one reduce stage, no comm)
     from .ops import local_multiway_join
@@ -141,6 +161,17 @@ def grid_multiway_join(
     joined, jstats = local_multiway_join(spmd, parts, out_caps, backend)
     stats_total["dropped"] += jstats["dropped"]
     return joined, stats_total
+
+
+def _grid_send_count_one(valid, *, g_self, stride, offsets, p, cap):
+    """Count-only pre-pass of one position-group send (``_grid_send_one``
+    minus the payload): same dests, a (p,)-int ``all_to_all``."""
+    grp = _position_groups(valid, g_self, cap, p)
+    offs = jnp.asarray(offsets, jnp.int32)
+    dests = jnp.where(
+        (grp < g_self)[:, None], grp[:, None] * stride + offs[None, :], p
+    ).astype(jnp.int32)
+    return exchange_counts(dests, p)
 
 
 def _grid_send_one(data, valid, *, g_self, stride, offsets, p, cap, c_out, cap_recv):
@@ -223,7 +254,11 @@ def grid_semijoin(
         cap_s=cap_s, cap_r=cap_r, backend=backend,
     )
     marked = DTable(md, mv, s.schema)
-    st = agg_stats(stats)
+    st = agg_stats(
+        stats,
+        padded_slots(p, s.cap * g_r, s.arity)
+        + padded_slots(p, r.cap * g_s, len(shared)),
+    )
     # Round 2: dedup the marked copies (<= g_r per tuple) by full-row hash.
     from .ops import dist_dedup
 
@@ -234,6 +269,7 @@ def grid_semijoin(
     st2 = {
         "sent": st["sent"] + dstats["sent"],
         "dropped": st["dropped"] + dstats["dropped"],
+        "padded": st["padded"] + dstats["padded"],
     }
     return ded, st2, 2
 
@@ -272,21 +308,23 @@ def tree_dedup(
     cols = tuple(range(len(t.schema)))
     cap_recv = cap_recv or t.cap * fan
     cur = t
-    total = {"sent": 0, "dropped": 0}
+    total = {"sent": 0, "dropped": 0, "padded": 0}
     rounds = 0
     block = fan
     while True:
         block_eff = min(block, p)
+        co = cur.cap
         d, v, stats = spmd.run(
             _tree_dedup_shard,
             cur.data, cur.valid, spmd.seeds(seed + rounds),
             cols=cols, block=block_eff, p=p,
-            c_out=cur.cap, cap_recv=cap_recv,
+            c_out=co, cap_recv=cap_recv,
         )
         cur = DTable(d, v, t.schema)
-        s = agg_stats(stats)
+        s = agg_stats(stats, padded_slots(p, co, t.arity))
         total["sent"] += s["sent"]
         total["dropped"] += s["dropped"]
+        total["padded"] += s["padded"]
         rounds += 1
         if block_eff >= p:
             break

@@ -1,5 +1,17 @@
 """BSP cost accounting: rounds and tuples communicated (the paper's two
-cost metrics, Sec. 3.2).  One ledger per query execution."""
+cost metrics, Sec. 3.2), plus the wire-level padded-slot accounting behind
+the occupancy-adaptive shuffle.  One ledger per query execution.
+
+``comm_tuples`` counts *useful* tuples moved — the unit of the paper's
+bounds.  The physical shuffle, however, ships dense ``(p, c_out, arity)``
+slot buffers per ``all_to_all``, so the wire carries ``padded_slots``
+int32 CELLS (slot rows x row width — width-weighted so keys-only
+exchanges and the count pre-pass's own traffic are priced honestly).
+``payload_efficiency`` (useful tuples per shipped cell) is the measured
+quality of the capacity calibration; it is a tuples/cells ratio, so
+compare it across capacity policies on the SAME query, not across
+queries of different arity.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -15,6 +27,7 @@ class RoundRecord:
     note: str = ""
     n_rounds: int = 1  # CLAIMED engine BSP rounds (parallel ops: the max)
     dispatches: int = 0  # MEASURED SPMD program dispatches (0 = not measured)
+    padded_slots: int = 0  # MEASURED dense all_to_all slots shipped
 
 
 class Ledger:
@@ -47,6 +60,29 @@ class Ledger:
     def shuffle_tuples(self) -> int:
         return sum(r.comm_tuples for r in self.records)
 
+    @property
+    def useful_tuples(self) -> int:
+        """Alias of ``shuffle_tuples`` in wire terms: the occupied slots of
+        the shipped exchange buffers."""
+        return self.shuffle_tuples
+
+    @property
+    def padded_slots(self) -> int:
+        """Dense ``all_to_all`` cells the wire actually shipped: every
+        exchange pays ``p * c_out * arity`` int32 cells per shard, full or
+        empty — including the count pre-pass's own count vectors and
+        keys-only output-count exchanges."""
+        return sum(r.padded_slots for r in self.records)
+
+    @property
+    def payload_efficiency(self) -> float:
+        """useful_tuples per shipped cell — the measured quality of the
+        shipped exchange buffers (1.0 when nothing was shuffled).  A
+        tuples/cells ratio: compare across capacity policies on the same
+        query, not across queries of different arity."""
+        pad = self.padded_slots
+        return self.useful_tuples / pad if pad else 1.0
+
     def add_round(
         self,
         phase: str,
@@ -55,11 +91,12 @@ class Ledger:
         note: str = "",
         n_rounds: int = 1,
         dispatches: int = 0,
+        padded: int = 0,
     ) -> None:
         self.records.append(
             RoundRecord(
                 len(self.records), phase, list(ops), int(comm), note, n_rounds,
-                int(dispatches),
+                int(dispatches), int(padded),
             )
         )
 
@@ -94,6 +131,8 @@ class Ledger:
             "measured_shuffle": int(self.shuffle_tuples),
             "measured_rounds": int(self.rounds),
             "measured_dispatches": int(self.measured_dispatches),
+            "measured_padded": int(self.padded_slots),
+            "payload_efficiency": float(self.payload_efficiency),
             "output_tuples": int(self.output_tuples),
             "retries": int(self.retries),
         }
@@ -101,15 +140,20 @@ class Ledger:
     def summary(self) -> Dict[str, Any]:
         phases: Dict[str, Dict[str, int]] = {}
         for r in self.records:
-            ph = phases.setdefault(r.phase, {"rounds": 0, "comm": 0, "dispatches": 0})
+            ph = phases.setdefault(
+                r.phase, {"rounds": 0, "comm": 0, "dispatches": 0, "padded": 0}
+            )
             ph["rounds"] += r.n_rounds
             ph["comm"] += r.comm_tuples
             ph["dispatches"] += r.dispatches
+            ph["padded"] += r.padded_slots
         return {
             "rounds": self.rounds,
             "measured_dispatches": self.measured_dispatches,
             "comm_tuples": self.comm_tuples,
             "shuffle_tuples": self.shuffle_tuples,
+            "padded_slots": self.padded_slots,
+            "payload_efficiency": round(self.payload_efficiency, 4),
             "output_tuples": self.output_tuples,
             "retries": self.retries,
             "phases": phases,
@@ -120,11 +164,12 @@ class Ledger:
         lines = [
             f"Ledger(rounds={s['rounds']}, dispatches={s['measured_dispatches']}, "
             f"comm={s['comm_tuples']}, out={s['output_tuples']}, "
+            f"padded={s['padded_slots']}, eff={s['payload_efficiency']}, "
             f"retries={s['retries']})"
         ]
         for ph, v in s["phases"].items():
             lines.append(
                 f"  {ph}: rounds={v['rounds']} dispatches={v['dispatches']} "
-                f"comm={v['comm']}"
+                f"comm={v['comm']} padded={v['padded']}"
             )
         return "\n".join(lines)

@@ -3,8 +3,17 @@
 Each operator = (repartition via hash shuffle) + (per-shard local op), all
 inside one per-shard SPMD function so a BSP round is one program dispatch.
 Operators return (result DTable, stats) where stats carry per-shard
-``sent`` (tuples communicated — the paper's cost unit) and ``dropped``
-(capacity overflows; nonzero => the driver must retry with bigger caps).
+``sent`` (tuples communicated — the paper's cost unit), ``dropped``
+(capacity overflows; nonzero => the driver must retry with bigger caps),
+and ``padded`` (dense ``all_to_all`` slots the wire actually shipped —
+statically known from ``p`` and each exchange's ``c_out``, so it is
+accounted host-side by the wrappers, never traced).
+
+``measure_exchange`` is the sequential count-only pre-pass (see
+``shuffle.exchange_counts``): the tight per-exchange capacities it returns
+are what the capacity manager feeds back as ``c_out``/``cap_recv`` so the
+payload ``all_to_all`` ships calibrated buckets instead of the global
+worst case.
 """
 from __future__ import annotations
 
@@ -26,7 +35,7 @@ from .localops import (
     local_project,
     local_semijoin_mask,
 )
-from .shuffle import exchange, exchange_multi
+from .shuffle import exchange, exchange_counts, exchange_multi, padded_slots, pow2
 from .spmd import SPMD
 from .table import DTable, schema_join
 
@@ -39,8 +48,10 @@ def _stats(sent, dropped):
     return {"sent": sent, "dropped": dropped}
 
 
-def agg_stats(stats) -> Dict[str, int]:
-    return {k: int(np.asarray(v).sum()) for k, v in stats.items()}
+def agg_stats(stats, padded: int = 0) -> Dict[str, int]:
+    out = {k: int(np.asarray(v).sum()) for k, v in stats.items()}
+    out.setdefault("padded", int(padded))
+    return out
 
 
 # ---------------------------------------------------------------- repartition
@@ -65,7 +76,53 @@ def repartition(
         cap_recv=cap_recv,
         backend=backend,
     )
-    return DTable(rd, rv, t.schema), agg_stats(stats)
+    return DTable(rd, rv, t.schema), agg_stats(
+        stats, padded_slots(spmd.p, c_out, t.arity)
+    )
+
+
+# ------------------------------------------------------ count-only pre-pass
+def _exchange_count_shard(data, valid, seed, *, cols, p, dedup, backend):
+    """Mirror of the map stage of one exchange, counts only: same key
+    columns, same seed, same destination hash — but the ``all_to_all``
+    carries a (p,)-int count vector instead of the payload buffer."""
+    be = get_local_backend(backend)
+    v = valid
+    if dedup:  # semijoin ships the deduplicated key projection of R
+        keys, v = local_project(data, valid, cols, dedup=True)
+        dest = be.dests(keys, v, tuple(range(len(cols))), p, seed)
+    else:
+        dest = be.dests(data, v, cols, p, seed)
+    return exchange_counts(dest, p)
+
+
+def measure_exchange(
+    spmd: SPMD,
+    t: DTable,
+    attrs: Sequence[str],
+    *,
+    seed: int,
+    dedup: bool = False,
+    backend: str = "jnp",
+) -> Tuple[int, int]:
+    """Count-only pre-pass of ``t``'s hash exchange on ``attrs``: one tiny
+    dispatch returning the tight ``(c_out, cap_recv)`` for the payload
+    exchange that follows with the SAME seed — pow2-bucketed so calibrated
+    capacities collapse into reusable jit cache entries."""
+    out_counts, recv_tot = spmd.run(
+        _exchange_count_shard,
+        t.data,
+        t.valid,
+        spmd.seeds(seed),
+        cols=t.cols(attrs),
+        p=spmd.p,
+        dedup=dedup,
+        backend=backend,
+    )
+    return (
+        pow2(max(1, int(np.asarray(out_counts).max()))),
+        pow2(max(1, int(np.asarray(recv_tot).max()))),
+    )
 
 
 # ----------------------------------------------------------------------- join
@@ -109,18 +166,29 @@ def dist_join(
     out_cap: int,
     c_out: Optional[Tuple[int, int]] = None,
     cap_recv: Optional[Tuple[int, int]] = None,
+    calibrate: bool = False,
     backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     """Hash join of a and b on their shared attributes (co-partitioning).
 
     With NO shared attributes this is an explicit broadcast cross join —
-    every reducer keeps its A shard and receives all of B."""
+    every reducer keeps its A shard and receives all of B.
+
+    ``calibrate=True``: when the shuffle capacities are not given, run the
+    count-only pre-pass (``measure_exchange``) per side and use the tight
+    pow2 capacities instead of the global worst case."""
     shared = [x for x in a.schema if x in b.schema]
     a_key = a.cols(shared)
     b_key = b.cols(shared)
     b_keep = tuple(i for i, x in enumerate(b.schema) if x not in set(a.schema))
     out_schema = schema_join(a.schema, b.schema)
     p = spmd.p
+    count_pad = 0
+    if calibrate and shared and c_out is None and cap_recv is None:
+        ca, ra = measure_exchange(spmd, a, shared, seed=seed, backend=backend)
+        cb, rb = measure_exchange(spmd, b, shared, seed=seed, backend=backend)
+        c_out, cap_recv = (ca, cb), (ra, rb)
+        count_pad = 2 * p * p  # the two (p,)-int count vectors
     c_out = c_out or (a.cap, b.cap)           # safe: one shard sends all
     cap_recv = cap_recv or (p * a.cap, p * b.cap)  # safe: one shard gets all
     if not shared:
@@ -131,7 +199,9 @@ def dist_join(
             c_out_b=c_out[1], cap_b=cap_recv[1],
             out_cap=out_cap, backend=backend,
         )
-        return DTable(od, ov, out_schema), agg_stats(stats)
+        return DTable(od, ov, out_schema), agg_stats(
+            stats, padded_slots(p, c_out[1], b.arity)
+        )
     od, ov, stats = spmd.run(
         _join_shard,
         a.data, a.valid, b.data, b.valid, spmd.seeds(seed),
@@ -141,7 +211,12 @@ def dist_join(
         cap_a=cap_recv[0], cap_b=cap_recv[1],
         out_cap=out_cap, backend=backend,
     )
-    return DTable(od, ov, out_schema), agg_stats(stats)
+    return DTable(od, ov, out_schema), agg_stats(
+        stats,
+        padded_slots(p, c_out[0], a.arity)
+        + padded_slots(p, c_out[1], b.arity)
+        + count_pad,
+    )
 
 
 # ------------------------------------------------------------------- semijoin
@@ -189,7 +264,12 @@ def dist_semijoin(
         cap_s=cap_recv[0], cap_r=cap_recv[1],
         backend=backend,
     )
-    return DTable(sd, sv, s.schema), agg_stats(stats)
+    return DTable(sd, sv, s.schema), agg_stats(
+        stats,
+        # S ships full rows; R ships only its deduplicated key projection
+        padded_slots(p, c_out[0], s.arity)
+        + padded_slots(p, c_out[1], len(shared)),
+    )
 
 
 # ------------------------------------------------------------------ intersect
@@ -228,7 +308,10 @@ def dist_intersect(
         cap_a=cap_recv[0], cap_b=cap_recv[1],
         backend=backend,
     )
-    return DTable(ad, av, a.schema), agg_stats(stats)
+    return DTable(ad, av, a.schema), agg_stats(
+        stats,
+        padded_slots(p, c_out[0], a.arity) + padded_slots(p, c_out[1], b.arity),
+    )
 
 
 # ---------------------------------------------------------------------- dedup
@@ -253,7 +336,9 @@ def dist_dedup(
         _dedup_shard, t.data, t.valid, spmd.seeds(seed),
         cols=cols, p=p, c_out=c_out, cap_recv=cap_recv, backend=backend,
     )
-    return DTable(d, v, t.schema), agg_stats(stats)
+    return DTable(d, v, t.schema), agg_stats(
+        stats, padded_slots(p, c_out, t.arity)
+    )
 
 
 # ------------------------------------------------- hypercube (Lemma 8/Shares)
@@ -312,7 +397,9 @@ def hypercube_partition(
         dest_plan=(fixed, wild_offsets),
         p=spmd.p, c_out=c_out, cap_recv=cap_recv,
     )
-    return DTable(rd, rv, t.schema), agg_stats(stats)
+    return DTable(rd, rv, t.schema), agg_stats(
+        stats, padded_slots(spmd.p, c_out, t.arity)
+    )
 
 
 # ------------------------------------------------------- local multiway join
@@ -342,7 +429,7 @@ def local_multiway_join(
     their co-located buckets, the reduce stage of Lemma 8)."""
     assert len(tables) >= 1
     if len(tables) == 1:
-        return tables[0], {"sent": 0, "dropped": 0}
+        return tables[0], {"sent": 0, "dropped": 0, "padded": 0}
     plan = []
     schema = tables[0].schema
     for nxt in tables[1:]:
@@ -412,9 +499,20 @@ def dist_project(
     """Shard-local projection (no communication).  Returns (table, stats)
     like every other operator; stats are identically zero."""
     d, v = spmd.run(_project_shard, t.data, t.valid, cols=t.cols(attrs), dedup=dedup)
-    return DTable(d, v, tuple(attrs)), {"sent": 0, "dropped": 0}
+    return DTable(d, v, tuple(attrs)), {"sent": 0, "dropped": 0, "padded": 0}
 
 
-def check_no_drop(stats: Dict[str, int]) -> None:
+def check_no_drop(
+    stats: Dict[str, int], op: str = "?", cap: Optional[int] = None
+) -> None:
+    """Raise ``Overflow`` if the operator dropped tuples.
+
+    The message names the operator and the capacity that blew so
+    abort-retry logs are actionable, not just a bare dropped count."""
     if stats.get("dropped", 0):
-        raise Overflow(f"{stats['dropped']} tuples dropped (capacity abort)")
+        at = f" at capacity {cap}" if cap is not None else ""
+        raise Overflow(
+            f"{op}: {stats['dropped']} tuples dropped{at} (capacity abort; "
+            f"sent={stats.get('sent', '?')}) — retry with a larger capacity "
+            "or enable the count-calibrated shuffle pre-pass"
+        )

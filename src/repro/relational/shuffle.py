@@ -12,6 +12,17 @@ Both exchanges are batchable: the collective refers to the named reducer
 axis only, so wrapping the calling shard function in an inner (anonymous)
 ``jax.vmap`` fuses k independent shuffles into one program with one
 ``all_to_all`` — the mechanism behind ``relational.batched`` round fusion.
+
+Capacity calibration: the wire ships the dense ``(p, c_out)`` slot buffer,
+so every ``all_to_all`` pays ``p * c_out`` slots per shard regardless of
+occupancy.  ``exchange_counts`` is the count-only pre-pass behind the
+engine's occupancy-adaptive shuffle: a tiny ``(p,)``-int ``all_to_all`` of
+per-destination bucket counts, from which the capacity manager picks tight
+``c_out``/``cap_recv`` *before* the payload moves (Hu & Yi's per-instance
+load calibration, driven by Joglekar & Ré-style cheap count statistics —
+see PAPERS.md).  Calibrated capacities are rounded up to power-of-two
+buckets (``pow2``) so jitted programs are reused across rounds with
+different occupancies instead of recompiled per capacity.
 """
 from __future__ import annotations
 
@@ -24,30 +35,94 @@ from .localops import compact
 from .spmd import AXIS
 
 
+def pow2(x: int) -> int:
+    """Round capacities up to powers of two (min 4): distinct shapes
+    collapse, so the per-op jit cache is reused across nodes, rounds,
+    retries, and calibrated occupancies — and uniform shapes are what make
+    op groups batchable at all."""
+    return 1 << max(2, int(x - 1).bit_length())
+
+
+def padded_slots(p: int, c_out: int, arity: int = 1) -> int:
+    """int32 cells a fleet-wide exchange ships for one ``all_to_all``:
+    each of the ``p`` shards sends the dense ``(p, c_out, arity)`` bucket
+    buffer whether the buckets are full or empty.  Counting CELLS (slot
+    rows x row width) rather than rows keeps keys-only exchanges (the
+    semijoin R projection, the join measure pre-pass) honestly cheaper
+    than full-payload ones.  This is the denominator of the ledger's
+    payload-efficiency metric."""
+    return p * p * c_out * max(1, arity)
+
+
 def _bucketize(
     data: jax.Array, valid_dest: jax.Array, p: int, c_out: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Scatter rows into per-destination buckets.
 
     ``valid_dest``: (n,) int32 in [0,p) for live rows, == p for dead rows.
-    Returns (buf (p,c_out,ar), buf_valid (p,c_out), sent, dropped)."""
+    Returns (buf (p,c_out,ar), buf_valid (p,c_out), sent, dropped).
+
+    One sort total: rows are argsorted by destination, each sorted slot's
+    in-bucket position is its distance to the last bucket boundary (a
+    cummax of boundary indices), and the positions are scattered back to
+    original row order — so the full-width row data is scattered into
+    ``buf`` directly, with no second search over the sorted copy and no
+    (n, ar) gather of a sorted row array."""
     n, ar = data.shape
     order = jnp.argsort(valid_dest, stable=True)
     sdest = valid_dest[order]
-    srows = data[order]
-    starts = jnp.searchsorted(sdest, jnp.arange(p))
-    pos = jnp.arange(n) - starts[jnp.clip(sdest, 0, p - 1)]
-    live = sdest < p
+    idx = jnp.arange(n)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sdest[1:] != sdest[:-1]]
+    )
+    bucket_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    pos_sorted = idx - bucket_start
+    # rank of original row ``order[i]`` within its bucket is pos_sorted[i]
+    pos = jnp.zeros((n,), pos_sorted.dtype).at[order].set(pos_sorted)
+    live = valid_dest < p
     ok = live & (pos < c_out)
-    d_idx = jnp.where(ok, sdest, p)  # p == out-of-bounds -> dropped
+    d_idx = jnp.where(ok, valid_dest, p)  # p == out-of-bounds -> dropped
     pos_c = jnp.clip(pos, 0, c_out - 1)
     buf = jnp.zeros((p, c_out, ar), data.dtype).at[d_idx, pos_c].set(
-        srows, mode="drop"
+        data, mode="drop"
     )
     buf_valid = jnp.zeros((p, c_out), bool).at[d_idx, pos_c].set(ok, mode="drop")
     sent = ok.sum()
     dropped = (live & ~ok).sum()
     return buf, buf_valid, sent, dropped
+
+
+# ------------------------------------------------------ count-only pre-pass
+def bucket_counts(dest: jax.Array, p: int) -> jax.Array:
+    """Per-destination outgoing bucket counts: (n,) or (n, g) destinations
+    (== p for dead/skip slots) -> (p,) int32 counts.  The map-side half of
+    the calibration pre-pass; costs one segment-add, no sort."""
+    flat = dest.reshape(-1)
+    live = (flat >= 0) & (flat < p)
+    return (
+        jnp.zeros((p,), jnp.int32)
+        .at[jnp.clip(flat, 0, p - 1)]
+        .add(live.astype(jnp.int32), mode="drop")
+    )
+
+
+def exchange_counts(dest: jax.Array, p: int) -> Tuple[jax.Array, jax.Array]:
+    """The count-only pre-pass of an exchange: ship per-destination bucket
+    COUNTS (a (p,)-int ``all_to_all``) instead of the payload.
+
+    Returns ``(out_counts (p,), recv_total ())``:
+
+    - ``max(out_counts)`` over all shards is the tight send-bucket
+      capacity ``c_out`` (the payload exchange's per-destination buffer);
+    - ``max(recv_total)`` over all shards is the tight receive capacity
+      ``cap_recv`` (the post-``all_to_all`` compact size).
+
+    Same collective pattern as the payload exchange (split/concat axis 0
+    over the named reducer axis), so it is batchable under the same inner
+    vmap as the operator bodies."""
+    out = bucket_counts(dest, p)
+    recv = jax.lax.all_to_all(out, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    return out, recv.sum()
 
 
 def exchange(

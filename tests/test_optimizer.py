@@ -72,13 +72,20 @@ def test_enumeration_covers_spectrum_and_ranks():
             for eng in ("hash", "grid"):
                 for fz in ("fused", "seq"):
                     assert f"hand|{sched}|{eng}|{fz}" in keys, (name, sched, eng, fz)
-        # ranked best-first by (comm, rounds, dispatches)
+        # ranked best-first by (wire, comm, rounds, dispatches)
         order = [
-            (p.predicted_comm, p.predicted_rounds, p.predicted_dispatches)
+            (
+                p.predicted_wire,
+                p.predicted_comm,
+                p.predicted_rounds,
+                p.predicted_dispatches,
+            )
             for p in plans
         ]
         assert order == sorted(order)
         assert all(p.predicted_comm > 0 and p.predicted_rounds >= 2 for p in plans)
+        # the wire carries padded slots: never less than the useful volume
+        assert all(p.predicted_wire >= p.predicted_comm for p in plans)
         chosen = choose_plan(q, stats, profile=MachineProfile(p=8), hand_ghd=g)
         assert chosen.key == plans[0].key
 

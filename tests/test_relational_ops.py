@@ -157,7 +157,7 @@ def test_project_dedup():
     spmd = SPMD(3)
     t = mk([(1, 2), (1, 3), (2, 2)], ("A", "B"), 3)
     pr, pr_stats = dist_project(spmd, t, ("A",), dedup=True)
-    assert pr_stats == {"sent": 0, "dropped": 0}
+    assert pr_stats == {"sent": 0, "dropped": 0, "padded": 0}
     # dedup is per-shard; global count may exceed distinct but set is right
     assert pr.to_set() <= {(1,), (2,)}
     assert {(1,), (2,)} <= pr.to_set()

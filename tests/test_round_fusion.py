@@ -145,15 +145,25 @@ def test_fused_sequential_parity(strategy, qname):
 
 
 def test_chain_dispatches_at_most_ops_per_round():
-    """Acceptance: on chain queries every DYM round is at most one dispatch
-    per op (hash path: exactly one barrier per semijoin/join)."""
+    """Acceptance: on chain queries every DYM round is at most one PAYLOAD
+    dispatch per op (hash path: exactly one barrier per semijoin/join).
+    With the fixed-capacity shuffle that is the whole dispatch count; the
+    count-calibrated default adds at most two tiny pre-pass dispatches per
+    payload dispatch (counts, plus the keys-only output pre-count for
+    joins), never more."""
     q, g, data = CASES["chain"]()
-    _, _, ledger = gym(q, data, ghd=g, p=4, config=GymConfig(strategy="hash", seed=3))
-    assert ledger.retries == 0  # sparse data: no overflow retries to muddy it
-    dym = [r for r in ledger.records if r.phase in DYM_PHASES]
-    assert dym
-    for r in dym:
-        assert 0 < r.dispatches <= len(r.ops), (r.phase, r.ops, r.dispatches)
+    for calibrate, per_op in ((False, 1), (True, 3)):
+        _, _, ledger = gym(
+            q, data, ghd=g, p=4,
+            config=GymConfig(strategy="hash", seed=3, calibrate_shuffle=calibrate),
+        )
+        assert ledger.retries == 0  # sparse data: no overflow retries
+        dym = [r for r in ledger.records if r.phase in DYM_PHASES]
+        assert dym
+        for r in dym:
+            assert 0 < r.dispatches <= per_op * len(r.ops), (
+                calibrate, r.phase, r.ops, r.dispatches,
+            )
 
 
 @pytest.mark.slow
