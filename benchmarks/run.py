@@ -22,6 +22,7 @@ from . import (
     bench_lm,
     bench_optimizer,
     bench_shuffle,
+    bench_skew,
     bench_table1,
     bench_table2,
     bench_table3,
@@ -39,6 +40,7 @@ ALL = {
     "kernels": bench_kernels,
     "optimizer": bench_optimizer,
     "shuffle": bench_shuffle,
+    "skew": bench_skew,
     "lm": bench_lm,
 }
 

@@ -23,6 +23,7 @@ import dataclasses
 import math
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence
 
+from ..relational.skew import DEFAULT_SKEW_THRESHOLD
 from .ghd import GHD
 from .hypergraph import Query
 
@@ -177,7 +178,42 @@ def grid_replication(p: int, w: int = 2) -> float:
     return float(max(1, p)) ** ((w - 1) / w)
 
 
-def engine_op_comm(engine: str, kind: str, left: float, right: float, p: int) -> float:
+def skew_amplification(
+    p: int, share: float, threshold: Optional[float] = None
+) -> float:
+    """Max-over-mean per-destination load of a hash exchange when one key
+    carries ``share`` of the rows: the hot reducer holds ~``share`` of
+    the relation against the 1/p balanced mean, so the BSP round is paced
+    (and the calibrated send bucket sized) by ``p * share``, not by the
+    mean.
+
+    Gated on the SAME threshold the engine's heavy-hitter detection uses
+    (``threshold``, defaulting to the engine default
+    ``relational.skew.DEFAULT_SKEW_THRESHOLD``): a max/mean ratio the
+    pow2-calibrated shuffle absorbs without flagging anything heavy is
+    not an amplification — 1.0 there, the full ``p * share`` beyond."""
+    t = DEFAULT_SKEW_THRESHOLD if threshold is None else float(threshold)
+    amp = float(max(1, p)) * float(share)
+    return amp if amp > t else 1.0
+
+
+def _heavy_share(p: int, share: float, threshold: Optional[float] = None) -> float:
+    """The share that actually routes heavy under the detection
+    threshold: 0 below it (hybrid == hash there), ``share`` beyond."""
+    t = DEFAULT_SKEW_THRESHOLD if threshold is None else float(threshold)
+    return float(share) if float(max(1, p)) * float(share) > t else 0.0
+
+
+def engine_op_comm(
+    engine: str,
+    kind: str,
+    left: float,
+    right: float,
+    p: int,
+    skew_l: float = 0.0,
+    skew_r: float = 0.0,
+    skew_threshold: Optional[float] = None,
+) -> float:
     """Predicted shuffle communication of ONE physical op under an engine
     on a p-shard SPMD.
 
@@ -185,11 +221,24 @@ def engine_op_comm(engine: str, kind: str, left: float, right: float, p: int) ->
       mark dedup), pairwise joins by Lemma 8 with w=2 — skew-proof, at
       the cost of ~sqrt(p) per-tuple replication (``grid_replication``).
     - ``'hash'`` (beyond-paper co-partitioning): every op shuffles its
-      inputs once, so comm ~ left + right — strictly less on uniform
-      data, skew-sensitive (the advisor only sees sizes, not skew; force
-      ``engines=('grid',)`` in ``enumerate_plans`` for skewed inputs).
+      inputs once — but priced by the MAX per-destination load, not the
+      mean: a heavy key amplifies the effective cost by ``p * share``
+      (``skew_amplification``; ``skew_l``/``skew_r`` are each side's max
+      single-key share, 0 when unknown, reducing to left + right).
+    - ``'hybrid'`` (heavy/light decomposition, ``relational.skew``):
+      light keys price as hash at balanced load; heavy left rows spread
+      positionally (still 1x); heavy right rows broadcast p-ways — so
+      skew costs ``p * skew_r * right`` extra replication instead of
+      amplifying the whole exchange.
     - ``intersect`` / ``dedup`` are hash-implemented under every engine
-      (see ``core.physical.Engine``), so they price as hash ops.
+      (see ``core.physical.Engine``) and key on full distinct rows, so
+      no single heavy column value can skew them — they price as plain
+      hash ops, unamplified, under every engine.  A semijoin's RIGHT
+      side likewise ships its deduplicated key projection (one row per
+      key), so only its left side can amplify.
+
+    ``skew_threshold`` is the execution's ``GymConfig.skew_threshold``,
+    so the model's amplification gate matches the engine that will run.
     """
     if engine == "grid":
         rep = grid_replication(p, 2)
@@ -199,7 +248,17 @@ def engine_op_comm(engine: str, kind: str, left: float, right: float, p: int) ->
             return rep * (left + right) + left
         if kind == "join":
             return rep * (left + right)
-    return left + right
+        return left + right
+    if kind not in ("semijoin", "join"):
+        return left + right
+    if kind == "semijoin":
+        skew_r = 0.0  # R ships one row per key after dedup
+    if engine == "hybrid":
+        heavy = _heavy_share(p, skew_r, skew_threshold)
+        return left + right + float(max(1, p)) * heavy * right
+    return left * skew_amplification(p, skew_l, skew_threshold) + (
+        right * skew_amplification(p, skew_r, skew_threshold)
+    )
 
 
 def materialization_comm(
@@ -244,6 +303,8 @@ def predict_plan_cost(
     p: int,
     calibration: Optional["CostCalibration"] = None,
     calibrate_shuffle: bool = True,
+    alias_skew: Optional[Mapping[str, float]] = None,
+    skew_threshold: Optional[float] = None,
 ) -> Dict[str, float]:
     """Walk one planner schedule op-by-op and price it under ``engine``
     on a p-shard SPMD.
@@ -266,10 +327,21 @@ def predict_plan_cost(
 
     Node sizes evolve under the matching-database assumption
     (``join_size_estimate``); semijoins never grow a table, so sizes are
-    upper bounds there.
+    upper bounds there.  ``alias_skew`` (max single-key share per base
+    relation, e.g. ``optimizer.skew_share``) propagates through the node
+    walk as the max over contributing relations, pricing the hash engine
+    by its hot reducer and the hybrid engine by its broadcast overhead.
     """
+    skew_in = alias_skew or {}
+
+    def op_comm(kind: str, l: float, r: float, sl: float, sr: float) -> float:
+        return engine_op_comm(
+            engine, kind, l, r, p, sl, sr, skew_threshold=skew_threshold
+        )
+
     # --- stage 1: per-node IDB materialization (Theorem 15) -------------
     est: Dict[int, float] = {}
+    skw: Dict[int, float] = {}
     comm = 0.0
     for v in ghd.nodes():
         aliases = sorted(ghd.lam[v])
@@ -282,6 +354,7 @@ def predict_plan_cost(
         if any(query.edges[a] - ghd.chi[v] for a in aliases):
             comm += out_v
         est[v] = out_v
+        skw[v] = max((float(skew_in.get(a, 0.0)) for a in aliases), default=0.0)
 
     # --- stage 2: the DYM schedule op walk (Sec. 4.2 / 4.3) -------------
     claimed = 1  # materialization
@@ -299,40 +372,49 @@ def predict_plan_cost(
                 ),
             )
             if k in ("semijoin", "down_semijoin"):
-                comm += engine_op_comm(engine, "semijoin", est[t], est[op.args[0]], p)
+                r = op.args[0]
+                comm += op_comm("semijoin", est[t], est[r], skw[t], skw[r])
             elif k == "join":
-                comm += engine_op_comm(engine, "join", est[t], est[op.args[0]], p)
-                est[t] = join_size_estimate(est[t], est[op.args[0]])
+                r = op.args[0]
+                comm += op_comm("join", est[t], est[r], skw[t], skw[r])
+                est[t] = join_size_estimate(est[t], est[r])
+                skw[t] = max(skw[t], skw[r])
             elif k == "pair_filter":
                 s, r2 = op.args
-                comm += engine_op_comm(engine, "semijoin", est[s], est[t], p)
-                comm += engine_op_comm(engine, "semijoin", est[s], est[r2], p)
-                comm += engine_op_comm(engine, "intersect", est[s], est[s], p)
+                comm += op_comm("semijoin", est[s], est[t], skw[s], skw[t])
+                comm += op_comm("semijoin", est[s], est[r2], skw[s], skw[r2])
+                comm += op_comm("intersect", est[s], est[s], skw[s], skw[s])
             elif k == "triple_filter":
                 s, rb, rc = op.args
                 for other in (t, rb, rc):
-                    comm += engine_op_comm(engine, "semijoin", est[s], est[other], p)
-                comm += 2 * engine_op_comm(engine, "intersect", est[s], est[s], p)
+                    comm += op_comm(
+                        "semijoin", est[s], est[other], skw[s], skw[other]
+                    )
+                comm += 2 * op_comm("intersect", est[s], est[s], skw[s], skw[s])
             elif k == "pair_join":
                 s, r2 = op.args
-                comm += engine_op_comm(engine, "join", est[t], est[s], p)
-                comm += engine_op_comm(engine, "join", est[r2], est[s], p)
+                comm += op_comm("join", est[t], est[s], skw[t], skw[s])
+                comm += op_comm("join", est[r2], est[s], skw[r2], skw[s])
                 j1 = join_size_estimate(est[t], est[s])
                 j2 = join_size_estimate(est[r2], est[s])
-                comm += engine_op_comm(engine, "join", j1, j2, p)
+                sk12 = max(skw[t], skw[s], skw[r2])
+                comm += op_comm("join", j1, j2, sk12, sk12)
                 est[t] = join_size_estimate(j1, j2)
+                skw[t] = sk12
             elif k == "triple_join":
                 s, rb, rc = op.args
                 j1 = join_size_estimate(est[t], est[s])
                 j2 = join_size_estimate(est[rb], est[s])
                 j3 = join_size_estimate(est[rc], est[s])
-                comm += engine_op_comm(engine, "join", est[t], est[s], p)
-                comm += engine_op_comm(engine, "join", est[rb], est[s], p)
-                comm += engine_op_comm(engine, "join", est[rc], est[s], p)
-                comm += engine_op_comm(engine, "join", j1, j2, p)
+                comm += op_comm("join", est[t], est[s], skw[t], skw[s])
+                comm += op_comm("join", est[rb], est[s], skw[rb], skw[s])
+                comm += op_comm("join", est[rc], est[s], skw[rc], skw[s])
+                skj = max(skw[t], skw[s], skw[rb], skw[rc])
+                comm += op_comm("join", j1, j2, skj, skj)
                 j12 = join_size_estimate(j1, j2)
-                comm += engine_op_comm(engine, "join", j12, j3, p)
+                comm += op_comm("join", j12, j3, skj, skj)
                 est[t] = join_size_estimate(j12, j3)
+                skw[t] = skj
             else:  # pragma: no cover - planner emits only the kinds above
                 raise ValueError(f"unknown logical op kind {k!r}")
         claimed += round_claim

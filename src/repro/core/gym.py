@@ -11,7 +11,7 @@ Given any complete GHD D(T, chi, lam) of a query Q:
      semijoins, join phase — O(d + log n) rounds total.
 
 The driver is a thin schedule walker: lowering logical rounds to physical
-op groups, engine-strategy selection ('hash' | 'grid'), round fusion (one
+op groups, engine-strategy selection ('hash' | 'grid' | 'hybrid'), round fusion (one
 SPMD dispatch per homogeneous op group), capacity sizing, and the
 abort-retry loop all live in ``core.physical``.  What remains here is the
 resumable state machine: between BSP round-groups the full state (node
@@ -43,7 +43,10 @@ from .planner import Round, get_schedule
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class GymConfig:
-    strategy: str = "hash"  # 'hash' (optimized) | 'grid' (paper-faithful)
+    # 'hash' (optimized, skew-sensitive) | 'grid' (paper-faithful,
+    # skew-proof) | 'hybrid' (heavy-hitter routing on the count pre-pass:
+    # light keys hash, heavy keys spread/broadcast grid-style)
+    strategy: str = "hash"
     schedule: str = "dym_d"  # 'dym_d' (Sec 4.3) | 'dym_n' (Sec 4.2)
     seed: int = 0
     cap_growth: int = 4  # capacity multiplier on overflow-retry
@@ -52,9 +55,20 @@ class GymConfig:
     fused: bool = True  # one SPMD dispatch per homogeneous op group
     # occupancy-adaptive shuffle: a count-only pre-pass per op group picks
     # tight pow2 exchange capacities (and pre-floors blown ones) instead of
-    # shipping worst-case-padded all_to_all buffers
+    # shipping worst-case-padded all_to_all buffers.  The 'hybrid' engine
+    # needs the pre-pass to route and forces it on regardless of this knob.
     calibrate_shuffle: bool = True
     local_backend: str = "jnp"  # shard-local hot loops: 'jnp' | 'pallas'
+    # heavy-hitter sensitivity: a destination is heavy when its measured
+    # arrival exceeds this multiple of the balanced share ceil(total/p)
+    # (relational.skew; used by the hybrid engine's routing and by every
+    # engine's capacity-ceiling diagnostics).  None = library default.
+    skew_threshold: Optional[float] = None
+    # hard per-shard capacity ceiling (tuples).  None derives 64 * M from
+    # Assumption 3's M = 4*IN/p — generous for any matching-database
+    # workload, but finite, so adversarial skew aborts with an actionable
+    # CapacityCeiling instead of doubling into an OOM.
+    max_cap_tuples: Optional[int] = None
     # 'manual' = run exactly the knobs above; 'auto' = let the advisor
     # (core/optimizer.py) pick GHD/schedule/engine/fusion from stats.
     # After resolution the field holds the chosen Plan.key, so snapshots
@@ -89,10 +103,16 @@ class GymDriver:
                 rows = np.unique(rows, axis=0)
             dedup_rows[atom.alias] = rows
         if plan is None and self.config.plan == "auto":
-            from .optimizer import MachineProfile, choose_plan
+            from .optimizer import MachineProfile, choose_plan, skew_share
 
             stats = {
                 a.rel: int(dedup_rows[a.alias].shape[0]) for a in query.atoms
+            }
+            # max single-value column share per relation: the advisor's
+            # skew statistic (prices hash by max per-destination load, so
+            # skewed instances steer to the hybrid engine)
+            skew = {
+                a.rel: skew_share(dedup_rows[a.alias]) for a in query.atoms
             }
             plan = choose_plan(
                 query,
@@ -101,6 +121,8 @@ class GymDriver:
                 hand_ghd=ghd,
                 local_backend=self.config.local_backend,
                 calibrate_shuffle=self.config.calibrate_shuffle,
+                skew=skew,
+                skew_threshold=self.config.skew_threshold,
             )
         self.plan = plan
         if plan is not None:
@@ -130,7 +152,10 @@ class GymDriver:
 
         cfg = self.config
         self.capman = CapacityManager(
-            spmd, growth=cfg.cap_growth, local_backend=cfg.local_backend
+            spmd,
+            growth=cfg.cap_growth,
+            local_backend=cfg.local_backend,
+            max_cap=self._max_cap(),
         )
         for v in self.ghd.nodes():
             self.capman.ensure(v, self._init_cap(v))
@@ -146,6 +171,17 @@ class GymDriver:
         self.done = False
         self.result: Optional[DTable] = None
 
+    def _max_cap(self) -> int:
+        """Per-shard capacity ceiling: the configured bound, or 64x the
+        Assumption-3 memory M = 4*IN/p (pow2, floored at 2^16) — far above
+        any matching-database requirement at these scales, but finite, so
+        skew-driven capacity doubling aborts actionably instead of OOMing."""
+        if self.config.max_cap_tuples is not None:
+            return int(self.config.max_cap_tuples)
+        total = sum(int(t.valid.sum()) for t in self.base.values())
+        m = 4 * max(1, -(-total // self.spmd.p))
+        return _pow2(max(1 << 16, 64 * m))
+
     def _make_executor(self) -> PhysicalExecutor:
         cfg = self.config
         if self.plan is not None:
@@ -160,6 +196,7 @@ class GymDriver:
                 max_retries=cfg.max_retries,
                 count_retries_comm=cfg.count_retries_comm,
                 calibrate=cfg.calibrate_shuffle,
+                skew_threshold=cfg.skew_threshold,
             )
         return PhysicalExecutor(
             self.spmd,
@@ -171,6 +208,7 @@ class GymDriver:
             fuse=cfg.fused,
             calibrate=cfg.calibrate_shuffle,
             local_backend=cfg.local_backend,
+            skew_threshold=cfg.skew_threshold,
         )
 
     # caps live in the capacity manager; kept as a property for snapshots
@@ -196,8 +234,10 @@ class GymDriver:
         if self.done:
             return False
         if self.cursor < 0:
-            tables, comm, padded, claimed, dispatches = self.executor.materialize(
-                self.ghd, self.base, self.node_schema, self.ledger
+            tables, comm, padded, heavy, claimed, dispatches = (
+                self.executor.materialize(
+                    self.ghd, self.base, self.node_schema, self.ledger
+                )
             )
             self.tables = tables
             self.ledger.add_round(
@@ -207,6 +247,7 @@ class GymDriver:
                 n_rounds=claimed,
                 dispatches=dispatches,
                 padded=padded,
+                heavy=heavy,
             )
             self.cursor = 0
             return True
@@ -214,7 +255,7 @@ class GymDriver:
             self._finish()
             return False
         rnd = self.schedule[self.cursor]
-        new_tab, new_acc, comm, padded, claimed, dispatches = (
+        new_tab, new_acc, comm, padded, heavy, claimed, dispatches = (
             self.executor.execute_round(rnd, self.tables, self.acc, self.ledger)
         )
         self.tables = {**self.tables, **new_tab}
@@ -226,6 +267,7 @@ class GymDriver:
             n_rounds=claimed,
             dispatches=dispatches,
             padded=padded,
+            heavy=heavy,
         )
         self.cursor += 1
         if self.cursor >= len(self.schedule):
@@ -308,6 +350,7 @@ class GymDriver:
             self.plan = None
             self.capman.local_backend = self.config.local_backend
             self.capman.growth = self.config.cap_growth
+            self.capman.max_cap = self._max_cap()
             self.executor = self._make_executor()
             self.schedule = get_schedule(self.config.schedule).fn(self.ghd)
         self.caps = {int(k): v for k, v in meta["caps"].items()}

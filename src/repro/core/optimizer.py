@@ -15,8 +15,13 @@ This module turns that spectrum into a decision:
   2. **Schedules** — every entry of ``planner.SCHEDULES`` (``dym_n``:
      Sec. 4.2 / Theorem 12; ``dym_d``: Sec. 4.3 / Theorem 14).
   3. **Engines** — the ``core.physical`` strategy registry: ``'hash'``
-     (comm ~ inputs+outputs, skew-sensitive) and ``'grid'`` (Lemmas
-     8/10, skew-proof, B(X, M) = X^2/M).
+     (comm ~ inputs+outputs, skew-sensitive), ``'grid'`` (Lemmas 8/10,
+     skew-proof, B(X, M) = X^2/M), and ``'hybrid'`` (heavy-hitter
+     routing on the count pre-pass: hash for light keys, grid-style
+     spread/broadcast for heavy ones).  With a ``skew`` statistic
+     (``skew_share`` / ``skew_from_data``) the model prices hash by its
+     MAX per-destination load, so skewed instances steer to hybrid; ties
+     on uniform data resolve to hash by key order.
   4. **Fusion** — one SPMD dispatch per homogeneous op group, or one
      per op.  Identical comm/rounds; distinguished by the predicted
      dispatch count.
@@ -74,6 +79,41 @@ class MachineProfile:
         if self.M is not None:
             return float(self.M)
         return max(16.0, 4.0 * float(total_input) / max(1, self.p))
+
+
+def skew_share(rows: np.ndarray) -> float:
+    """Max single-value column share of a relation: the fraction of rows
+    carrying the most frequent value of any one column — the ``share``
+    that ``costs.skew_amplification`` turns into a hot-reducer load
+    factor.  0.0 for empty relations; ~1/|domain| on uniform data."""
+    rows = np.asarray(rows)
+    if rows.size == 0:
+        return 0.0
+    rows = rows.reshape(rows.shape[0], -1)
+    n = rows.shape[0]
+    share = 0.0
+    for c in range(rows.shape[1]):
+        _, counts = np.unique(rows[:, c], return_counts=True)
+        share = max(share, float(counts.max()) / n)
+    return share
+
+
+def skew_from_data(
+    query: Query, data: Mapping[str, np.ndarray]
+) -> Dict[str, float]:
+    """Per-relation ``skew_share`` under the SAME cast+dedup the driver
+    applies on load (mirrors ``stats_from_data``)."""
+    out: Dict[str, float] = {}
+    for atom in query.atoms:
+        if atom.rel in out:
+            continue
+        rows = np.asarray(data[atom.rel], dtype=np.int32).reshape(
+            -1, len(atom.attrs)
+        )
+        if rows.shape[0]:
+            rows = np.unique(rows, axis=0)
+        out[atom.rel] = skew_share(rows)
+    return out
 
 
 def stats_from_data(query: Query, data: Mapping[str, np.ndarray]) -> Dict[str, int]:
@@ -234,16 +274,27 @@ def enumerate_plans(
     hand_ghd: Optional[GHD] = None,
     calibration: Optional[CostCalibration] = None,
     local_backend: str = "jnp",
-    engines: Sequence[str] = ("hash", "grid"),
+    engines: Sequence[str] = ("hash", "grid", "hybrid"),
     schedules: Optional[Sequence[str]] = None,
     fused_options: Sequence[bool] = (True, False),
     calibrate_shuffle: bool = True,
+    skew: Optional[Mapping[str, float]] = None,
+    skew_threshold: Optional[float] = None,
 ) -> List[Plan]:
     """Score every candidate plan; returns them best-first (by predicted
-    wire slots under the given shuffle mode, see ``_plan_order``)."""
+    wire slots under the given shuffle mode, see ``_plan_order``).
+
+    ``skew`` maps relation names to their max single-key share
+    (``skew_from_data``); without it every engine prices at balanced
+    load and hybrid ties with hash (hash wins the tie by key order)."""
     profile = profile or MachineProfile()
     schedules = tuple(schedules) if schedules is not None else tuple(sorted(SCHEDULES))
     alias_sizes = {a.alias: float(stats[a.rel]) for a in query.atoms}
+    alias_skew = (
+        {a.alias: float(skew.get(a.rel, 0.0)) for a in query.atoms}
+        if skew is not None
+        else None
+    )
     plans: List[Plan] = []
     for source, g in candidate_ghds(query, hand_ghd):
         width, depth, nodes = g.width, g.depth, g.size()
@@ -254,6 +305,8 @@ def enumerate_plans(
                 cost = predict_plan_cost(
                     query, g, rounds, engine, alias_sizes, profile.p, calibration,
                     calibrate_shuffle=calibrate_shuffle,
+                    alias_skew=alias_skew,
+                    skew_threshold=skew_threshold,
                 )
                 for fused in fused_options:
                     plans.append(
@@ -293,12 +346,16 @@ def choose_plan(
     calibration: Optional[CostCalibration] = None,
     local_backend: str = "jnp",
     calibrate_shuffle: bool = True,
+    skew: Optional[Mapping[str, float]] = None,
+    skew_threshold: Optional[float] = None,
 ) -> Plan:
     """The advisor's decision: argmin over the candidate plans by
     (predicted wire slots under the configured shuffle mode, calibrated
     predicted comm, claimed rounds, predicted dispatches).  Pass the
     execution's ``GymConfig.calibrate_shuffle`` so the pad factor the
-    ranking uses matches the shuffle the plan will actually run on."""
+    ranking uses matches the shuffle the plan will actually run on, and
+    ``skew`` (``skew_from_data``) so skewed instances price hash by its
+    hot reducer and steer to the hybrid engine."""
     plans = enumerate_plans(
         query,
         stats,
@@ -307,6 +364,8 @@ def choose_plan(
         calibration=calibration,
         local_backend=local_backend,
         calibrate_shuffle=calibrate_shuffle,
+        skew=skew,
+        skew_threshold=skew_threshold,
     )
     assert plans, "no executable plan candidates"
     return plans[0]
@@ -371,6 +430,7 @@ def explain(
     measured: Optional[Mapping[str, object]] = None,
     local_backend: str = "jnp",
     calibrate_shuffle: bool = True,
+    skew: Optional[Mapping[str, float]] = None,
     fmt: str = "text",
 ) -> str:
     """Render the advisor's full candidate table.
@@ -393,6 +453,7 @@ def explain(
         calibration=calibration,
         local_backend=local_backend,
         calibrate_shuffle=calibrate_shuffle,
+        skew=skew,
     )
     chosen = plans[0]
     with_measured = measured is not None

@@ -16,9 +16,12 @@ charges as ONE round.  This module makes the engine keep that promise:
 
 Engine strategies are a registry (``register_engine``): ``'hash'`` — hash
 co-partitioning, comm ~ inputs+outputs, skew-sensitive with abort-retry;
-``'grid'`` — the paper's skew-proof Lemma 8/10 grid operators.  New
-strategies subclass ``Engine`` and register under a new name; the driver
-selects them by string.
+``'grid'`` — the paper's skew-proof Lemma 8/10 grid operators;
+``'hybrid'`` — heavy/light decomposition on top of the count pre-pass
+(``relational.skew``): light keys hash, heavy keys route grid-style
+(spread + broadcast), so the engine is comm-optimal on uniform data AND
+capacity-bounded under skew.  New strategies subclass ``Engine`` and
+register under a new name; the driver selects them by string.
 
 Capacity sizing and the paper's abort-and-retry semantics live in
 ``CapacityManager``: heuristic initial caps, multiplicative growth on
@@ -53,6 +56,7 @@ from ..relational import ops as R
 from ..relational.batched import GroupMeasure
 from ..relational.ledger import Ledger
 from ..relational.shuffle import pow2
+from ..relational.skew import DEFAULT_SKEW_THRESHOLD
 from ..relational.spmd import SPMD
 from ..relational.table import DTable
 from .ghd import GHD
@@ -79,14 +83,19 @@ def register_engine(name: str):
     return deco
 
 
-def get_engine(name: str, spmd: SPMD, local_backend: str = "jnp") -> "Engine":
+def get_engine(
+    name: str,
+    spmd: SPMD,
+    local_backend: str = "jnp",
+    skew_threshold: Optional[float] = None,
+) -> "Engine":
     try:
         cls = ENGINES[name]
     except KeyError:
         raise ValueError(
             f"unknown engine strategy {name!r}; registered: {sorted(ENGINES)}"
         ) from None
-    return cls(spmd, local_backend)
+    return cls(spmd, local_backend, skew_threshold=skew_threshold)
 
 
 class Engine:
@@ -104,10 +113,22 @@ class Engine:
     # whether dist_join_count predicts this engine's per-shard join output
     # (true only for hash co-partitioning; grid placement is positional)
     exact_join_presize = False
+    # whether the strategy's routing is data-dependent and therefore NEEDS
+    # the count pre-pass (the executor forces calibrate on for such
+    # engines regardless of GymConfig.calibrate_shuffle)
+    requires_measure = False
 
-    def __init__(self, spmd: SPMD, local_backend: str = "jnp"):
+    def __init__(
+        self,
+        spmd: SPMD,
+        local_backend: str = "jnp",
+        skew_threshold: Optional[float] = None,
+    ):
         self.spmd = spmd
         self.local_backend = local_backend
+        self.skew_threshold = (
+            DEFAULT_SKEW_THRESHOLD if skew_threshold is None else skew_threshold
+        )
 
     # -- calibration pre-pass ----------------------------------------------
     def measure_group(
@@ -180,13 +201,18 @@ class HashEngine(Engine):
     exact_join_presize = True
 
     def measure_group(self, kind, lhs, rhs, seeds):
+        # skew_threshold threads through so the pre-pass reports heavy
+        # destinations even on the hash path — the capacity manager's
+        # ceiling diagnostic names that count when abort-retry is doomed
         if kind == "semijoin":
             return B.measure_semijoin_many(
-                self.spmd, lhs, rhs, seeds=seeds, backend=self.local_backend
+                self.spmd, lhs, rhs, seeds=seeds, backend=self.local_backend,
+                skew_threshold=self.skew_threshold,
             )
         if kind == "join":
             return B.measure_join_many(
-                self.spmd, lhs, rhs, seeds=seeds, backend=self.local_backend
+                self.spmd, lhs, rhs, seeds=seeds, backend=self.local_backend,
+                skew_threshold=self.skew_threshold,
             )
         return Engine.measure_group(self, kind, lhs, rhs, seeds)
 
@@ -220,6 +246,72 @@ class HashEngine(Engine):
             out, st = R.dist_join(
                 self.spmd, parts[0], parts[1], seed=seed, out_cap=cap,
                 calibrate=calibrate, backend=self.local_backend,
+            )
+            return out, st, 1
+        return Engine.multijoin(self, parts, cap, seed, calibrate)
+
+
+@register_engine("hybrid")
+class HybridEngine(HashEngine):
+    """Skew-resilient heavy/light decomposition (``relational.skew``):
+    the count pre-pass flags heavy destinations, the payload routes light
+    keys through the hash exchange and heavy keys grid-style (output side
+    position-partitioned over all p reducers, other side broadcast) in
+    the SAME fused dispatch.  On unskewed groups the measure finds no
+    heavy keys and the payload is the hash engine's, bit for bit.
+
+    The routing is data-dependent, so the engine REQUIRES the count
+    pre-pass: the executor forces ``calibrate`` on (``requires_measure``)
+    even when the config disables the calibrated shuffle."""
+
+    requires_measure = True
+    # abort-retry pre-sizing stays valid: blown joins only happen on
+    # hash-routed (no-heavy) groups — hybrid-routed groups pre-floor the
+    # exact spread output from the measure — and there dist_join_count's
+    # hash placement is the placement that blew
+    exact_join_presize = True
+
+    def measure_group(self, kind, lhs, rhs, seeds):
+        if kind == "semijoin":
+            return B.measure_semijoin_many(
+                self.spmd, lhs, rhs, seeds=seeds, backend=self.local_backend,
+                hybrid=True, skew_threshold=self.skew_threshold,
+            )
+        if kind == "join":
+            return B.measure_join_many(
+                self.spmd, lhs, rhs, seeds=seeds, backend=self.local_backend,
+                hybrid=True, skew_threshold=self.skew_threshold,
+            )
+        return Engine.measure_group(self, kind, lhs, rhs, seeds)
+
+    def semijoin_many(self, ss, rs, cap, seeds, xcaps=None):
+        if xcaps is None or not xcaps.hybrid_routed:
+            return HashEngine.semijoin_many(self, ss, rs, cap, seeds, xcaps)
+        outs, stats = B.hybrid_semijoin_many(
+            self.spmd, ss, rs, seeds=seeds, heavy=xcaps.heavy,
+            c_out=(xcaps.lhs.c_out, xcaps.rhs.c_out),
+            cap_recv=(max(cap, xcaps.lhs.cap_recv), xcaps.rhs.cap_recv),
+            backend=self.local_backend,
+        )
+        return outs, stats, 1
+
+    def join_many(self, as_, bs, cap, seeds, xcaps=None):
+        if xcaps is None or not xcaps.hybrid_routed:
+            return HashEngine.join_many(self, as_, bs, cap, seeds, xcaps)
+        outs, stats = B.hybrid_join_many(
+            self.spmd, as_, bs, seeds=seeds, out_cap=cap, heavy=xcaps.heavy,
+            c_out=(xcaps.lhs.c_out, xcaps.rhs.c_out),
+            cap_recv=(xcaps.lhs.cap_recv, xcaps.rhs.cap_recv),
+            swap=xcaps.swap_spread,
+            backend=self.local_backend,
+        )
+        return outs, stats, 1
+
+    def multijoin(self, parts, cap, seed, calibrate=False):
+        if len(parts) == 2:
+            out, st = R.dist_join_hybrid(
+                self.spmd, parts[0], parts[1], seed=seed, out_cap=cap,
+                skew_threshold=self.skew_threshold, backend=self.local_backend,
             )
             return out, st, 1
         return Engine.multijoin(self, parts, cap, seed, calibrate)
@@ -265,6 +357,15 @@ class GridEngine(Engine):
 # --------------------------------------------------------------------------
 # capacity management (the paper's abort-and-retry, centralized)
 # --------------------------------------------------------------------------
+class CapacityCeiling(R.Overflow):
+    """A capacity would grow past the configured per-shard memory bound.
+
+    Raised instead of letting the abort-retry doubling loop walk past any
+    budget: under adversarial skew the hash engine's retries double
+    forever (the heavy key still lands on one reducer at ANY capacity),
+    so a hard M-tied ceiling with an actionable diagnosis beats an OOM."""
+
+
 class CapacityManager:
     """Per-GHD-node output capacities + overflow policy.
 
@@ -279,26 +380,76 @@ class CapacityManager:
       slightly; the multiplicative growth above still guarantees
       termination, the exact floor just makes one retry almost always
       enough.)
+    - ``max_cap``: hard per-shard capacity ceiling tied to the configured
+      memory M (``GymConfig.max_cap_tuples``; the driver derives a
+      default from Assumption 3's M = 4*IN/p when unset).  Any growth or
+      measured floor past it raises ``CapacityCeiling`` naming the heavy
+      destination count the last count pre-pass saw (``heavy_hint``) and
+      pointing at the skew-resilient engines — growth without a ceiling
+      is an OOM under adversarial skew, never convergence.
     """
 
-    def __init__(self, spmd: SPMD, growth: int = 4, local_backend: str = "jnp"):
+    def __init__(
+        self,
+        spmd: SPMD,
+        growth: int = 4,
+        local_backend: str = "jnp",
+        max_cap: Optional[int] = None,
+    ):
         self.spmd = spmd
         self.growth = growth
         self.local_backend = local_backend
         self.caps: Dict[int, int] = {}
+        self.max_cap = max_cap
+        # heavy destinations flagged by the CURRENT round's count
+        # pre-passes (max over its groups; the executor resets this at
+        # each round attempt and updates it per measured group) — so a
+        # ceiling hit is diagnosed from the round that is actually
+        # aborting, not from skew seen rounds ago
+        self.heavy_hint: int = 0
+
+    def _check(self, nodes: Sequence[int], cap: int) -> None:
+        if self.max_cap is not None and cap > self.max_cap:
+            if self.heavy_hint:
+                hint = (
+                    f"{self.heavy_hint} heavy destination(s) were flagged by "
+                    "this round's count pre-passes — the round is skew-bound, "
+                    "and abort-retry doubling cannot fix skew (the heavy key "
+                    "lands on one reducer at ANY capacity); switch to "
+                    "engine='hybrid' (heavy-hitter routing) or engine='grid' "
+                    "(skew-proof)"
+                )
+            else:
+                hint = (
+                    "this round's count pre-passes flagged no heavy "
+                    "destinations (none measured if calibrate_shuffle is "
+                    "off), so the load may genuinely be this large; raise "
+                    "GymConfig.max_cap_tuples — or, under skew, switch to "
+                    "engine='hybrid' or engine='grid'"
+                )
+            raise CapacityCeiling(
+                f"capacity for node(s) {tuple(nodes)} would grow to {cap} > "
+                f"max_cap {self.max_cap} (bound tied to the configured "
+                f"per-machine memory M); {hint}"
+            )
 
     def cap_for(self, nodes: Sequence[int]) -> int:
         return pow2(max(self.caps.get(v, 4) for v in nodes))
 
     def ensure(self, v: int, cap: int) -> None:
+        self._check((v,), cap)
         self.caps[v] = max(self.caps.get(v, 0), cap)
 
     def grow(self, nodes: Sequence[int], dropped: int) -> None:
         for v in nodes:
-            self.caps[v] = pow2(self.caps.get(v, 4) * self.growth + int(dropped))
+            cap = pow2(self.caps.get(v, 4) * self.growth + int(dropped))
+            self._check((v,), cap)
+            self.caps[v] = cap
 
     def grow_node(self, v: int) -> None:
-        self.caps[v] = pow2(self.caps.get(v, 4) * self.growth)
+        cap = pow2(self.caps.get(v, 4) * self.growth)
+        self._check((v,), cap)
+        self.caps[v] = cap
 
     def presize_join(self, a: DTable, b: DTable, seed: int) -> int:
         counts = R.dist_join_count(
@@ -460,16 +611,19 @@ class PhysicalExecutor:
         fuse: bool = True,
         calibrate: bool = True,
         local_backend: str = "jnp",
+        skew_threshold: Optional[float] = None,
     ):
         self.spmd = spmd
-        self.engine = get_engine(strategy, spmd, local_backend)
+        self.engine = get_engine(strategy, spmd, local_backend, skew_threshold)
         self.local_backend = local_backend
         self.capman = capman
         self.seed = seed
         self.max_retries = max_retries
         self.count_retries_comm = count_retries_comm
         self.fuse = fuse
-        self.calibrate = calibrate
+        # data-dependent engines (hybrid) cannot route without the count
+        # pre-pass: force it on for them regardless of the config knob
+        self.calibrate = calibrate or self.engine.requires_measure
         self._seed_ctr = 0
 
     @classmethod
@@ -483,6 +637,7 @@ class PhysicalExecutor:
         max_retries: int = 12,
         count_retries_comm: bool = True,
         calibrate: bool = True,
+        skew_threshold: Optional[float] = None,
     ) -> "PhysicalExecutor":
         """Build an executor straight from an advisor ``Plan``: engine
         strategy, round fusion, and local backend all come from the plan
@@ -498,6 +653,7 @@ class PhysicalExecutor:
             fuse=plan.fused,
             calibrate=calibrate,
             local_backend=plan.local_backend,
+            skew_threshold=skew_threshold,
         )
 
     def _next_seed(self) -> int:
@@ -534,6 +690,12 @@ class PhysicalExecutor:
         xcaps = None
         if self.calibrate:
             xcaps = self.engine.measure_group(kind, lhs, rhs, seeds)
+            if xcaps is not None and xcaps.n_heavy:
+                # remember the measured skew so a capacity-ceiling abort
+                # can name the heavy destinations in its diagnosis
+                self.capman.heavy_hint = max(
+                    self.capman.heavy_hint, xcaps.n_heavy
+                )
             # pre-floor managed capacities the measurement proves too
             # small: the round that would have aborted never runs short
             need = max(
@@ -561,9 +723,10 @@ class PhysicalExecutor:
         tables: Dict[int, DTable],
         acc: Dict[int, DTable],
         ledger: Ledger,
-    ) -> Tuple[Dict[int, DTable], Dict[int, DTable], int, int, int, int]:
+    ) -> Tuple[Dict[int, DTable], Dict[int, DTable], int, int, int, int, int]:
         """Run one logical round (with abort-retry).  Returns
-        (new_tables, new_acc, comm, padded, claimed_rounds, dispatches)."""
+        (new_tables, new_acc, comm, padded, heavy, claimed_rounds,
+        dispatches)."""
         stages, writes = lower_round(rnd)
         # slot liveness: tmp slots die after their last reading stage (the
         # written results live on); dropping them frees the device buffers
@@ -579,9 +742,11 @@ class PhysicalExecutor:
         attempt = 0
         comm_total = 0
         padded_total = 0
+        heavy_total = 0
         while True:
             attempt += 1
             assert attempt <= self.max_retries, f"round {rnd.phase}: too many retries"
+            self.capman.heavy_hint = 0  # per-attempt: groups re-measure below
             slots: Dict[str, DTable] = {}
 
             def resolve(name: str) -> DTable:
@@ -594,6 +759,7 @@ class PhysicalExecutor:
 
             comm = 0
             padded = 0
+            heavy = 0
             claimed = 0
             dropped_by_logical: Dict[int, int] = {}
             blown_joins: List[Tuple[PhysOp, DTable, DTable]] = []
@@ -611,6 +777,7 @@ class PhysicalExecutor:
                         slots[op.out] = out
                         comm += st["sent"]
                         padded += st.get("padded", 0)
+                        heavy += st.get("heavy", 0)
                         if st["dropped"]:
                             dropped_by_logical[op.logical] = (
                                 dropped_by_logical.get(op.logical, 0) + st["dropped"]
@@ -624,6 +791,7 @@ class PhysicalExecutor:
             if self.count_retries_comm or not dropped_by_logical:
                 comm_total += comm
                 padded_total += padded
+                heavy_total += heavy
             if not dropped_by_logical:
                 break
             ledger.retries += 1
@@ -640,7 +808,7 @@ class PhysicalExecutor:
         for store, node, slot in writes:
             (new_tab if store == "tab" else new_acc)[node] = slots[slot]
         return (
-            new_tab, new_acc, comm_total, padded_total,
+            new_tab, new_acc, comm_total, padded_total, heavy_total,
             max(1, claimed), self.spmd.dispatch_count - d0,
         )
 
@@ -651,13 +819,14 @@ class PhysicalExecutor:
         base: Dict[str, DTable],
         node_schema: Dict[int, Tuple[str, ...]],
         ledger: Ledger,
-    ) -> Tuple[Dict[int, DTable], int, int, int, int]:
+    ) -> Tuple[Dict[int, DTable], int, int, int, int, int]:
         """Compute IDB_v per tree vertex (one grid round or a hash-join
         cascade), with the centralized retry loop.  Returns
-        (tables, comm, padded, claimed_rounds, dispatches)."""
+        (tables, comm, padded, heavy, claimed_rounds, dispatches)."""
         d0 = self.spmd.dispatch_count
         comm = 0
         padded = 0
+        heavy = 0
         dropped_any = True
         attempt = 0
         max_engine_rounds = 0
@@ -665,9 +834,11 @@ class PhysicalExecutor:
         while dropped_any:
             attempt += 1
             assert attempt <= self.max_retries, "materialization: too many retries"
+            self.capman.heavy_hint = 0  # per-attempt, as in execute_round
             dropped_any = False
             comm_try = 0
             padded_try = 0
+            heavy_try = 0
             tables = {}
             max_engine_rounds = 0
             for v in ghd.nodes():
@@ -686,6 +857,7 @@ class PhysicalExecutor:
                 )
                 sent, drop = st["sent"], st["dropped"]
                 pad = st.get("padded", 0)
+                heavy_try += st.get("heavy", 0)
                 if need_dedup:
                     seeds = [self._next_seed()]
                     dx = (
@@ -717,11 +889,12 @@ class PhysicalExecutor:
             if self.count_retries_comm or not dropped_any:
                 comm += comm_try
                 padded += padded_try
+                heavy += heavy_try
             if dropped_any:
                 ledger.retries += 1
         for v in tables:
             self.capman.ensure(v, tables[v].cap)
         return (
-            tables, comm, padded, max(1, max_engine_rounds),
+            tables, comm, padded, heavy, max(1, max_engine_rounds),
             self.spmd.dispatch_count - d0,
         )

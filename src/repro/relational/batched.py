@@ -36,6 +36,13 @@ Donation: the stacked ``(p, k, cap, ar)`` inputs are freshly built by
 ``_stack`` and dead after the dispatch, so they are donated
 (``SPMD.run(donate=...)``) — XLA reuses their HBM for the exchange
 outputs instead of double-buffering (no-op on backends without donation).
+
+Hybrid (heavy-hitter) routing: the measure pre-passes detect heavy
+destinations from the counts they already ship (``relational.skew``);
+``measure_*_many(hybrid=True)`` re-measures flagged groups under hybrid
+routing and ``hybrid_semijoin_many``/``hybrid_join_many`` run the
+payload with light keys hashed and heavy keys spread/broadcast — same
+row sets as the hash operators, balanced capacities under any skew.
 """
 from __future__ import annotations
 
@@ -63,6 +70,12 @@ from .shuffle import (
     exchange_multi,
     padded_slots,
     pow2,
+)
+from .skew import (
+    DEFAULT_SKEW_THRESHOLD,
+    bcast_dests,
+    heavy_dest_flags_many,
+    split_dests,
 )
 from .spmd import SPMD
 from .table import DTable, schema_join
@@ -96,16 +109,26 @@ def _seed_array(seeds: Sequence[int], p: int) -> jax.Array:
     return jnp.broadcast_to(s, (p, len(seeds)))
 
 
-def _per_op_stats(sent, dropped, padded: int = 0) -> List[Dict[str, int]]:
+def _per_op_stats(
+    sent, dropped, padded: int = 0, heavy=None
+) -> List[Dict[str, int]]:
     """(p, k) shard stats -> one {'sent','dropped','padded'} dict per
     instance; ``padded`` (dense slots the wire shipped, a static of the
-    dispatch) is identical across the group's instances."""
+    dispatch) is identical across the group's instances.  ``heavy`` (the
+    hybrid ops' per-shard count of tuple-sends routed through the
+    heavy-hitter path) adds a ``'heavy'`` key when given — hash/grid ops
+    omit the key so their stats stay byte-identical to the sequential
+    operators'."""
     s = np.asarray(sent).sum(axis=0)
     d = np.asarray(dropped).sum(axis=0)
-    return [
+    out = [
         {"sent": int(a), "dropped": int(b), "padded": int(padded)}
         for a, b in zip(s, d)
     ]
+    if heavy is not None:
+        for st, h in zip(out, np.asarray(heavy).sum(axis=0)):
+            st["heavy"] = int(h)
+    return out
 
 
 # --------------------------------------------------- calibration pre-passes
@@ -140,13 +163,32 @@ class GroupMeasure:
     ``padded``: int32 cells the pre-pass ITSELF shipped (the (p,)-int
     count vectors, plus the keys-only exchange of the join output count)
     — charged to the ledger so calibrated payload efficiency never hides
-    the cost of measuring."""
+    the cost of measuring.
+
+    Heavy-hitter surface (``relational.skew``): ``heavy`` is the (k, p)
+    bool per-instance heavy-destination flags the count pre-pass
+    detected (None where detection doesn't apply), ``n_heavy`` the total
+    flagged destination count (the capacity manager's diagnostic hint),
+    ``lhs_heavy_rows``/``rhs_heavy_rows`` each side's row mass bound for
+    the flagged destinations, and ``hybrid_routed`` is True when the
+    capacities in ``lhs``/``rhs``/``out_*`` were re-measured under HYBRID
+    routing and the payload must run the hybrid exchange to stay within
+    them.  ``swap_spread`` assigns the hybrid join's roles: False spreads
+    the lhs and broadcasts the rhs; True the reverse — the measure picks
+    the side with the LARGER heavy mass to spread (broadcasting the small
+    side is what keeps both the wire and the join output balanced)."""
 
     lhs: SideCaps
     rhs: Optional[SideCaps] = None
     out_recv: Optional[int] = None
     out_need: Optional[int] = None
     padded: int = 0
+    heavy: Optional[np.ndarray] = None
+    n_heavy: int = 0
+    lhs_heavy_rows: int = 0
+    rhs_heavy_rows: int = 0
+    hybrid_routed: bool = False
+    swap_spread: bool = False
 
 
 def _take(data: jax.Array, cols: jax.Array) -> jax.Array:
@@ -209,6 +251,114 @@ def _join_count_shard_b(ad, av, bd, bv, seed, ak, bk, *,
     return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk)
 
 
+# ------------------------------------------ hybrid-routing measure helpers
+def _heavy_array(heavy: np.ndarray, p: int) -> jax.Array:
+    """Per-instance heavy-destination flags as (p, k, p) traced DATA —
+    one compiled hybrid program serves every flag pattern."""
+    h = jnp.asarray(np.asarray(heavy, bool).reshape(len(heavy), p))
+    return jnp.broadcast_to(h, (p,) + h.shape)
+
+
+def _hybrid_exchange(data, valid, dest, hw, *, p, c_out, cap_recv, spread):
+    """One side of a hybrid exchange: ``spread=True`` deals the heavy rows
+    positionally (single-dest ``exchange``), ``spread=False`` broadcasts
+    them to every reducer (``exchange_multi``).  Returns
+    (rdata, rvalid, sent, dropped, heavy_sends)."""
+    if spread:
+        d2, hvy = split_dests(dest, hw, p)
+        rd, rv, sent, ds, dr = exchange(
+            data, valid, d2, p=p, c_out=c_out, cap_recv=cap_recv
+        )
+        return rd, rv, sent, ds + dr, hvy.sum()
+    d2, hvy = bcast_dests(dest, hw, p)
+    rd, rv, sent, ds, dr = exchange_multi(
+        data, valid, d2, p=p, c_out=c_out, cap_recv=cap_recv
+    )
+    return rd, rv, sent, ds + dr, p * hvy.sum()
+
+
+def _hybrid_counts_one_side(dest, hw, *, p, spread):
+    d2, _ = (split_dests if spread else bcast_dests)(dest, hw, p)
+    return exchange_counts(d2, p)
+
+
+def _hybrid_pair_counts_one(ad, av, bd, bv, seed, ak, bk, hw, *,
+                            p, dedup_b, swap, backend):
+    """Count both sides of one instance under HYBRID routing: the spread
+    side's heavy rows dealt positionally, the broadcast side's heavy rows
+    to every reducer — same dests the hybrid payload will use.  ``swap``
+    spreads the rhs and broadcasts the lhs instead."""
+    da = _dests(_take(ad, ak), av, p, seed, backend)
+    oa, ra = _hybrid_counts_one_side(da, hw, p=p, spread=not swap)
+    bkeys = _take(bd, bk)
+    bv2 = (
+        local_dedup_mask(bkeys, bv, tuple(range(bk.shape[0])))
+        if dedup_b
+        else bv
+    )
+    db = _dests(bkeys, bv2, p, seed, backend)
+    ob, rb = _hybrid_counts_one_side(db, hw, p=p, spread=swap)
+    return oa, ra, ob, rb
+
+
+def _hybrid_pair_counts_shard_b(ad, av, bd, bv, seed, ak, bk, hw, *,
+                                p, dedup_b, swap, backend):
+    one = functools.partial(
+        _hybrid_pair_counts_one, p=p, dedup_b=dedup_b, swap=swap,
+        backend=backend,
+    )
+    return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, hw)
+
+
+def _hybrid_pair_counts(
+    spmd: SPMD, as_, bs, a_keys, b_keys, seeds, heavy, *,
+    dedup_b, swap, backend,
+) -> Tuple[SideCaps, SideCaps]:
+    """ONE count-only dispatch re-measuring an op group's exchanges under
+    hybrid routing (run only when the hash counts flagged heavy
+    destinations)."""
+    p = spmd.p
+    ad, av = _stack(as_)
+    bd, bv = _stack(bs)
+    oa, ra, ob, rb = spmd.run(
+        _hybrid_pair_counts_shard_b,
+        ad, av, bd, bv, _seed_array(seeds, p),
+        _key_array(a_keys, p), _key_array(b_keys, p), _heavy_array(heavy, p),
+        p=p, dedup_b=dedup_b, swap=swap, backend=backend,
+        donate=(0, 1, 2, 3),
+    )
+    return SideCaps.from_counts(oa, ra), SideCaps.from_counts(ob, rb)
+
+
+def _hybrid_join_count_one(ad, av, bd, bv, seed, ak, bk, hw, *,
+                           p, c_out_a, c_out_b, cap_a, cap_b, swap, backend):
+    """Keys-only exchange at the hybrid-calibrated capacities, then the
+    exact per-shard join output count UNDER HYBRID PLACEMENT — the spread
+    join's true requirement, not the hash join's one-reducer pile-up."""
+    akeys = _take(ad, ak)
+    da = _dests(akeys, av, p, seed, backend)
+    a2, a2v, *_ = _hybrid_exchange(
+        akeys, av, da, hw, p=p, c_out=c_out_a, cap_recv=cap_a, spread=not swap
+    )
+    bkeys = _take(bd, bk)
+    db = _dests(bkeys, bv, p, seed, backend)
+    b2, b2v, *_ = _hybrid_exchange(
+        bkeys, bv, db, hw, p=p, c_out=c_out_b, cap_recv=cap_b, spread=swap
+    )
+    kc = tuple(range(ak.shape[0]))
+    return local_join_count(a2, a2v, b2, b2v, kc, kc, backend)
+
+
+def _hybrid_join_count_shard_b(ad, av, bd, bv, seed, ak, bk, hw, *,
+                               p, c_out_a, c_out_b, cap_a, cap_b, swap,
+                               backend):
+    one = functools.partial(
+        _hybrid_join_count_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b,
+        cap_a=cap_a, cap_b=cap_b, swap=swap, backend=backend,
+    )
+    return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, hw)
+
+
 def _measure_pair_many(
     spmd: SPMD,
     as_: Sequence[DTable],
@@ -219,6 +369,7 @@ def _measure_pair_many(
     *,
     dedup_b: bool,
     backend: str = "jnp",
+    skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
 ) -> GroupMeasure:
     p = spmd.p
     ad, av = _stack(as_)
@@ -230,54 +381,124 @@ def _measure_pair_many(
         p=p, dedup_b=dedup_b, backend=backend,
         donate=(0, 1, 2, 3),
     )
+    # heavy-destination flags come free with the counts: the hash is
+    # key-consistent across both sides, so per-destination overload on
+    # EITHER side flags the destination's keys heavy for both
+    oa_np, ob_np = np.asarray(oa), np.asarray(ob)
+    heavy = heavy_dest_flags_many(oa_np, p, skew_threshold) | heavy_dest_flags_many(
+        ob_np, p, skew_threshold
+    )
+    arrivals_a = oa_np.reshape(oa_np.shape[0], -1, p).sum(axis=0)  # (k, p)
+    arrivals_b = ob_np.reshape(ob_np.shape[0], -1, p).sum(axis=0)
     return GroupMeasure(
         lhs=SideCaps.from_counts(oa, ra),
         rhs=SideCaps.from_counts(ob, rb),
         out_recv=None,
         padded=2 * len(as_) * p * p,  # two (p,)-int count vectors each
+        heavy=heavy,
+        n_heavy=int(heavy.sum()),
+        lhs_heavy_rows=int(arrivals_a[heavy].sum()),
+        rhs_heavy_rows=int(arrivals_b[heavy].sum()),
     )
 
 
 def measure_semijoin_many(
-    spmd: SPMD, ss, rs, *, seeds, backend: str = "jnp"
+    spmd: SPMD, ss, rs, *, seeds, backend: str = "jnp",
+    hybrid: bool = False, skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
 ) -> GroupMeasure:
     """Pre-pass of ``dist_semijoin_many``: S side raw, R side the
-    deduplicated key projection — the S receive count bounds the output."""
+    deduplicated key projection — the S receive count bounds the output.
+
+    ``hybrid=True``: when the counts flag heavy destinations, ONE more
+    count-only dispatch re-measures both sides under hybrid routing (S
+    spread, R keys broadcast) and the returned capacities/``out_recv``
+    are the hybrid payload's — ``hybrid_routed`` marks them so."""
     shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
+    s_keys = [s.cols(sh) for s, sh in zip(ss, shareds)]
+    r_keys = [r.cols(sh) for r, sh in zip(rs, shareds)]
     m = _measure_pair_many(
-        spmd, ss, rs,
-        [s.cols(sh) for s, sh in zip(ss, shareds)],
-        [r.cols(sh) for r, sh in zip(rs, shareds)],
-        seeds, dedup_b=True, backend=backend,
+        spmd, ss, rs, s_keys, r_keys, seeds, dedup_b=True, backend=backend,
+        skew_threshold=skew_threshold,
     )
+    if hybrid and m.n_heavy:
+        # roles are fixed for a semijoin: S (the output side, one copy
+        # per row) spreads, R's deduplicated key projection broadcasts —
+        # a heavy KEY is a single R-side row after dedup, so broadcast
+        # costs n_heavy * p keys, never a relation's row mass
+        p = spmd.p
+        lhs, rhs = _hybrid_pair_counts(
+            spmd, ss, rs, s_keys, r_keys, seeds, m.heavy,
+            dedup_b=True, swap=False, backend=backend,
+        )
+        return dataclasses.replace(
+            m, lhs=lhs, rhs=rhs, out_recv=lhs.cap_recv,
+            padded=m.padded + 2 * len(ss) * p * p, hybrid_routed=True,
+        )
     return dataclasses.replace(m, out_recv=m.lhs.cap_recv)
 
 
 def measure_join_many(
-    spmd: SPMD, as_, bs, *, seeds, backend: str = "jnp"
+    spmd: SPMD, as_, bs, *, seeds, backend: str = "jnp",
+    hybrid: bool = False, skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
 ) -> GroupMeasure:
     """Pre-pass of ``dist_join_many``: first the count dispatch (tight
     shuffle capacities), then a keys-only exchange AT those calibrated
     capacities whose exact output count pre-sizes ``out_need`` — two tiny
-    dispatches, both priced into ``padded``."""
+    dispatches, both priced into ``padded``.
+
+    ``hybrid=True``: when the counts flag heavy destinations, the
+    capacities are re-measured under hybrid routing (A spread, B
+    broadcast) and the keys-only output count runs at the HYBRID
+    placement — so ``out_need`` is the true per-shard requirement of the
+    spread join, not the one-reducer pile-up of the hash join."""
     p = spmd.p
     shareds = [[x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)]
     a_keys = [a.cols(sh) for a, sh in zip(as_, shareds)]
     b_keys = [b.cols(sh) for b, sh in zip(bs, shareds)]
     m = _measure_pair_many(
-        spmd, as_, bs, a_keys, b_keys, seeds, dedup_b=False, backend=backend
-    )
-    ad, av = _stack(as_)
-    bd, bv = _stack(bs)
-    cnt = spmd.run(
-        _join_count_shard_b,
-        ad, av, bd, bv, _seed_array(seeds, p),
-        _key_array(a_keys, p), _key_array(b_keys, p),
-        p=p, c_out_a=m.lhs.c_out, c_out_b=m.rhs.c_out,
-        cap_a=m.lhs.cap_recv, cap_b=m.rhs.cap_recv, backend=backend,
-        donate=(0, 1, 2, 3),
+        spmd, as_, bs, a_keys, b_keys, seeds, dedup_b=False, backend=backend,
+        skew_threshold=skew_threshold,
     )
     k, nk = len(as_), len(a_keys[0])
+    hw = None
+    swap = False
+    if hybrid and m.n_heavy:
+        # spread the side carrying the LARGER heavy row mass, broadcast
+        # the smaller — that balances both the wire and the join output
+        # (broadcasting the heavy mass would replicate it p ways AND pile
+        # the join's output rows onto the light partner's reducers)
+        swap = m.rhs_heavy_rows > m.lhs_heavy_rows
+        lhs, rhs = _hybrid_pair_counts(
+            spmd, as_, bs, a_keys, b_keys, seeds, m.heavy,
+            dedup_b=False, swap=swap, backend=backend,
+        )
+        m = dataclasses.replace(
+            m, lhs=lhs, rhs=rhs,
+            padded=m.padded + 2 * k * p * p,
+            hybrid_routed=True, swap_spread=swap,
+        )
+        hw = _heavy_array(m.heavy, p)
+    ad, av = _stack(as_)
+    bd, bv = _stack(bs)
+    if hw is None:
+        cnt = spmd.run(
+            _join_count_shard_b,
+            ad, av, bd, bv, _seed_array(seeds, p),
+            _key_array(a_keys, p), _key_array(b_keys, p),
+            p=p, c_out_a=m.lhs.c_out, c_out_b=m.rhs.c_out,
+            cap_a=m.lhs.cap_recv, cap_b=m.rhs.cap_recv, backend=backend,
+            donate=(0, 1, 2, 3),
+        )
+    else:
+        cnt = spmd.run(
+            _hybrid_join_count_shard_b,
+            ad, av, bd, bv, _seed_array(seeds, p),
+            _key_array(a_keys, p), _key_array(b_keys, p), hw,
+            p=p, c_out_a=m.lhs.c_out, c_out_b=m.rhs.c_out,
+            cap_a=m.lhs.cap_recv, cap_b=m.rhs.cap_recv, swap=swap,
+            backend=backend,
+            donate=(0, 1, 2, 3),
+        )
     return dataclasses.replace(
         m,
         out_need=pow2(max(1, int(np.asarray(cnt).max()))),
@@ -571,6 +792,168 @@ def dist_join_many(
         sent, dropped,
         padded_slots(p, c_out[0], as_[0].arity)
         + padded_slots(p, c_out[1], bs[0].arity),
+    )
+
+
+# ------------------------------------------- hybrid (heavy-hitter) semijoin
+def _hybrid_semijoin_one(sd, sv, rd, rv, seed, sk, rk, hw, *,
+                         p, c_out_s, c_out_r, cap_s, cap_r, backend):
+    """``_semijoin_one`` with hybrid routing: S (the output side) spread,
+    R's deduplicated key projection broadcast for heavy keys.  An S row
+    lands on exactly one reducer either way, and every R key it can match
+    is present there (hash-co-located for light keys, broadcast for
+    heavy), so the mask — and the output row set — is identical to the
+    hash semijoin's."""
+    nk = rk.shape[0]
+    kcols = tuple(range(nk))
+    rkeys = _take(rd, rk)
+    rkv = local_dedup_mask(rkeys, rv, kcols)
+    rkeys = jnp.where(rkv[:, None], rkeys, 0)
+    rk2, rkv2, sent_r, dr_r, hvy_r = _hybrid_exchange(
+        rkeys, rkv, _dests(rkeys, rkv, p, seed, backend), hw,
+        p=p, c_out=c_out_r, cap_recv=cap_r, spread=False,
+    )
+    rkv2 = local_dedup_mask(rk2, rkv2, kcols)
+    s2, s2v, sent_s, dr_s, hvy_s = _hybrid_exchange(
+        sd, sv, _dests(_take(sd, sk), sv, p, seed, backend), hw,
+        p=p, c_out=c_out_s, cap_recv=cap_s, spread=True,
+    )
+    mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, rk2, rkv2, kcols, backend)
+    s2 = jnp.where(mask[:, None], s2, 0)
+    return s2, mask, sent_r + sent_s, dr_r + dr_s, hvy_s + hvy_r
+
+
+def _hybrid_semijoin_shard_b(sd, sv, rd, rv, seed, sk, rk, hw, *,
+                             p, c_out_s, c_out_r, cap_s, cap_r, backend):
+    one = functools.partial(
+        _hybrid_semijoin_one, p=p, c_out_s=c_out_s, c_out_r=c_out_r,
+        cap_s=cap_s, cap_r=cap_r, backend=backend,
+    )
+    return jax.vmap(one)(sd, sv, rd, rv, seed, sk, rk, hw)
+
+
+def hybrid_semijoin_many(
+    spmd: SPMD,
+    ss: Sequence[DTable],
+    rs: Sequence[DTable],
+    *,
+    seeds: Sequence[int],
+    heavy: np.ndarray,  # (k, p) per-instance heavy-destination flags
+    cap_recv: Tuple[int, int],
+    c_out: Optional[Tuple[int, int]] = None,
+    backend: str = "jnp",
+) -> Tuple[List[DTable], List[Dict]]:
+    """k-fold skew-resilient S_i |>< R_i in ONE dispatch: light keys hash,
+    heavy keys spread/broadcast (``relational.skew``).  Same row sets as
+    ``dist_semijoin_many``; stats carry the extra ``'heavy'`` count of
+    tuple-sends routed through the heavy path."""
+    p = spmd.p
+    shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
+    assert all(shareds), "semijoin with no shared attrs in batch"
+    # a row reaches each destination at most once, so the worst-case send
+    # bucket is the shard cap even for the broadcast side
+    c_out = c_out or (ss[0].cap, rs[0].cap)
+    sd, sv = _stack(ss)
+    rd, rv = _stack(rs)
+    sk = _key_array([s.cols(sh) for s, sh in zip(ss, shareds)], p)
+    rk = _key_array([r.cols(sh) for r, sh in zip(rs, shareds)], p)
+    od, ov, sent, dropped, hvy = spmd.run(
+        _hybrid_semijoin_shard_b,
+        sd, sv, rd, rv, _seed_array(seeds, p), sk, rk, _heavy_array(heavy, p),
+        p=p, c_out_s=c_out[0], c_out_r=c_out[1],
+        cap_s=cap_recv[0], cap_r=cap_recv[1], backend=backend,
+        donate=(0, 1, 2, 3),
+    )
+    return _unstack(od, ov, [s.schema for s in ss]), _per_op_stats(
+        sent, dropped,
+        padded_slots(p, c_out[0], ss[0].arity)
+        + padded_slots(p, c_out[1], len(shareds[0])),
+        heavy=hvy,
+    )
+
+
+# ----------------------------------------------- hybrid (heavy-hitter) join
+def _hybrid_join_one(ad, av, bd, bv, seed, ak, bk, bkeep, hw, *,
+                     p, c_out_a, c_out_b, cap_a, cap_b, out_cap, swap,
+                     backend):
+    """``_join_one`` with hybrid routing: one side spread, the other
+    broadcast for heavy keys (``swap`` picks which — the measure spreads
+    the heavier side).  A heavy pair (a, b) meets exactly once — at the
+    unique reducer holding the spread copy (the broadcast copy is
+    everywhere); light pairs meet at ``hash(key)`` as before; heavy and
+    light keys cannot cross-match because heaviness is a function of the
+    key."""
+    kcols = tuple(range(ak.shape[0]))
+    a2, a2v, sent_a, dr_a, hvy_a = _hybrid_exchange(
+        ad, av, _dests(_take(ad, ak), av, p, seed, backend), hw,
+        p=p, c_out=c_out_a, cap_recv=cap_a, spread=not swap,
+    )
+    b2, b2v, sent_b, dr_b, hvy_b = _hybrid_exchange(
+        bd, bv, _dests(_take(bd, bk), bv, p, seed, backend), hw,
+        p=p, c_out=c_out_b, cap_recv=cap_b, spread=swap,
+    )
+    ra, rb = dense_ranks(_take(a2, ak), a2v, kcols, _take(b2, bk), b2v, kcols)
+    out, out_v, over = local_join_ranked(
+        a2, a2v, ra, b2, b2v, rb, bkeep, out_cap, backend
+    )
+    return out, out_v, sent_a + sent_b, dr_a + dr_b + over, hvy_a + hvy_b
+
+
+def _hybrid_join_shard_b(ad, av, bd, bv, seed, ak, bk, bkeep, hw, *,
+                         p, c_out_a, c_out_b, cap_a, cap_b, out_cap, swap,
+                         backend):
+    one = functools.partial(
+        _hybrid_join_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b,
+        cap_a=cap_a, cap_b=cap_b, out_cap=out_cap, swap=swap,
+        backend=backend,
+    )
+    return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, bkeep, hw)
+
+
+def hybrid_join_many(
+    spmd: SPMD,
+    as_: Sequence[DTable],
+    bs: Sequence[DTable],
+    *,
+    seeds: Sequence[int],
+    out_cap: int,
+    heavy: np.ndarray,  # (k, p) per-instance heavy-destination flags
+    c_out: Optional[Tuple[int, int]] = None,
+    cap_recv: Optional[Tuple[int, int]] = None,
+    swap: bool = False,  # True: spread B / broadcast A (GroupMeasure.swap_spread)
+    backend: str = "jnp",
+) -> Tuple[List[DTable], List[Dict]]:
+    """k-fold skew-resilient A_i |><| B_i in ONE dispatch; same row sets
+    as ``dist_join_many`` with heavy keys routed spread/broadcast."""
+    p = spmd.p
+    shareds = [[x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)]
+    assert all(shareds), "attribute-disjoint join in batch; use dist_join"
+    keeps = [
+        tuple(i for i, x in enumerate(b.schema) if x not in set(a.schema))
+        for a, b in zip(as_, bs)
+    ]
+    schemas = [schema_join(a.schema, b.schema) for a, b in zip(as_, bs)]
+    c_out = c_out or (as_[0].cap, bs[0].cap)
+    cap_recv = cap_recv or (p * as_[0].cap, p * bs[0].cap)
+    ad, av = _stack(as_)
+    bd, bv = _stack(bs)
+    ak = _key_array([a.cols(sh) for a, sh in zip(as_, shareds)], p)
+    bk = _key_array([b.cols(sh) for b, sh in zip(bs, shareds)], p)
+    bkeep = _key_array(keeps, p)
+    od, ov, sent, dropped, hvy = spmd.run(
+        _hybrid_join_shard_b,
+        ad, av, bd, bv, _seed_array(seeds, p), ak, bk, bkeep,
+        _heavy_array(heavy, p),
+        p=p, c_out_a=c_out[0], c_out_b=c_out[1],
+        cap_a=cap_recv[0], cap_b=cap_recv[1], out_cap=out_cap, swap=swap,
+        backend=backend,
+        donate=(0, 1, 2, 3),
+    )
+    return _unstack(od, ov, schemas), _per_op_stats(
+        sent, dropped,
+        padded_slots(p, c_out[0], as_[0].arity)
+        + padded_slots(p, c_out[1], bs[0].arity),
+        heavy=hvy,
     )
 
 

@@ -28,6 +28,7 @@ class RoundRecord:
     n_rounds: int = 1  # CLAIMED engine BSP rounds (parallel ops: the max)
     dispatches: int = 0  # MEASURED SPMD program dispatches (0 = not measured)
     padded_slots: int = 0  # MEASURED dense all_to_all slots shipped
+    heavy_tuples: int = 0  # tuple-sends routed via the heavy-hitter path
 
 
 class Ledger:
@@ -75,6 +76,20 @@ class Ledger:
         return sum(r.padded_slots for r in self.records)
 
     @property
+    def heavy_tuples(self) -> int:
+        """Tuple-sends the hybrid engine routed through the heavy-hitter
+        path (position-partitioned spreads + broadcast replicas).  Zero
+        under the hash/grid engines and on unskewed instances — the
+        hybrid engine's routing is data-dependent, and this is its
+        measured heavy/light split."""
+        return sum(r.heavy_tuples for r in self.records)
+
+    @property
+    def light_tuples(self) -> int:
+        """Shuffled tuples that kept the plain hash routing."""
+        return self.shuffle_tuples - self.heavy_tuples
+
+    @property
     def payload_efficiency(self) -> float:
         """useful_tuples per shipped cell — the measured quality of the
         shipped exchange buffers (1.0 when nothing was shuffled).  A
@@ -92,11 +107,12 @@ class Ledger:
         n_rounds: int = 1,
         dispatches: int = 0,
         padded: int = 0,
+        heavy: int = 0,
     ) -> None:
         self.records.append(
             RoundRecord(
                 len(self.records), phase, list(ops), int(comm), note, n_rounds,
-                int(dispatches), int(padded),
+                int(dispatches), int(padded), int(heavy),
             )
         )
 
@@ -132,6 +148,7 @@ class Ledger:
             "measured_rounds": int(self.rounds),
             "measured_dispatches": int(self.measured_dispatches),
             "measured_padded": int(self.padded_slots),
+            "measured_heavy": int(self.heavy_tuples),
             "payload_efficiency": float(self.payload_efficiency),
             "output_tuples": int(self.output_tuples),
             "retries": int(self.retries),
@@ -141,18 +158,22 @@ class Ledger:
         phases: Dict[str, Dict[str, int]] = {}
         for r in self.records:
             ph = phases.setdefault(
-                r.phase, {"rounds": 0, "comm": 0, "dispatches": 0, "padded": 0}
+                r.phase,
+                {"rounds": 0, "comm": 0, "dispatches": 0, "padded": 0, "heavy": 0},
             )
             ph["rounds"] += r.n_rounds
             ph["comm"] += r.comm_tuples
             ph["dispatches"] += r.dispatches
             ph["padded"] += r.padded_slots
+            ph["heavy"] += r.heavy_tuples
         return {
             "rounds": self.rounds,
             "measured_dispatches": self.measured_dispatches,
             "comm_tuples": self.comm_tuples,
             "shuffle_tuples": self.shuffle_tuples,
             "padded_slots": self.padded_slots,
+            "heavy_tuples": self.heavy_tuples,
+            "light_tuples": self.light_tuples,
             "payload_efficiency": round(self.payload_efficiency, 4),
             "output_tuples": self.output_tuples,
             "retries": self.retries,
@@ -161,11 +182,12 @@ class Ledger:
 
     def __repr__(self) -> str:
         s = self.summary()
+        heavy = f", heavy={s['heavy_tuples']}" if s["heavy_tuples"] else ""
         lines = [
             f"Ledger(rounds={s['rounds']}, dispatches={s['measured_dispatches']}, "
             f"comm={s['comm_tuples']}, out={s['output_tuples']}, "
             f"padded={s['padded_slots']}, eff={s['payload_efficiency']}, "
-            f"retries={s['retries']})"
+            f"retries={s['retries']}{heavy})"
         ]
         for ph, v in s["phases"].items():
             lines.append(

@@ -36,6 +36,7 @@ from .localops import (
     local_semijoin_mask,
 )
 from .shuffle import exchange, exchange_counts, exchange_multi, padded_slots, pow2
+from .skew import DEFAULT_SKEW_THRESHOLD
 from .spmd import SPMD
 from .table import DTable, schema_join
 
@@ -217,6 +218,98 @@ def dist_join(
         + padded_slots(p, c_out[1], b.arity)
         + count_pad,
     )
+
+
+# --------------------------------------------- hybrid (heavy-hitter) variants
+def dist_join_hybrid(
+    spmd: SPMD,
+    a: DTable,
+    b: DTable,
+    *,
+    seed: int,
+    out_cap: Optional[int] = None,
+    skew_threshold: Optional[float] = None,
+    backend: str = "jnp",
+) -> Tuple[DTable, Dict]:
+    """Skew-resilient hash join: the count pre-pass detects heavy keys
+    (destinations whose arrival exceeds the balanced share, see
+    ``relational.skew``) and routes them grid-style — A's heavy rows
+    position-partitioned over all p reducers, B's broadcast — while light
+    keys keep the plain hash exchange.  Row set identical to
+    ``dist_join``; stats gain ``'heavy'`` (tuple-sends on the heavy
+    path), and the measure pre-pass's wire cost is folded into
+    ``'padded'``.  ``out_cap=None`` uses the pre-counted exact output
+    requirement under the hybrid placement."""
+    shared = [x for x in a.schema if x in b.schema]
+    if not shared:  # broadcast cross join: already skew-free
+        assert out_cap is not None, "cross join needs an explicit out_cap"
+        out, st = dist_join(spmd, a, b, seed=seed, out_cap=out_cap, backend=backend)
+        st.setdefault("heavy", 0)
+        return out, st
+    from . import batched as B  # function-level: batched imports grid -> ops
+
+    thresh = DEFAULT_SKEW_THRESHOLD if skew_threshold is None else skew_threshold
+    m = B.measure_join_many(
+        spmd, [a], [b], seeds=[seed], backend=backend,
+        hybrid=True, skew_threshold=thresh,
+    )
+    oc = out_cap if out_cap is not None else m.out_need
+    kw = dict(
+        seeds=[seed], out_cap=oc,
+        c_out=(m.lhs.c_out, m.rhs.c_out),
+        cap_recv=(m.lhs.cap_recv, m.rhs.cap_recv),
+        backend=backend,
+    )
+    if m.hybrid_routed:
+        outs, stats = B.hybrid_join_many(
+            spmd, [a], [b], heavy=m.heavy, swap=m.swap_spread, **kw
+        )
+    else:
+        outs, stats = B.dist_join_many(spmd, [a], [b], **kw)
+    st = dict(stats[0])
+    st["padded"] = st.get("padded", 0) + m.padded
+    st.setdefault("heavy", 0)
+    return outs[0], st
+
+
+def dist_semijoin_hybrid(
+    spmd: SPMD,
+    s: DTable,
+    r: DTable,
+    *,
+    seed: int,
+    cap_recv: Optional[int] = None,
+    skew_threshold: Optional[float] = None,
+    backend: str = "jnp",
+) -> Tuple[DTable, Dict]:
+    """Skew-resilient S |>< R: heavy S rows spread positionally, heavy R
+    keys broadcast; light keys hash as in ``dist_semijoin``.  Row set
+    identical; ``cap_recv`` (the S-side output capacity) defaults to the
+    measured hybrid arrival bound."""
+    shared = [x for x in s.schema if x in r.schema]
+    assert shared, f"semijoin with no shared attrs: {s.schema} vs {r.schema}"
+    from . import batched as B  # function-level: batched imports grid -> ops
+
+    thresh = DEFAULT_SKEW_THRESHOLD if skew_threshold is None else skew_threshold
+    m = B.measure_semijoin_many(
+        spmd, [s], [r], seeds=[seed], backend=backend,
+        hybrid=True, skew_threshold=thresh,
+    )
+    cap_s = max(cap_recv or 0, m.lhs.cap_recv)
+    kw = dict(
+        seeds=[seed],
+        c_out=(m.lhs.c_out, m.rhs.c_out),
+        cap_recv=(cap_s, m.rhs.cap_recv),
+        backend=backend,
+    )
+    if m.hybrid_routed:
+        outs, stats = B.hybrid_semijoin_many(spmd, [s], [r], heavy=m.heavy, **kw)
+    else:
+        outs, stats = B.dist_semijoin_many(spmd, [s], [r], **kw)
+    st = dict(stats[0])
+    st["padded"] = st.get("padded", 0) + m.padded
+    st.setdefault("heavy", 0)
+    return outs[0], st
 
 
 # ------------------------------------------------------------------- semijoin

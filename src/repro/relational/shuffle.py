@@ -158,9 +158,24 @@ def exchange_multi(
     c_out: int,
     cap_recv: int,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Replicated send: each row goes to up to g destinations."""
+    """Replicated send: each row goes to up to g destinations.
+
+    Duplicate destinations WITHIN a row's ``dests`` are deduplicated to
+    the skip slot ``p`` before bucketing: a row reaches each reducer at
+    most once, so replicated sends can never double-count ``sent`` or
+    double-deliver a tuple (which a local join would then double-join).
+    Today's callers construct distinct destinations (grid offsets are
+    distinct even with size-1 dimensions, hypercube wildcard offsets are
+    a product of distinct coordinates, hybrid broadcast is ``arange``),
+    so this is defense-in-depth; the regression tests pin both the
+    construction-site distinctness and this dedupe."""
     n, ar = data.shape
     g = dests.shape[1]
+    if g > 1:
+        eq = dests[:, :, None] == dests[:, None, :]  # (n, g, g)
+        earlier = jnp.tril(jnp.ones((g, g), bool), -1)  # [j, k]: k < j
+        dup = (eq & earlier[None]).any(-1)
+        dests = jnp.where(dup, p, dests)
     tiled_rows = jnp.repeat(data, g, axis=0)  # (n*g, ar)
     flat_dest = jnp.where(
         jnp.repeat(valid, g, axis=0), dests.reshape(-1), p

@@ -1,0 +1,134 @@
+"""Heavy-hitter detection and hybrid (hash + grid) exchange routing.
+
+The hash exchange is communication-optimal but skew-sensitive: every row
+of a join key lands on ``hash(key) % p``, so one heavy key concentrates
+its whole load on a single reducer — the capacity blows, and the engine
+either abort-retries or ships a huge calibrated pad.  The grid exchange
+is skew-proof but pays Lemma 8's B(X, M) replication on EVERY row.  The
+instance-optimal point between them is heavy/light decomposition
+(Joglekar & Ré "It's all a matter of degree"; Hu & Yi "Instance and
+Output Optimal Parallel Algorithms for Acyclic Joins" — see PAPERS.md):
+
+- **light keys** (the common case) keep the hash routing — comm ~ inputs;
+- **heavy keys** (detected from the PR-4 count pre-pass, which already
+  ships per-destination load statistics for free) switch to grid-style
+  routing: the left/output side is **position-partitioned** (spread
+  round-robin over all p reducers, the positional trick of
+  ``grid._position_groups``), the right side is **broadcast** to every
+  reducer — Lemma 8 with g_left = p, g_right = 1, restricted to the
+  heavy keys only.
+
+Because the hash is key-consistent across both operands (same seed, same
+shared attributes), a *destination-level* decision is automatically a
+*key-level* decision: key k is heavy iff destination ``hash(k) % p`` is
+flagged heavy, and both sides agree.  Correctness of the hybrid join is
+then a disjoint union: a light pair (a, b) meets exactly once at
+``hash(k)``; a heavy pair meets exactly once at the unique reducer
+holding the position-partitioned copy of ``a`` (``b`` is everywhere).
+Heavy and light keys can never cross-match — heaviness is a function of
+the key.
+
+Detection is host-side (the per-destination arrival totals come back
+from the count pre-pass anyway); the resulting (p,)-bool flag vector
+rides into the payload dispatch as DATA, so one compiled hybrid program
+serves every flag pattern — including all-light, where the routing
+degenerates to the plain hash exchange bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .spmd import AXIS
+
+#: Default heavy-hitter sensitivity: a destination is heavy when its
+#: arrival exceeds this multiple of the perfectly balanced share
+#: ceil(total / p).  3x is far above the multinomial max/mean noise of
+#: uniform data at the p's this repo runs (<= 1.5x), and well below the
+#: p * share amplification of a planted heavy key.
+DEFAULT_SKEW_THRESHOLD = 3.0
+
+#: Destinations with fewer arrivals than this are never heavy — a tiny
+#: table cannot blow a capacity, and pow2 capacities floor at 4 anyway.
+MIN_HEAVY_ARRIVAL = 8
+
+
+# --------------------------------------------------------------- detection
+def heavy_dest_flags(
+    out_counts: np.ndarray, p: int, threshold: float = DEFAULT_SKEW_THRESHOLD
+) -> np.ndarray:
+    """Heavy-destination flags of ONE exchange side from its count
+    pre-pass: ``out_counts`` is the (shards, p) per-shard send-count
+    matrix (``shuffle.bucket_counts`` per shard), so column d sums to the
+    total arrival at reducer d.  Returns a (p,) bool vector.
+
+    The threshold is tied to the balanced per-reducer share (which is
+    what the capacity manager's M-derived capacities assume): destination
+    d is heavy iff ``arrival(d) > max(MIN_HEAVY_ARRIVAL,
+    threshold * ceil(total / p))``."""
+    counts = np.asarray(out_counts).reshape(-1, p)
+    arrivals = counts.sum(axis=0)
+    total = int(arrivals.sum())
+    balanced = -(-total // p) if total else 0
+    cut = max(float(MIN_HEAVY_ARRIVAL), threshold * balanced)
+    return arrivals > cut
+
+
+def heavy_dest_flags_many(
+    out_counts: np.ndarray, p: int, threshold: float = DEFAULT_SKEW_THRESHOLD
+) -> np.ndarray:
+    """Batched ``heavy_dest_flags``: (shards, k, p) send counts of a
+    k-instance op group -> (k, p) bool flags, each instance thresholded
+    against its own balanced share."""
+    counts = np.asarray(out_counts).reshape(out_counts.shape[0], -1, p)
+    arrivals = counts.sum(axis=0)  # (k, p)
+    totals = arrivals.sum(axis=1, keepdims=True)
+    balanced = -(-totals // p)
+    cut = np.maximum(float(MIN_HEAVY_ARRIVAL), threshold * balanced)
+    return arrivals > cut
+
+
+# ----------------------------------------------------------------- routing
+def _is_heavy(dest: jax.Array, heavy: jax.Array, p: int) -> jax.Array:
+    """Per-row heavy mask: ``heavy[dest]`` with dead rows (dest == p)
+    always light."""
+    padded = jnp.concatenate([heavy, jnp.zeros((1,), bool)])
+    return padded[jnp.clip(dest, 0, p)]
+
+
+def split_dests(
+    dest: jax.Array, heavy: jax.Array, p: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Position-partitioned routing of the spread side: light rows keep
+    their hash destination; heavy rows are dealt round-robin over all p
+    reducers (offset by the shard index so shards don't synchronize on
+    reducer 0).  Each row still goes to exactly ONE destination, so the
+    spread side stays a plain single-dest ``exchange``.
+
+    ``dest``: (n,) int32 in [0, p] (p = dead); ``heavy``: (p,) bool flag
+    vector riding as data.  Returns (dest', is_heavy)."""
+    is_heavy = _is_heavy(dest, heavy, p)
+    s = jax.lax.axis_index(AXIS)
+    hidx = jnp.cumsum(is_heavy.astype(jnp.int32)) - 1
+    spread = ((hidx + s) % p).astype(jnp.int32)
+    return jnp.where(is_heavy, spread, dest), is_heavy
+
+
+def bcast_dests(
+    dest: jax.Array, heavy: jax.Array, p: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Broadcast routing of the replicated side: light rows go to their
+    hash destination only (slot 0; slots 1..p-1 are dead ``p``); heavy
+    rows go to every reducer — wherever the spread side scattered their
+    join partners.  Shaped for ``exchange_multi`` with g = p.
+
+    Returns (dests (n, p), is_heavy)."""
+    n = dest.shape[0]
+    is_heavy = _is_heavy(dest, heavy, p)
+    cols = jnp.arange(p, dtype=jnp.int32)[None, :]
+    light = jnp.where(cols == 0, dest[:, None], p)
+    dests = jnp.where(is_heavy[:, None], jnp.broadcast_to(cols, (n, p)), light)
+    return dests, is_heavy

@@ -1,0 +1,398 @@
+"""Skew-resilient hybrid exchange: heavy-hitter detection on the count
+pre-pass, hybrid routing parity (hybrid == hash == grid on rows), the
+pinned padded-slot win under a planted heavy key, the capacity-manager
+ceiling, and the exchange_multi duplicate-destination dedupe."""
+from __future__ import annotations
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gym import GymConfig, GymDriver, gym
+from repro.core.optimizer import (
+    MachineProfile,
+    choose_plan,
+    skew_from_data,
+    skew_share,
+)
+from repro.core.physical import CapacityCeiling, CapacityManager
+from repro.core.queries import star_ghd, star_query
+from repro.data.synthetic import star_data_heavy, star_data_sparse, zipf_values
+from repro.relational import batched as B
+from repro.relational.ops import (
+    Overflow,
+    dist_join,
+    dist_join_hybrid,
+    dist_semijoin,
+    dist_semijoin_hybrid,
+)
+from repro.relational.shuffle import exchange_multi
+from repro.relational.skew import (
+    bcast_dests,
+    heavy_dest_flags,
+    heavy_dest_flags_many,
+    split_dests,
+)
+from repro.relational.spmd import AXIS, SPMD
+from repro.relational.table import DTable
+
+
+def mk(rows, schema, p=4, cap=None):
+    rows = np.asarray(rows, np.int32).reshape(-1, len(schema))
+    cap = cap or max(1, -(-rows.shape[0] // p))
+    return DTable.scatter_numpy(rows, schema, p, cap=cap)
+
+
+def planted_pair(p=4, heavy=30, light=10, seed=0):
+    """(A, B) join pair with ``heavy`` distinct A-rows sharing B=0."""
+    rng = np.random.default_rng(seed)
+    a_rows = np.stack(
+        [
+            rng.permutation(heavy + light),
+            np.concatenate([np.zeros(heavy, int), rng.integers(1, 16, light)]),
+        ],
+        1,
+    )
+    b_rows = np.stack([np.arange(16), rng.integers(0, 9, 16)], 1)
+    return (
+        mk(np.unique(a_rows.astype(np.int32), axis=0), ("A", "B"), p, cap=16),
+        mk(np.unique(b_rows.astype(np.int32), axis=0), ("B", "C"), p, cap=8),
+    )
+
+
+# ------------------------------------------------------- detection (host)
+def test_heavy_dest_flags_threshold_semantics():
+    p = 4
+    # balanced: 40 rows over 4 dests -> nothing heavy
+    counts = np.full((2, p), 5)
+    assert not heavy_dest_flags(counts, p, 3.0).any()
+    # one dest takes 36 of 48 rows: 3x the balanced share of 12
+    skewed = np.array([[18, 2, 2, 2], [18, 2, 2, 2]])
+    flags = heavy_dest_flags(skewed, p, 2.0)
+    assert flags.tolist() == [True, False, False, False]
+    # tiny totals never flag (MIN_HEAVY_ARRIVAL floor)
+    tiny = np.array([[4, 0, 0, 0]])
+    assert not heavy_dest_flags(tiny, p, 2.0).any()
+
+
+def test_heavy_dest_flags_many_per_instance():
+    p = 4
+    counts = np.zeros((2, 2, p), int)  # (shards, k, p)
+    counts[:, 0] = [[20, 1, 1, 1]] * 1  # instance 0: skewed
+    counts[:, 1] = [[5, 5, 5, 5]] * 1  # instance 1: balanced
+    flags = heavy_dest_flags_many(counts, p, 3.0)
+    assert flags[0].tolist() == [True, False, False, False]
+    assert not flags[1].any()
+
+
+# -------------------------------------------------- routing (per-shard)
+def test_split_and_bcast_dests_route_exactly():
+    p = 4
+    dest = jnp.asarray([0, 1, 0, 0, p, 2], jnp.int32)  # slot 4 dead
+    heavy = jnp.asarray([True, False, False, False])
+
+    def shard(dest):
+        return split_dests(dest, heavy, p) + bcast_dests(dest, heavy, p)
+
+    sd, s_hvy, bd, b_hvy = jax.jit(jax.vmap(shard, axis_name=AXIS))(
+        jnp.stack([dest] * p)
+    )
+    # light rows keep their hash dest; dead rows stay dead
+    for s in range(p):
+        assert int(sd[s, 1]) == 1 and int(sd[s, 5]) == 2 and int(sd[s, 4]) == p
+        # heavy rows (0, 2, 3) spread round-robin offset by shard id
+        assert sorted(int(x) for x in sd[s, [0, 2, 3]]) == sorted(
+            (i + s) % p for i in range(3)
+        )
+        # broadcast: heavy rows to all p dests, light to slot-0 dest only
+        assert bd[s, 0].tolist() == list(range(p))
+        assert int(bd[s, 1, 0]) == 1 and all(int(x) == p for x in bd[s, 1, 1:])
+    assert s_hvy.sum() == p * 3 and b_hvy.sum() == p * 3
+
+
+def test_exchange_multi_dedupes_duplicate_destinations():
+    """A row listing the same live destination twice must be delivered
+    (and counted) once — duplicate slots collapse to the skip slot p."""
+    p = 2
+    data = jnp.asarray([[7, 8]], jnp.int32)
+    valid = jnp.ones((1,), bool)
+    dests = jnp.asarray([[1, 1, 0, 0]], jnp.int32)  # each real dest twice
+
+    def shard(d, v, dst):
+        return exchange_multi(d, v, dst, p=p, c_out=4, cap_recv=8)
+
+    rd, rv, sent, ds, dr = jax.jit(jax.vmap(shard, axis_name=AXIS))(
+        jnp.stack([data] * p), jnp.stack([valid] * p), jnp.stack([dests] * p)
+    )
+    assert int(sent.sum()) == p * 2  # 2 distinct dests per row, not 4
+    assert int(ds.sum()) == 0 and int(dr.sum()) == 0
+    # every shard received one copy from each sender, no duplicates
+    assert int(rv.sum()) == p * 2
+    for s in range(p):
+        got = [tuple(map(int, r)) for r, ok in zip(rd[s], rv[s]) if ok]
+        assert got == [(7, 8)] * 2
+
+
+def test_grid_size_one_dimension_emits_distinct_destinations():
+    """Grid shares with a size-1 dimension (tiny relation vs large one)
+    must not double-send: sent == rows * cells-per-row exactly."""
+    rng = random.Random(3)
+    spmd = SPMD(4)
+    big = mk(
+        [[rng.randint(0, 9), rng.randint(0, 9)] for _ in range(24)],
+        ("A", "B"), 4, cap=8,
+    )
+    tiny = mk([[1, 2]], ("B", "C"), 4, cap=8)
+    from repro.relational.grid import _grid_shares, grid_join
+
+    g = _grid_shares([big.cap * big.p, tiny.cap * tiny.p], spmd.p)
+    out, st = grid_join(spmd, big, tiny, out_cap=64)
+    ref, _ = dist_join(spmd, big, tiny, seed=1, out_cap=64)
+    assert out.to_set() == ref.to_set()
+    # each relation sends each row to exactly prod(g)/g_self cells
+    n_big = int(np.asarray(big.valid).sum())
+    n_tiny = int(np.asarray(tiny.valid).sum())
+    cells = g[0] * g[1]
+    assert st["sent"] == n_big * (cells // g[0]) + n_tiny * (cells // g[1])
+
+
+# ------------------------------------------------ operator-level parity
+def test_hybrid_join_matches_hash_and_reports_heavy():
+    spmd = SPMD(4)
+    a, b = planted_pair(seed=1)
+    ref, ref_st = dist_join(spmd, a, b, seed=5, out_cap=256)
+    hyb, hyb_st = dist_join_hybrid(spmd, a, b, seed=5, out_cap=256)
+    assert hyb.to_set() == ref.to_set()
+    assert hyb_st["dropped"] == 0
+    assert hyb_st["heavy"] > 0  # the planted key actually routed heavy
+
+
+def test_hybrid_semijoin_matches_hash():
+    spmd = SPMD(4)
+    a, b = planted_pair(seed=2)
+    ref, _ = dist_semijoin(spmd, a, b, seed=7)
+    hyb, st = dist_semijoin_hybrid(spmd, a, b, seed=7)
+    assert hyb.to_set() == ref.to_set()
+    assert st["dropped"] == 0 and st["heavy"] > 0
+
+
+def test_hybrid_unskewed_is_bit_identical_to_hash():
+    """No heavy keys detected -> the hybrid ops ARE the hash ops (same
+    rows, same sent, zero heavy)."""
+    rng = random.Random(4)
+    spmd = SPMD(4)
+    rows_a = np.unique(
+        np.asarray([[rng.randint(0, 30), rng.randint(0, 30)] for _ in range(20)],
+                   np.int32), axis=0)
+    rows_b = np.unique(
+        np.asarray([[rng.randint(0, 30), rng.randint(0, 30)] for _ in range(20)],
+                   np.int32), axis=0)
+    a, b = mk(rows_a, ("A", "B"), cap=8), mk(rows_b, ("B", "C"), cap=8)
+    ref, ref_st = dist_join(spmd, a, b, seed=9, out_cap=128)
+    hyb, hyb_st = dist_join_hybrid(spmd, a, b, seed=9, out_cap=128)
+    assert hyb.to_set() == ref.to_set()
+    assert hyb_st["heavy"] == 0
+    assert hyb_st["sent"] == ref_st["sent"]
+
+
+def test_measure_join_swaps_spread_to_the_heavy_side():
+    """The measure must spread the side with the larger heavy mass: with
+    the planted mass on the RIGHT operand, swap_spread is True and the
+    hybrid out_need stays balanced (strictly below the hash pile-up)."""
+    spmd = SPMD(4)
+    a, b = planted_pair(seed=3)
+    m_fwd = B.measure_join_many(spmd, [a], [b], seeds=[11], hybrid=True)
+    assert m_fwd.hybrid_routed and not m_fwd.swap_spread  # heavy mass on lhs
+    m_rev = B.measure_join_many(spmd, [b], [a], seeds=[11], hybrid=True)
+    assert m_rev.hybrid_routed and m_rev.swap_spread  # heavy mass on rhs
+    m_hash = B.measure_join_many(spmd, [b], [a], seeds=[11])
+    assert not m_hash.hybrid_routed
+    assert m_rev.out_need <= m_hash.out_need
+
+
+# --------------------------------------------------- end-to-end (pinned)
+def _planted_star():
+    q, g = star_query(8), star_ghd(8)
+    data = star_data_heavy(
+        8, hub_rows=64, heavy_share=0.8, domain=32, spoke_extra=8, seed=5
+    )
+    return q, g, data
+
+
+def _run_star(engine, data=None, **cfg):
+    q, g, d = _planted_star()
+    rows, _, led = gym(
+        q, d if data is None else data, ghd=g, p=4,
+        config=GymConfig(strategy=engine, seed=3, **cfg),
+    )
+    return sorted(map(tuple, rows)), led
+
+
+def test_planted_heavy_star_hybrid_parity_and_padded_win():
+    """The acceptance pin: on a planted heavy-key S_8 instance the hybrid
+    engine produces bit-identical rows to hash AND grid, with zero
+    abort-retries and strictly fewer padded wire slots than hash."""
+    rows_hash, led_hash = _run_star("hash")
+    rows_grid, led_grid = _run_star("grid")
+    rows_hyb, led_hyb = _run_star("hybrid")
+    assert rows_hyb == rows_hash == rows_grid
+    assert led_hyb.retries == 0
+    assert led_hyb.padded_slots < led_hash.padded_slots, (
+        led_hyb.padded_slots, led_hash.padded_slots,
+    )
+    assert led_hyb.heavy_tuples > 0
+    assert led_hyb.light_tuples == led_hyb.shuffle_tuples - led_hyb.heavy_tuples
+
+
+def test_hybrid_uniform_star_identical_to_hash():
+    """On an unskewed instance the hybrid engine IS the hash engine —
+    rows, comm, padded slots, and dispatch count all bit-identical."""
+    q, g = star_query(5), star_ghd(5)
+    data = star_data_sparse(5, seed=9)
+    out = {}
+    for eng in ("hash", "hybrid"):
+        rows, _, led = gym(
+            q, data, ghd=g, p=4, config=GymConfig(strategy=eng, seed=3)
+        )
+        out[eng] = (sorted(map(tuple, rows)), led)
+    (rh, lh), (ry, ly) = out["hash"], out["hybrid"]
+    assert rh == ry
+    assert lh.comm_tuples == ly.comm_tuples
+    assert lh.padded_slots == ly.padded_slots
+    assert lh.measured_dispatches == ly.measured_dispatches
+    assert ly.heavy_tuples == 0
+
+
+def test_hybrid_snapshot_resume_replays_heavy_decision(tmp_path):
+    """Snapshot mid-query under the hybrid engine: the snapshot
+    round-trips the routing decision's inputs (strategy + skew
+    threshold), so a resuming driver — even one constructed with a plain
+    hash config — keeps routing heavy keys and finishes with the
+    uninterrupted answer.  (Per-round seeds restart on resume, exactly
+    as for the hash engine, so comm/heavy may differ by a few tuples;
+    the row set may not.)"""
+    q, g, data = _planted_star()
+    cfg = GymConfig(strategy="hybrid", seed=3, skew_threshold=3.0)
+    want, _, led_full = gym(q, data, ghd=g, p=4, config=cfg)
+    want = sorted(map(tuple, want))
+    assert led_full.heavy_tuples > 0
+
+    drv = GymDriver(q, g, data, SPMD(4), cfg)
+    drv.step()
+    drv.step()
+    snap = str(tmp_path / "hybrid_snap.npz")
+    drv.save(snap)
+    drv2 = GymDriver(q, g, data, SPMD(4), GymConfig(seed=3))
+    drv2.load(snap)
+    assert drv2.config.strategy == "hybrid"
+    assert drv2.config.skew_threshold == 3.0
+    assert drv2.executor.engine.name == "hybrid"
+    assert drv2.executor.calibrate  # forced on by requires_measure
+    out = drv2.run()
+    assert sorted(map(tuple, out.to_numpy())) == want
+    assert drv2.ledger.heavy_tuples > 0  # heavy routing survived resume
+
+
+# --------------------------------------------------- capacity ceiling
+def test_capacity_manager_ceiling_is_actionable():
+    capman = CapacityManager(SPMD(2), max_cap=64)
+    capman.heavy_hint = 3
+    capman.ensure(0, 64)  # at the bound: fine
+    with pytest.raises(CapacityCeiling) as ei:
+        capman.grow((0,), dropped=1000)
+    msg = str(ei.value)
+    assert "3 heavy destination(s)" in msg
+    assert "engine='hybrid'" in msg and "engine='grid'" in msg
+    assert "max_cap 64" in msg
+    # CapacityCeiling is an Overflow: existing retry plumbing catches it
+    assert isinstance(ei.value, Overflow)
+    with pytest.raises(CapacityCeiling):
+        capman.ensure(1, 65)
+    # unbounded manager never raises
+    CapacityManager(SPMD(2)).grow((0,), dropped=1 << 30)
+
+
+def test_driver_derives_finite_max_cap():
+    q, g, data = _planted_star()
+    drv = GymDriver(q, g, data, SPMD(4), GymConfig(seed=3))
+    assert drv.capman.max_cap is not None
+    assert drv.capman.max_cap >= 1 << 16  # generous floor
+    drv2 = GymDriver(
+        q, g, data, SPMD(4), GymConfig(seed=3, max_cap_tuples=12345)
+    )
+    assert drv2.capman.max_cap == 12345
+
+
+# ------------------------------------------------------------- advisor
+def test_advisor_picks_hybrid_on_skew_hash_on_uniform():
+    q, g = star_query(8), star_ghd(8)
+    skewed = star_data_heavy(8, hub_rows=64, heavy_share=0.8, seed=5)
+    uniform = star_data_sparse(8, seed=21)
+    from repro.core.optimizer import stats_from_data
+
+    for data, want_engine in ((skewed, "hybrid"), (uniform, "hash")):
+        stats = stats_from_data(q, data)
+        skew = skew_from_data(q, data)
+        plan = choose_plan(
+            q, stats, profile=MachineProfile(p=8), hand_ghd=g, skew=skew
+        )
+        assert plan.engine == want_engine, (want_engine, plan.key, skew)
+
+
+def test_skew_share_statistic():
+    assert skew_share(np.zeros((0, 2))) == 0.0
+    rows = np.array([[0, 1], [0, 2], [0, 3], [1, 4]])
+    assert skew_share(rows) == pytest.approx(0.75)  # column A: 3/4 zeros
+    rng = np.random.default_rng(0)
+    z = zipf_values(rng, 1000, 32, 1.1)
+    u = zipf_values(rng, 1000, 32, 0.0)
+    share_z = np.bincount(z).max() / 1000
+    share_u = np.bincount(u).max() / 1000
+    assert share_z > 3 * share_u  # zipf plants a real heavy hitter
+
+
+# -------------------------------------------------- hypothesis property
+@pytest.mark.slow
+def test_hybrid_join_property_matches_hash():
+    """Property pin: random tables with random planted duplication — the
+    hybrid join's row set always equals the hash join's, drops nothing,
+    at any skew threshold."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        rows=st.integers(1, 24),
+        dom=st.integers(1, 8),
+        heavy=st.integers(0, 20),
+        thresh=st.sampled_from([1.5, 3.0, 6.0]),
+    )
+    def prop(seed, rows, dom, heavy, thresh):
+        rng = np.random.default_rng(seed)
+        spmd = SPMD(4)
+        a_rows = np.stack(
+            [
+                rng.integers(0, 64, rows + heavy),
+                np.concatenate(
+                    [rng.integers(0, dom, rows), np.zeros(heavy, int)]
+                ),
+            ],
+            1,
+        )
+        b_rows = np.stack(
+            [rng.integers(0, dom, rows), rng.integers(0, 5, rows)], 1
+        )
+        a = mk(np.unique(a_rows.astype(np.int32), axis=0), ("A", "B"), cap=16)
+        b = mk(np.unique(b_rows.astype(np.int32), axis=0), ("B", "C"), cap=16)
+        ref, _ = dist_join(spmd, a, b, seed=seed & 0xFFFF, out_cap=512)
+        hyb, st_h = dist_join_hybrid(
+            spmd, a, b, seed=seed & 0xFFFF, out_cap=512, skew_threshold=thresh
+        )
+        assert hyb.to_set() == ref.to_set()
+        assert st_h["dropped"] == 0
+
+    prop()
