@@ -7,7 +7,20 @@ The acceptance bar this bench enforces:
 - results are bit-identical (rows, ``comm_tuples``) across the two modes;
 - measured ``padded_slots`` drops >= 2x with calibration;
 - the families complete with ZERO abort-retries when the count pre-pass
-  is enabled (blown capacities are pre-floored from measured counts).
+  is enabled (blown capacities are pre-floored from measured counts);
+- dispatch economics: amortized calibration (combined per-stage count
+  dispatch with the join output count fused in, cross-round caps cache,
+  prefetch overlap) makes the calibrated mode at most as slow as fixed
+  on wall-clock, with at most one measure dispatch per claimed round.
+
+Timing methodology: each (family, mode) pair runs twice on one shared
+``SPMD`` — the first run compiles every XLA program (reported as
+``cold_secs``), the second reuses them and its wall time is the
+``secs`` the guards compare.  The paper's cost model prices rounds and
+communication, not XLA compilation; steady-state is where dispatch
+economics are visible (a calibrated run launches tiny count programs
+but ships ~5x fewer padded cells, which one-time compile cost would
+otherwise drown out on the CPU simulator).
 
 Besides printing JSON rows, the run writes ``BENCH_shuffle.json`` at the
 repo root — the persistent perf trajectory (wall time, comm, padded
@@ -22,7 +35,8 @@ import json
 import os
 import time
 
-from repro.core.gym import GymConfig, gym
+from repro.core.gym import GymConfig, GymDriver, gym
+from repro.relational.spmd import SPMD
 from repro.core.queries import (
     chain_ghd,
     chain_query,
@@ -65,10 +79,15 @@ FAMILIES = {
 
 def _one(q, g, data, *, calibrate: bool, p: int = 8):
     cfg = GymConfig(strategy="hash", seed=23, calibrate_shuffle=calibrate)
+    spmd = SPMD(p)
     t0 = time.time()
-    rows, _, led = gym(q, data, ghd=g, p=p, config=cfg)
+    GymDriver(q, g, data, spmd, cfg).run()  # compile warmup (cold run)
+    cold = time.time() - t0
+    t0 = time.time()
+    drv = GymDriver(q, g, data, spmd, cfg)  # steady state: programs warm
+    rows = drv.run().to_numpy()
     secs = time.time() - t0
-    return rows, led, secs
+    return rows, drv.ledger, secs, cold
 
 
 def run() -> list:
@@ -80,20 +99,23 @@ def run() -> list:
         q, g, data = FAMILIES[name]()
         res = {}
         for calibrate in (False, True):
-            rows, led, secs = _one(q, g, data, calibrate=calibrate)
+            rows, led, secs, cold = _one(q, g, data, calibrate=calibrate)
             res[calibrate] = (rows, led)
             rec = dict(
                 bench="shuffle",
                 query=name,
                 engine="hash",
                 mode="calibrated" if calibrate else "fixed",
-                secs=round(secs, 2),
+                secs=round(secs, 3),
+                cold_secs=round(cold, 2),
                 comm_tuples=led.comm_tuples,
                 shuffle_tuples=led.shuffle_tuples,
                 padded_slots=led.padded_slots,
                 payload_efficiency=round(led.payload_efficiency, 4),
                 retries=led.retries,
                 dispatches=led.measured_dispatches,
+                measure_dispatches=led.measure_dispatches,
+                payload_dispatches=led.payload_dispatches,
                 rounds_claimed=led.rounds,
                 output_tuples=led.output_tuples,
             )
@@ -112,6 +134,18 @@ def run() -> list:
         )
         # acceptance: the count pre-pass pre-floors every blown capacity
         assert led_c.retries == 0, (name, led_c.retries)
+        # acceptance: amortization pays for the pre-pass — calibrated
+        # never loses the wall clock to fixed ...
+        secs_f = next(r["secs"] for r in out
+                      if r["query"] == name and r["mode"] == "fixed")
+        secs_c = next(r["secs"] for r in out
+                      if r["query"] == name and r["mode"] == "calibrated")
+        assert secs_c <= secs_f, (name, secs_c, secs_f)
+        # ... and batching + caching keep the measure traffic at no more
+        # than one count dispatch per claimed round
+        assert led_c.measure_dispatches <= led_c.rounds, (
+            name, led_c.measure_dispatches, led_c.rounds,
+        )
     path = OUT_PATH if not only else PARTIAL_PATH
     with open(path, "w") as f:
         json.dump(

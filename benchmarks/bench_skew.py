@@ -116,6 +116,8 @@ def run() -> list:
                 payload_efficiency=round(led.payload_efficiency, 4),
                 retries=led.retries,
                 dispatches=led.measured_dispatches,
+                measure_dispatches=led.measure_dispatches,
+                payload_dispatches=led.payload_dispatches,
             )
             out.append(rec)
             trajectory.append(rec)

@@ -169,6 +169,15 @@ def shuffle_pad_factor(p: int, calibrated: bool) -> float:
     return 2.0 if calibrated else 2.0 * float(max(1, p))
 
 
+# Wire-slot-equivalent price of ONE extra program dispatch (launch latency
+# + compile-cache probe + the host sync a measure implies), used by
+# ``predict_plan_cost`` to reprice calibration: the count pre-pass buys a
+# ~p-fold pad reduction but costs measure dispatches, and on small inputs
+# the dispatches dominate.  Fit loosely to the shuffle benchmarks (an
+# extra dispatch costs on the order of a few-thousand-slot exchange).
+DEFAULT_DISPATCH_OVERHEAD_SLOTS = 2048.0
+
+
 def grid_replication(p: int, w: int = 2) -> float:
     """Per-tuple replication of a w-way grid op on p reducers: each
     relation is sent to p^((w-1)/w) grid cells (Lemma 8's g_i sizing).
@@ -305,6 +314,9 @@ def predict_plan_cost(
     calibrate_shuffle: bool = True,
     alias_skew: Optional[Mapping[str, float]] = None,
     skew_threshold: Optional[float] = None,
+    dispatch_overhead: float = 0.0,
+    dispatches: float = 0.0,
+    measure_dispatches: float = 0.0,
 ) -> Dict[str, float]:
     """Walk one planner schedule op-by-op and price it under ``engine``
     on a p-shard SPMD.
@@ -321,9 +333,14 @@ def predict_plan_cost(
       semijoin stages claim 2 rounds each, per Lemma 10);
     - ``wire`` = predicted SLOTS shipped: the shuffled volume inflated by
       ``shuffle_pad_factor`` (fixed capacities pad ~p x; the
-      count-calibrated pre-pass pads < 2x) plus the un-padded output.
-      This is what the advisor ranks by — the wire carries slots, not
-      the paper's useful tuples.
+      count-calibrated pre-pass pads < 2x) plus the un-padded output,
+      plus — when ``dispatch_overhead`` > 0 — a slot-equivalent charge of
+      ``dispatch_overhead * (dispatches + measure_dispatches)`` pricing
+      program-launch latency.  This is how calibrated-vs-fixed becomes a
+      per-query decision: calibration shrinks the pad factor but adds
+      measure dispatches, and tiny inputs can lose the trade.  This is
+      what the advisor ranks by — the wire carries slots, not the
+      paper's useful tuples.
 
     Node sizes evolve under the matching-database assumption
     (``join_size_estimate``); semijoins never grow a table, so sizes are
@@ -429,12 +446,17 @@ def predict_plan_cost(
     # written compacted, so it rides un-inflated (same calibration scale
     # as ``comm`` so the two stay comparable)
     wire = shuffled * shuffle_pad_factor(p, calibrate_shuffle) + (comm - shuffled)
+    overhead = float(dispatch_overhead) * (
+        float(dispatches) + float(measure_dispatches)
+    )
+    wire += overhead
     return {
         "comm": comm,
         "rounds": float(claimed),
         "ops": float(n_ops),
         "out_est": out_est,
         "wire": wire,
+        "dispatch_overhead": overhead,
     }
 
 

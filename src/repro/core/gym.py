@@ -58,6 +58,14 @@ class GymConfig:
     # shipping worst-case-padded all_to_all buffers.  The 'hybrid' engine
     # needs the pre-pass to route and forces it on regardless of this knob.
     calibrate_shuffle: bool = True
+    # amortized calibration (only meaningful when calibrating): carry
+    # measured exchange capacities across rounds in a signature-keyed cache
+    # (re-measure on watermark drift; stale caps are caught by the payload
+    # drop counters and fall back to abort-retry), and launch the next
+    # round's combined count pre-pass behind the current round's payload
+    # dispatches (JAX async dispatch overlap)
+    caps_cache: bool = True
+    prefetch_measures: bool = True
     local_backend: str = "jnp"  # shard-local hot loops: 'jnp' | 'pallas'
     # heavy-hitter sensitivity: a destination is heavy when its measured
     # arrival exceeds this multiple of the balanced share ceil(total/p)
@@ -103,6 +111,7 @@ class GymDriver:
                 rows = np.unique(rows, axis=0)
             dedup_rows[atom.alias] = rows
         if plan is None and self.config.plan == "auto":
+            from .costs import DEFAULT_DISPATCH_OVERHEAD_SLOTS
             from .optimizer import MachineProfile, choose_plan, skew_share
 
             stats = {
@@ -117,12 +126,20 @@ class GymDriver:
             plan = choose_plan(
                 query,
                 stats,
-                profile=MachineProfile(p=spmd.p),
+                # auto mode also decides the capacity policy per query:
+                # calibrated plans pay their predicted measure dispatches
+                # at the dispatch-overhead price, fixed plans pay the
+                # ~p-fold pad factor — whichever ships fewer wire slots
+                profile=MachineProfile(
+                    p=spmd.p,
+                    dispatch_overhead=DEFAULT_DISPATCH_OVERHEAD_SLOTS,
+                ),
                 hand_ghd=ghd,
                 local_backend=self.config.local_backend,
                 calibrate_shuffle=self.config.calibrate_shuffle,
                 skew=skew,
                 skew_threshold=self.config.skew_threshold,
+                calibrate_options=(True, False),
             )
         self.plan = plan
         if plan is not None:
@@ -197,6 +214,8 @@ class GymDriver:
                 count_retries_comm=cfg.count_retries_comm,
                 calibrate=cfg.calibrate_shuffle,
                 skew_threshold=cfg.skew_threshold,
+                caps_cache=cfg.caps_cache,
+                prefetch=cfg.prefetch_measures,
             )
         return PhysicalExecutor(
             self.spmd,
@@ -209,6 +228,8 @@ class GymDriver:
             calibrate=cfg.calibrate_shuffle,
             local_backend=cfg.local_backend,
             skew_threshold=cfg.skew_threshold,
+            caps_cache=cfg.caps_cache,
+            prefetch=cfg.prefetch_measures,
         )
 
     # caps live in the capacity manager; kept as a property for snapshots
@@ -234,12 +255,20 @@ class GymDriver:
         if self.done:
             return False
         if self.cursor < 0:
-            tables, comm, padded, heavy, claimed, dispatches = (
-                self.executor.materialize(
-                    self.ghd, self.base, self.node_schema, self.ledger
-                )
+            (
+                tables, comm, padded, heavy, claimed, dispatches,
+                measure_dispatches,
+            ) = self.executor.materialize(
+                self.ghd, self.base, self.node_schema, self.ledger
             )
             self.tables = tables
+            # overlap: the first DYM round's combined count pre-pass rides
+            # behind materialization's trailing payload work (async)
+            self.executor.prefetch_round(
+                self.schedule[0] if self.schedule else None,
+                self.tables,
+                self.acc,
+            )
             self.ledger.add_round(
                 "materialize",
                 [f"IDB({v})<=lam{sorted(self.ghd.lam[v])}" for v in self.ghd.nodes()],
@@ -248,6 +277,7 @@ class GymDriver:
                 dispatches=dispatches,
                 padded=padded,
                 heavy=heavy,
+                measure_dispatches=measure_dispatches,
             )
             self.cursor = 0
             return True
@@ -255,11 +285,18 @@ class GymDriver:
             self._finish()
             return False
         rnd = self.schedule[self.cursor]
-        new_tab, new_acc, comm, padded, heavy, claimed, dispatches = (
-            self.executor.execute_round(rnd, self.tables, self.acc, self.ledger)
-        )
+        (
+            new_tab, new_acc, comm, padded, heavy, claimed, dispatches,
+            measure_dispatches,
+        ) = self.executor.execute_round(rnd, self.tables, self.acc, self.ledger)
         self.tables = {**self.tables, **new_tab}
         self.acc = {**self.acc, **new_acc}
+        nxt = self.cursor + 1
+        self.executor.prefetch_round(
+            self.schedule[nxt] if nxt < len(self.schedule) else None,
+            self.tables,
+            self.acc,
+        )
         self.ledger.add_round(
             rnd.phase,
             [repr(o) for o in rnd.ops],
@@ -268,6 +305,7 @@ class GymDriver:
             dispatches=dispatches,
             padded=padded,
             heavy=heavy,
+            measure_dispatches=measure_dispatches,
         )
         self.cursor += 1
         if self.cursor >= len(self.schedule):
@@ -313,6 +351,10 @@ class GymDriver:
             "schemas": {str(k): list(t.schema) for k, t in self.tables.items()},
             "acc_schemas": {str(k): list(t.schema) for k, t in self.acc.items()},
         }
+        if self.executor.caps_cache is not None:
+            # keep the amortization warm across resume: the restored run's
+            # first round hits these entries instead of re-measuring
+            meta["caps_cache"] = self.executor.caps_cache.to_json()
         for k, t in self.tables.items():
             arrays[f"data_{k}"] = np.asarray(t.data)
             arrays[f"valid_{k}"] = np.asarray(t.valid)
@@ -353,6 +395,11 @@ class GymDriver:
             self.capman.max_cap = self._max_cap()
             self.executor = self._make_executor()
             self.schedule = get_schedule(self.config.schedule).fn(self.ghd)
+        # any in-flight prefetched measure belongs to the pre-snapshot
+        # timeline; the restored state must start clean
+        self.executor._pending = None
+        if "caps_cache" in meta and self.executor.caps_cache is not None:
+            self.executor.caps_cache.load_json(meta["caps_cache"])
         self.caps = {int(k): v for k, v in meta["caps"].items()}
         led = Ledger()
         from ..relational.ledger import RoundRecord

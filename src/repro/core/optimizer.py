@@ -74,6 +74,12 @@ class MachineProfile:
 
     p: int = 4
     M: Optional[float] = None
+    # wire-slot-equivalent price of one program dispatch (see
+    # ``costs.DEFAULT_DISPATCH_OVERHEAD_SLOTS``); 0 keeps the classic
+    # pure-volume ranking.  Nonzero lets the advisor charge the count
+    # pre-pass for its dispatches and decide calibrated-vs-fixed per
+    # query (``enumerate_plans(calibrate_options=...)``).
+    dispatch_overhead: float = 0.0
 
     def memory(self, total_input: float) -> float:
         if self.M is not None:
@@ -164,6 +170,14 @@ class Plan:
     predicted_dispatches: float
     out_est: float
     calibrated: bool
+    # the shuffle capacity policy this plan was priced under, when the
+    # enumeration competed calibrated against fixed
+    # (``calibrate_options``); None = the policy wasn't part of the
+    # decision and the executing config's own knob stands.
+    calibrate_shuffle: Optional[bool] = None
+    # predicted count-pre-pass dispatches under amortized calibration
+    # (0 for fixed-capacity plans)
+    predicted_measure_dispatches: float = 0.0
 
     def to_config(self, base=None):
         """A ``GymConfig`` with this plan's choices applied (engine,
@@ -172,7 +186,7 @@ class Plan:
         from .gym import GymConfig
 
         base = base if base is not None else GymConfig()
-        return dataclasses.replace(
+        cfg = dataclasses.replace(
             base,
             strategy=self.engine,
             schedule=self.schedule,
@@ -180,6 +194,11 @@ class Plan:
             local_backend=self.local_backend,
             plan=self.key,
         )
+        if self.calibrate_shuffle is not None:
+            cfg = dataclasses.replace(
+                cfg, calibrate_shuffle=self.calibrate_shuffle
+            )
+        return cfg
 
 
 def _plan_order(p: Plan) -> Tuple:
@@ -266,6 +285,32 @@ def _predicted_dispatches(rounds: Sequence[Round], fused: bool) -> float:
     return total
 
 
+def _predicted_measure_dispatches(rounds: Sequence[Round]) -> float:
+    """Count-pre-pass dispatch estimate under AMORTIZED calibration: a
+    stage shape pays one combined count dispatch (plus one fused
+    keys-only output pre-count when it joins) the FIRST time it appears
+    in a phase; repeats of the same shape hit the cross-round
+    ``CapsCache`` for free.  Materialization's own measure counts one.
+    Mirrors ``physical.PhysicalExecutor._measure_stage`` the way
+    ``_predicted_dispatches`` mirrors the payload schedule."""
+    total = 1.0  # materialization measure
+    seen: set = set()
+    for rnd in rounds:
+        per_stage: Dict[int, set] = {}
+        for op in rnd.ops:
+            for i, (sk, _n) in enumerate(OP_STAGES[op.kind]):
+                per_stage.setdefault(i, set()).add(sk)
+        for i, kinds in per_stage.items():
+            sig = (rnd.phase, i, frozenset(kinds))
+            if sig in seen:
+                continue
+            seen.add(sig)
+            total += 1.0
+            if "join" in kinds:
+                total += 1.0  # the fused join-output count pass
+    return total
+
+
 def enumerate_plans(
     query: Query,
     stats: Mapping[str, int],
@@ -280,13 +325,24 @@ def enumerate_plans(
     calibrate_shuffle: bool = True,
     skew: Optional[Mapping[str, float]] = None,
     skew_threshold: Optional[float] = None,
+    calibrate_options: Optional[Sequence[bool]] = None,
 ) -> List[Plan]:
     """Score every candidate plan; returns them best-first (by predicted
     wire slots under the given shuffle mode, see ``_plan_order``).
 
     ``skew`` maps relation names to their max single-key share
     (``skew_from_data``); without it every engine prices at balanced
-    load and hybrid ties with hash (hash wins the tie by key order)."""
+    load and hybrid ties with hash (hash wins the tie by key order).
+
+    ``calibrate_options``: None (default) prices every plan under the
+    single ``calibrate_shuffle`` mode and leaves the executing config's
+    knob alone.  A sequence like ``(True, False)`` makes the capacity
+    policy part of the decision: each candidate is scored per mode
+    (key suffix ``|cal`` / ``|fixed``), the calibrated variant paying
+    its predicted measure dispatches at ``profile.dispatch_overhead``
+    wire slots each, the fixed variant paying the ~p-fold pad factor.
+    The hybrid engine requires the pre-pass and never enumerates
+    ``|fixed``."""
     profile = profile or MachineProfile()
     schedules = tuple(schedules) if schedules is not None else tuple(sorted(SCHEDULES))
     alias_sizes = {a.alias: float(stats[a.rel]) for a in query.atoms}
@@ -301,38 +357,59 @@ def enumerate_plans(
         iw = g.intersection_width(query)
         for sched in schedules:
             rounds = get_schedule(sched).fn(g)
+            meas_est = _predicted_measure_dispatches(rounds)
             for engine in engines:
-                cost = predict_plan_cost(
-                    query, g, rounds, engine, alias_sizes, profile.p, calibration,
-                    calibrate_shuffle=calibrate_shuffle,
-                    alias_skew=alias_skew,
-                    skew_threshold=skew_threshold,
-                )
+                if calibrate_options is None:
+                    modes: List[Tuple[bool, str]] = [(calibrate_shuffle, "")]
+                else:
+                    modes = [
+                        (bool(m), "|cal" if m else "|fixed")
+                        for m in calibrate_options
+                        # data-dependent routing NEEDS the pre-pass: the
+                        # executor would force it back on anyway
+                        if m or engine != "hybrid"
+                    ]
                 for fused in fused_options:
-                    plans.append(
-                        Plan(
-                            key=f"{source}|{sched}|{engine}|"
-                            + ("fused" if fused else "seq"),
-                            ghd_source=source,
-                            schedule=sched,
-                            engine=engine,
-                            fused=fused,
-                            local_backend=local_backend,
-                            ghd=g,
-                            width=width,
-                            depth=depth,
-                            iw=iw,
-                            nodes=nodes,
-                            predicted_comm=cost["comm"],
-                            predicted_wire=cost["wire"],
-                            predicted_rounds=cost["rounds"],
-                            predicted_dispatches=_predicted_dispatches(
-                                rounds, fused
-                            ),
-                            out_est=cost["out_est"],
-                            calibrated=calibration is not None,
+                    disp = _predicted_dispatches(rounds, fused)
+                    for mode, suffix in modes:
+                        meas = meas_est if mode else 0.0
+                        cost = predict_plan_cost(
+                            query, g, rounds, engine, alias_sizes,
+                            profile.p, calibration,
+                            calibrate_shuffle=mode,
+                            alias_skew=alias_skew,
+                            skew_threshold=skew_threshold,
+                            dispatch_overhead=profile.dispatch_overhead,
+                            dispatches=disp,
+                            measure_dispatches=meas,
                         )
-                    )
+                        plans.append(
+                            Plan(
+                                key=f"{source}|{sched}|{engine}|"
+                                + ("fused" if fused else "seq")
+                                + suffix,
+                                ghd_source=source,
+                                schedule=sched,
+                                engine=engine,
+                                fused=fused,
+                                local_backend=local_backend,
+                                ghd=g,
+                                width=width,
+                                depth=depth,
+                                iw=iw,
+                                nodes=nodes,
+                                predicted_comm=cost["comm"],
+                                predicted_wire=cost["wire"],
+                                predicted_rounds=cost["rounds"],
+                                predicted_dispatches=disp,
+                                out_est=cost["out_est"],
+                                calibrated=calibration is not None,
+                                calibrate_shuffle=(
+                                    None if calibrate_options is None else mode
+                                ),
+                                predicted_measure_dispatches=meas,
+                            )
+                        )
     plans.sort(key=_plan_order)
     return plans
 
@@ -348,6 +425,7 @@ def choose_plan(
     calibrate_shuffle: bool = True,
     skew: Optional[Mapping[str, float]] = None,
     skew_threshold: Optional[float] = None,
+    calibrate_options: Optional[Sequence[bool]] = None,
 ) -> Plan:
     """The advisor's decision: argmin over the candidate plans by
     (predicted wire slots under the configured shuffle mode, calibrated
@@ -355,7 +433,10 @@ def choose_plan(
     execution's ``GymConfig.calibrate_shuffle`` so the pad factor the
     ranking uses matches the shuffle the plan will actually run on, and
     ``skew`` (``skew_from_data``) so skewed instances price hash by its
-    hot reducer and steer to the hybrid engine."""
+    hot reducer and steer to the hybrid engine.  ``calibrate_options``
+    (e.g. ``(True, False)`` with a nonzero ``profile.dispatch_overhead``)
+    additionally lets the advisor decide per query whether the count
+    pre-pass pays for itself (see ``enumerate_plans``)."""
     plans = enumerate_plans(
         query,
         stats,
@@ -366,6 +447,7 @@ def choose_plan(
         calibrate_shuffle=calibrate_shuffle,
         skew=skew,
         skew_threshold=skew_threshold,
+        calibrate_options=calibrate_options,
     )
     assert plans, "no executable plan candidates"
     return plans[0]

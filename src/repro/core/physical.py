@@ -30,15 +30,23 @@ overflow, and — for blown joins — an EXACT key-only counting dispatch
 true output size instead of guessing upward by powers of the growth
 factor.
 
-Occupancy-adaptive shuffle (``calibrate=True``, the default): before each
-group's payload dispatch, the engine runs ONE count-only pre-pass
-(``relational.batched.measure_*`` — a (p,)-int ``all_to_all`` of bucket
-counts) and the group executes with tight pow2 send/receive capacities
+Occupancy-adaptive shuffle (``calibrate=True``, the default): a count-only
+pre-pass (``relational.batched`` — a (p,)-int ``all_to_all`` of bucket
+counts) sizes every exchange with tight pow2 send/receive capacities
 instead of the global worst case.  Capacities stay pow2-bucketed
 (``SideCaps``), so calibrated programs are reused across rounds with
 different occupancies; when the measured arrival (or, for hash joins, the
 exact pre-counted output) exceeds a managed capacity, the capacity is
 pre-floored and the round that would have aborted never does.
+
+Amortized calibration makes the pre-pass ~free: every measuring group of
+a stage shares ONE combined count dispatch (``RoundCounts``), measured
+capacities persist across rounds in a ``CapsCache`` keyed by group
+signature (re-measuring only on watermark drift or overflow), and the
+next round's combined pre-pass is PREFETCHED behind the current round's
+payload dispatches (JAX async dispatch).  The ledger splits
+``measure_dispatches`` from payload dispatches so the calibration policy
+and the schedule are priced separately.
 
 The ledger records what a round *claims* under the BSP model
 (``n_rounds``), what the engine *measured* (``dispatches``, counted at
@@ -55,6 +63,7 @@ from ..relational import grid as G
 from ..relational import ops as R
 from ..relational.batched import GroupMeasure
 from ..relational.ledger import Ledger
+from .caps_cache import CapsCache
 from ..relational.shuffle import pow2
 from ..relational.skew import DEFAULT_SKEW_THRESHOLD
 from ..relational.spmd import SPMD
@@ -149,6 +158,44 @@ class Engine:
             )
         return None
 
+    # -- combined round-level pre-pass (amortized calibration) -------------
+    # whether this strategy's pair measures may re-route under the hybrid
+    # heavy-hitter exchange (drives ``measure_finish``'s re-measure)
+    hybrid_measure = False
+
+    def measure_spec(self, kind: str, lhs, rhs, seeds) -> Optional["B.MeasureSpec"]:
+        """Build this group's slice of the round's COMBINED count
+        pre-pass (``relational.batched.RoundCounts``) — stacking only, no
+        dispatch; the executor fuses every group's slice into ONE count
+        dispatch per round stage.  None = kind not measurable here (the
+        executor falls back to the per-group ``measure_group``)."""
+        if kind == "intersect":
+            return B.pair_measure_spec(
+                self.spmd, lhs, rhs,
+                [tuple(range(a.arity)) for a in lhs],
+                [b.cols(a.schema) for a, b in zip(lhs, rhs)],
+                seeds, dedup_b=False,
+            )
+        if kind == "dedup":
+            return B.single_measure_spec(self.spmd, lhs, seeds)
+        return None
+
+    def measure_finish(
+        self, kind: str, lhs, rhs, seeds, m: GroupMeasure
+    ) -> GroupMeasure:
+        """Engine-specific tail applied to a combined-pass slice — the
+        host-side post that ``measure_*_many`` used to run inline (plus,
+        for hybrid strategies, the rare skew-triggered re-measure)."""
+        if kind == "intersect":
+            return dataclasses.replace(m, out_recv=m.lhs.cap_recv)
+        return m  # dedup slices already carry out_recv
+
+    def measure_needs_join_count(self, kind: str) -> bool:
+        """Whether groups of ``kind`` need the fused keys-only join
+        output count (``relational.batched.join_need_many``) after their
+        capacities are calibrated."""
+        return False
+
     # -- per-kind batched ops ----------------------------------------------
     def semijoin_many(
         self, ss, rs, cap: int, seeds, xcaps: Optional[GroupMeasure] = None
@@ -182,12 +229,40 @@ class Engine:
         )
         return outs, stats, 1
 
-    # -- materialization (unbatched; one-time per query) -------------------
-    def multijoin(self, parts: List[DTable], cap: int, seed: int, calibrate=False):
+    # -- materialization (one-time per query) ------------------------------
+    def _multijoin_grid(self, parts: List[DTable]) -> bool:
+        """Whether ``multijoin`` would take the grid path for these parts
+        (those pre-passes batch across vertices; engine-specific paths
+        like the hash engine's 2-way join measure on their own)."""
+        return len(parts) >= 2
+
+    def multijoin_measure_batch(self, parts_list, seeds):
+        """Phase A of materialization: resolve the grid-path multijoin
+        calibrations for every multi-atom vertex with at most ONE
+        combined count dispatch (``grid_multiway_count``), mirroring the
+        round executor's per-stage combined pre-pass.  ``seeds`` are the
+        vertices' payload seeds (position grids ignore them; hash-path
+        engines count with the routing seed the payload will use).
+        Returns {vertex_index: (cal, count_pad)} for ``multijoin(cal=...)``."""
+        idx = [
+            i for i, ps in enumerate(parts_list)
+            if len(ps) >= 2 and self._multijoin_grid(ps)
+        ]
+        if not idx:
+            return {}
+        cals, pads = G.grid_multiway_count(
+            self.spmd, [parts_list[i] for i in idx]
+        )
+        return {i: (c, pad) for i, c, pad in zip(idx, cals, pads)}
+
+    def multijoin(
+        self, parts: List[DTable], cap: int, seed: int, calibrate=False,
+        cal=None,
+    ):
         if len(parts) == 1:
             return parts[0], {"sent": 0, "dropped": 0, "padded": 0}, 0
         out, st = G.grid_multiway_join(
-            self.spmd, parts, out_cap=cap, calibrate=calibrate,
+            self.spmd, parts, out_cap=cap, calibrate=calibrate, cals=cal,
             backend=self.local_backend,
         )
         return out, st, 1
@@ -216,6 +291,52 @@ class HashEngine(Engine):
             )
         return Engine.measure_group(self, kind, lhs, rhs, seeds)
 
+    def measure_spec(self, kind, lhs, rhs, seeds):
+        if kind in ("semijoin", "join"):
+            shareds = [
+                [x for x in a.schema if x in b.schema]
+                for a, b in zip(lhs, rhs)
+            ]
+            a_keys = [a.cols(sh) for a, sh in zip(lhs, shareds)]
+            b_keys = [b.cols(sh) for b, sh in zip(rhs, shareds)]
+            if kind == "join":
+                # fuse the output pre-count into the same dispatch; the
+                # hashed-key exchanges ride at a static guess (4x the
+                # uniform per-destination share) that the counts verify
+                # post hoc — see join_pair_measure_spec
+                return B.join_pair_measure_spec(
+                    self.spmd, lhs, rhs, a_keys, b_keys, seeds,
+                    g_a=self._keys_guess(lhs[0].cap),
+                    g_b=self._keys_guess(rhs[0].cap),
+                    skew_threshold=self.skew_threshold,
+                )
+            return B.pair_measure_spec(
+                self.spmd, lhs, rhs, a_keys, b_keys,
+                seeds, dedup_b=True,
+                skew_threshold=self.skew_threshold,
+            )
+        return Engine.measure_spec(self, kind, lhs, rhs, seeds)
+
+    def _keys_guess(self, cap: int) -> int:
+        per = -(-cap // self.spmd.p)  # ceil: the uniform share
+        return pow2(min(cap, max(8, 4 * per)))
+
+    def measure_finish(self, kind, lhs, rhs, seeds, m):
+        if kind == "semijoin":
+            return B.finish_semijoin_measure(
+                self.spmd, lhs, rhs, seeds, m,
+                hybrid=self.hybrid_measure, backend=self.local_backend,
+            )
+        if kind == "join":
+            return B.hybridize_join_measure(
+                self.spmd, lhs, rhs, seeds, m,
+                hybrid=self.hybrid_measure, backend=self.local_backend,
+            )
+        return Engine.measure_finish(self, kind, lhs, rhs, seeds, m)
+
+    def measure_needs_join_count(self, kind):
+        return kind == "join"
+
     def semijoin_many(self, ss, rs, cap, seeds, xcaps=None):
         kw = {}
         if xcaps is not None:
@@ -241,14 +362,55 @@ class HashEngine(Engine):
         )
         return outs, stats, 1
 
-    def multijoin(self, parts, cap, seed, calibrate=False):
+    def _multijoin_grid(self, parts):
+        return len(parts) != 2  # 2-way takes the hash path below
+
+    def multijoin_measure_batch(self, parts_list, seeds):
+        """Grid-path vertices batch as in ``Engine``; the hash-path 2-way
+        vertices batch their pair-exchange counts into one further
+        combined dispatch (``measure_exchange_pairs``) — a whole
+        materialization stage of 2-way bags pays a single pre-pass
+        instead of one ``dist_join`` count each."""
+        cal_map = Engine.multijoin_measure_batch(self, parts_list, seeds)
+        pidx = [
+            i for i, ps in enumerate(parts_list)
+            if len(ps) == 2
+            and [x for x in ps[0].schema if x in ps[1].schema]
+        ]
+        if pidx:
+            res = R.measure_exchange_pairs(
+                self.spmd,
+                [
+                    (
+                        parts_list[i][0],
+                        parts_list[i][1],
+                        [x for x in parts_list[i][0].schema
+                         if x in parts_list[i][1].schema],
+                        [x for x in parts_list[i][0].schema
+                         if x in parts_list[i][1].schema],
+                        seeds[i],
+                        (False, False),
+                    )
+                    for i in pidx
+                ],
+                backend=self.local_backend,
+            )
+            pad = 2 * self.spmd.p * self.spmd.p  # two (p,)-int vectors
+            for i, cal in zip(pidx, res):
+                cal_map[i] = (cal, pad)
+        return cal_map
+
+    def multijoin(self, parts, cap, seed, calibrate=False, cal=None):
         if len(parts) == 2:
+            kw = {}
+            if cal is not None:
+                kw["c_out"], kw["cap_recv"] = cal
             out, st = R.dist_join(
                 self.spmd, parts[0], parts[1], seed=seed, out_cap=cap,
-                calibrate=calibrate, backend=self.local_backend,
+                calibrate=calibrate, backend=self.local_backend, **kw,
             )
             return out, st, 1
-        return Engine.multijoin(self, parts, cap, seed, calibrate)
+        return Engine.multijoin(self, parts, cap, seed, calibrate, cal)
 
 
 @register_engine("hybrid")
@@ -265,6 +427,7 @@ class HybridEngine(HashEngine):
     even when the config disables the calibrated shuffle."""
 
     requires_measure = True
+    hybrid_measure = True
     # abort-retry pre-sizing stays valid: blown joins only happen on
     # hash-routed (no-heavy) groups — hybrid-routed groups pre-floor the
     # exact spread output from the measure — and there dist_join_count's
@@ -307,14 +470,20 @@ class HybridEngine(HashEngine):
         )
         return outs, stats, 1
 
-    def multijoin(self, parts, cap, seed, calibrate=False):
+    def multijoin_measure_batch(self, parts_list, seeds):
+        # 2-way bags take dist_join_hybrid, whose heavy-hitter routing
+        # needs its own per-destination flags — only the grid-path
+        # vertices batch here
+        return Engine.multijoin_measure_batch(self, parts_list, seeds)
+
+    def multijoin(self, parts, cap, seed, calibrate=False, cal=None):
         if len(parts) == 2:
             out, st = R.dist_join_hybrid(
                 self.spmd, parts[0], parts[1], seed=seed, out_cap=cap,
                 skew_threshold=self.skew_threshold, backend=self.local_backend,
             )
             return out, st, 1
-        return Engine.multijoin(self, parts, cap, seed, calibrate)
+        return Engine.multijoin(self, parts, cap, seed, calibrate, cal)
 
 
 @register_engine("grid")
@@ -331,6 +500,13 @@ class GridEngine(Engine):
                 self.spmd, lhs, rhs, backend=self.local_backend
             )
         return Engine.measure_group(self, kind, lhs, rhs, seeds)
+
+    def measure_spec(self, kind, lhs, rhs, seeds):
+        if kind == "semijoin":
+            return B.grid_rkeys_measure_spec(self.spmd, lhs, rhs)
+        if kind == "join":
+            return B.grid_pair_measure_spec(self.spmd, lhs, rhs)
+        return Engine.measure_spec(self, kind, lhs, rhs, seeds)
 
     def semijoin_many(self, ss, rs, cap, seeds, xcaps=None):
         kw = {}
@@ -591,13 +767,23 @@ class PhysicalExecutor:
     programs), which is what the parity tests assert and what makes the
     dispatch-count comparison in ``bench_fusion`` apples-to-apples.
 
-    ``calibrate=True`` (the default, ``GymConfig.calibrate_shuffle``): each
-    group's payload dispatch is preceded by one count-only pre-pass that
-    picks tight pow2 exchange capacities and pre-floors managed capacities
-    the measurement proves too small (``CapacityManager.floor``) — rows,
-    ``comm_tuples``, and retries stay bit-identical to the fixed-capacity
-    path whenever that path would not have aborted, while the wire ships
-    calibrated buckets (``padded_slots`` drops by ~p)."""
+    ``calibrate=True`` (the default, ``GymConfig.calibrate_shuffle``):
+    rounds run a two-phase measure→dispatch schedule.  Phase A resolves
+    every group's capacities — from the ``CapsCache`` (signatures measured
+    in an earlier round whose observed fill stayed inside the watermark
+    band), from the PREFETCHED combined count pre-pass (launched while the
+    previous round's payloads were still in flight), or from ONE fresh
+    combined count dispatch covering all remaining groups of the stage
+    (plus one fused keys-only pass pre-counting every join group's
+    output).  Phase B runs the payload dispatches with those tight pow2
+    capacities, pre-flooring managed capacities the measurement proves too
+    small (``CapacityManager.floor``) — rows, ``comm_tuples``, and retries
+    stay bit-identical to the fixed-capacity path whenever that path would
+    not have aborted, while the wire ships calibrated buckets
+    (``padded_slots`` drops by ~p).  A stale cache entry can undercount;
+    the payload's drop counters catch it, the entry is invalidated, and
+    the existing abort-retry re-measures — rows stay bit-identical, the
+    stale hit costs one retry."""
 
     def __init__(
         self,
@@ -612,6 +798,8 @@ class PhysicalExecutor:
         calibrate: bool = True,
         local_backend: str = "jnp",
         skew_threshold: Optional[float] = None,
+        caps_cache: bool = True,
+        prefetch: bool = True,
     ):
         self.spmd = spmd
         self.engine = get_engine(strategy, spmd, local_backend, skew_threshold)
@@ -625,6 +813,13 @@ class PhysicalExecutor:
         # pre-pass: force it on for them regardless of the config knob
         self.calibrate = calibrate or self.engine.requires_measure
         self._seed_ctr = 0
+        # amortized calibration: cross-round capacity cache + the pending
+        # prefetched measure of the next round (a ``B.RoundCounts`` whose
+        # device futures were launched behind the previous round's
+        # payloads, consumed by the next ``execute_round``)
+        self.caps_cache = CapsCache() if (caps_cache and self.calibrate) else None
+        self.prefetch = bool(prefetch) and self.calibrate
+        self._pending: Optional[Dict] = None
 
     @classmethod
     def from_plan(
@@ -638,6 +833,8 @@ class PhysicalExecutor:
         count_retries_comm: bool = True,
         calibrate: bool = True,
         skew_threshold: Optional[float] = None,
+        caps_cache: bool = True,
+        prefetch: bool = True,
     ) -> "PhysicalExecutor":
         """Build an executor straight from an advisor ``Plan``: engine
         strategy, round fusion, and local backend all come from the plan
@@ -654,6 +851,8 @@ class PhysicalExecutor:
             calibrate=calibrate,
             local_backend=plan.local_backend,
             skew_threshold=skew_threshold,
+            caps_cache=caps_cache,
+            prefetch=prefetch,
         )
 
     def _next_seed(self) -> int:
@@ -679,28 +878,147 @@ class PhysicalExecutor:
             groups.setdefault(sig, []).append(op)
         return list(groups.values())
 
-    def _dispatch_group(self, ops_g: List[PhysOp], resolve):
-        """Returns (outputs, per-instance stats, claimed rounds,
-        measure_padded) — the last being the wire cells the count pre-pass
-        itself shipped, charged to the round alongside the payload."""
+    def _measure_stage(self, groups, resolve, pending=None):
+        """Phase A of the two-phase round schedule: resolve a
+        ``GroupMeasure`` for every group of the stage with at most ONE
+        fresh combined count dispatch (plus one fused keys-only join
+        output count when the engine needs it).
+
+        Sources, cheapest first: ``CapsCache`` hit (zero dispatches), the
+        prefetched pending ``RoundCounts`` (its dispatch already in
+        flight, matched by signature AND seeds), one fresh combined
+        ``RoundCounts`` over the remaining groups.  Kinds with no
+        ``MeasureSpec`` fall back to the legacy per-group
+        ``measure_group``.  Returns (measures, keys, orphan_padded) —
+        the last being wire cells of prefetched count slices no group
+        consumed (schedule drift), still charged to the round."""
+        n = len(groups)
+        if not self.calibrate:
+            return [None] * n, [None] * n, 0
+        keys = [self._signature(g[0], resolve) for g in groups]
+        measures: List[Optional[GroupMeasure]] = [None] * n
+        orphan_pad = 0
+        todo: List[int] = []
+        for gi in range(n):
+            m = (
+                self.caps_cache.lookup(keys[gi])
+                if self.caps_cache is not None
+                else None
+            )
+            if m is not None:
+                measures[gi] = m
+            else:
+                todo.append(gi)
+        fresh: List[int] = []  # measured THIS call (cache hits excluded)
+        if pending is not None:
+            index, counts = pending["index"], pending["counts"]
+            matched = {}
+            for gi in todo:
+                skey = (keys[gi], tuple(op.seed for op in groups[gi]))
+                if skey in index:
+                    matched[gi] = index[skey]
+            if matched:
+                pm = counts.measures()
+                used = set(matched.values())
+                for gi, si in matched.items():
+                    measures[gi] = pm[si]
+                    fresh.append(gi)
+                todo = [gi for gi in todo if gi not in matched]
+                orphan_pad += sum(
+                    s.count_padded
+                    for si, s in enumerate(counts.specs)
+                    if si not in used
+                )
+            else:
+                # nothing matched (schedule drifted since the prefetch):
+                # the whole in-flight dispatch is orphaned — charge its
+                # wire cells, never fetch it to the host
+                orphan_pad += counts.count_padded
+
+        def operands(gi):
+            g = groups[gi]
+            kind = g[0].kind
+            lhs = [resolve(op.a) for op in g]
+            rhs = None if kind == "dedup" else [resolve(op.b) for op in g]
+            return kind, lhs, rhs, [op.seed for op in g]
+
+        legacy: List[int] = []
+        spec_gis: List[int] = []
+        specs: List["B.MeasureSpec"] = []
+        for gi in todo:
+            kind, lhs, rhs, seeds = operands(gi)
+            spec = self.engine.measure_spec(kind, lhs, rhs, seeds)
+            if spec is None:
+                legacy.append(gi)
+            else:
+                spec_gis.append(gi)
+                specs.append(spec)
+        if specs:
+            counts = B.RoundCounts(
+                self.spmd, specs, backend=self.local_backend
+            )
+            for gi, m in zip(spec_gis, counts.measures()):
+                measures[gi] = m
+                fresh.append(gi)
+        for gi in legacy:
+            kind, lhs, rhs, seeds = operands(gi)
+            measures[gi] = self.engine.measure_group(kind, lhs, rhs, seeds)
+        fresh.sort()
+        # engine tails the combined pass can't express: out_recv adoption,
+        # the hybrid engine's rare skew-triggered re-measure
+        for gi in fresh:
+            kind, lhs, rhs, seeds = operands(gi)
+            measures[gi] = self.engine.measure_finish(
+                kind, lhs, rhs, seeds, measures[gi]
+            )
+        # exact keys-only output pre-count for the fresh join groups the
+        # combined pass could NOT resolve: hybrid re-routed groups (the
+        # light-placement count is void) and groups whose hashed-key
+        # guess capacity proved too small — the common case fused its
+        # out_need into the combined dispatch already
+        join_gis = [
+            gi for gi in fresh
+            if groups[gi][0].kind == "join"
+            and self.engine.measure_needs_join_count("join")
+            and measures[gi].out_need is None
+        ]
+        if join_gis:
+            items = []
+            for gi in join_gis:
+                _, lhs, rhs, seeds = operands(gi)
+                items.append((lhs, rhs, seeds, measures[gi]))
+            needs = B.join_need_many(
+                self.spmd, items, backend=self.local_backend
+            )
+            for gi, m in zip(join_gis, needs):
+                measures[gi] = m
+        if self.caps_cache is not None:
+            for gi in fresh + legacy:
+                if measures[gi] is not None:
+                    self.caps_cache.store(keys[gi], measures[gi])
+        for m in measures:
+            if m is not None and m.n_heavy:
+                # remember the measured skew so a capacity-ceiling abort
+                # can name the heavy destinations in its diagnosis
+                self.capman.heavy_hint = max(
+                    self.capman.heavy_hint, m.n_heavy
+                )
+        return measures, keys, orphan_pad
+
+    def _dispatch_group(self, ops_g: List[PhysOp], resolve, xcaps):
+        """Phase B: the group's payload dispatch at the capacities
+        ``_measure_stage`` resolved.  Returns (outputs, per-instance
+        stats, claimed rounds, measure_padded) — the last being the wire
+        cells the group's count slices shipped, charged to the round
+        alongside the payload."""
         seeds = [op.seed for op in ops_g]
         lhs = [resolve(op.a) for op in ops_g]
         kind = ops_g[0].kind
         rhs = None if kind == "dedup" else [resolve(op.b) for op in ops_g]
-        xcaps = None
-        if self.calibrate:
-            xcaps = self.engine.measure_group(kind, lhs, rhs, seeds)
-            if xcaps is not None and xcaps.n_heavy:
-                # remember the measured skew so a capacity-ceiling abort
-                # can name the heavy destinations in its diagnosis
-                self.capman.heavy_hint = max(
-                    self.capman.heavy_hint, xcaps.n_heavy
-                )
+        if xcaps is not None:
             # pre-floor managed capacities the measurement proves too
             # small: the round that would have aborted never runs short
-            need = max(
-                xcaps.out_recv or 0, xcaps.out_need or 0
-            ) if xcaps is not None else 0
+            need = max(xcaps.out_recv or 0, xcaps.out_need or 0)
             if need:
                 for op in ops_g:
                     self.capman.floor(op.cap_nodes, need)
@@ -723,10 +1041,13 @@ class PhysicalExecutor:
         tables: Dict[int, DTable],
         acc: Dict[int, DTable],
         ledger: Ledger,
-    ) -> Tuple[Dict[int, DTable], Dict[int, DTable], int, int, int, int, int]:
+    ) -> Tuple[
+        Dict[int, DTable], Dict[int, DTable], int, int, int, int, int, int
+    ]:
         """Run one logical round (with abort-retry).  Returns
         (new_tables, new_acc, comm, padded, heavy, claimed_rounds,
-        dispatches)."""
+        dispatches, measure_dispatches) — the last two including any
+        prefetched measure dispatch launched on this round's behalf."""
         stages, writes = lower_round(rnd)
         # slot liveness: tmp slots die after their last reading stage (the
         # written results live on); dropping them frees the device buffers
@@ -739,6 +1060,14 @@ class PhysicalExecutor:
                         last_use[nm] = i
         keep = {slot for _, _, slot in writes}
         d0 = self.spmd.dispatch_count
+        md0 = self.spmd.measure_dispatch_count
+        # the prefetched combined count pre-pass for this round (launched
+        # behind the previous round's payloads); its dispatch deltas were
+        # held back then and are charged to THIS round's accounting
+        pending = self._pending
+        self._pending = None
+        pend_disp = pending["dispatches"] if pending is not None else 0
+        pend_meas = pending["measure_dispatches"] if pending is not None else 0
         attempt = 0
         comm_total = 0
         padded_total = 0
@@ -763,27 +1092,47 @@ class PhysicalExecutor:
             claimed = 0
             dropped_by_logical: Dict[int, int] = {}
             blown_joins: List[Tuple[PhysOp, DTable, DTable]] = []
+            # per-attempt fill feedback for the CapsCache watermark: key ->
+            # [max per-instance sent, any drop], merged across stages
+            fills: Dict[Tuple, List] = {}
             for i, stage in enumerate(stages):
                 # seeds advance per attempt in lowering order, independent of
                 # grouping — fused and sequential execution stay identical
                 for op in stage:
                     op.seed = self._next_seed()
                 stage_claimed = 0
-                for ops_g in self._group(stage, resolve):
-                    outs, stats, rounds, mpad = self._dispatch_group(ops_g, resolve)
+                groups = self._group(stage, resolve)
+                # the prefetched counts can only match attempt 1's stage 0
+                # (later stages read tmp slots; retries reseed)
+                use_pending = pending if (i == 0 and attempt == 1) else None
+                measures, keys, orphan_pad = self._measure_stage(
+                    groups, resolve, use_pending
+                )
+                padded += orphan_pad
+                for ops_g, xcaps, key in zip(groups, measures, keys):
+                    outs, stats, rounds, mpad = self._dispatch_group(
+                        ops_g, resolve, xcaps
+                    )
                     padded += mpad
                     stage_claimed = max(stage_claimed, rounds)
+                    g_sent, g_drop = 0, False
                     for op, out, st in zip(ops_g, outs, stats):
                         slots[op.out] = out
                         comm += st["sent"]
                         padded += st.get("padded", 0)
                         heavy += st.get("heavy", 0)
+                        g_sent = max(g_sent, st["sent"])
                         if st["dropped"]:
+                            g_drop = True
                             dropped_by_logical[op.logical] = (
                                 dropped_by_logical.get(op.logical, 0) + st["dropped"]
                             )
                             if op.kind == "join" and self.engine.exact_join_presize:
                                 blown_joins.append((op, resolve(op.a), resolve(op.b)))
+                    if self.caps_cache is not None and key is not None:
+                        f = fills.setdefault(key, [0, False])
+                        f[0] = max(f[0], g_sent)
+                        f[1] = f[1] or g_drop
                 claimed += stage_claimed
                 for nm, li in last_use.items():
                     if li == i and nm not in keep:
@@ -793,8 +1142,17 @@ class PhysicalExecutor:
                 padded_total += padded
                 heavy_total += heavy
             if not dropped_by_logical:
+                if self.caps_cache is not None:
+                    for key, (s, dr) in fills.items():
+                        self.caps_cache.observe(key, s, dr)
                 break
             ledger.retries += 1
+            if self.caps_cache is not None:
+                # a failed attempt invalidates EVERY signature it touched:
+                # the retry re-measures fresh (with new seeds) instead of
+                # re-trusting caps that may have caused the abort
+                for key in fills:
+                    self.caps_cache.invalidate(key)
             for j, d in dropped_by_logical.items():
                 lop = rnd.ops[j]
                 self.capman.grow((lop.target, *lop.args), d)
@@ -809,8 +1167,81 @@ class PhysicalExecutor:
             (new_tab if store == "tab" else new_acc)[node] = slots[slot]
         return (
             new_tab, new_acc, comm_total, padded_total, heavy_total,
-            max(1, claimed), self.spmd.dispatch_count - d0,
+            max(1, claimed),
+            self.spmd.dispatch_count - d0 + pend_disp,
+            self.spmd.measure_dispatch_count - md0 + pend_meas,
         )
+
+    # -- measure prefetch (overlap) ----------------------------------------
+    def prefetch_round(
+        self,
+        rnd: Optional[Round],
+        tables: Dict[int, DTable],
+        acc: Dict[int, DTable],
+    ) -> None:
+        """Launch the NEXT round's stage-0 combined count pre-pass while
+        THIS round's payload exchanges are still in flight.  JAX dispatch
+        is async — nothing here blocks the host — so by the time
+        ``execute_round`` needs the counts, the device has overlapped
+        them with payload work.
+
+        Seeds are PEEKED (the counter is not advanced), reproducing
+        exactly what the next ``execute_round``'s first attempt will
+        assign; the pending counts are consumed by (signature, seeds)
+        identity and any unconsumed slice is discarded with its wire
+        cells charged.  Stage 0 only: later stages read tmp slots that
+        do not exist yet."""
+        self._pending = None
+        if rnd is None or not self.prefetch:
+            return
+        stages, _ = lower_round(rnd)
+        if not stages:
+            return
+        stage0 = stages[0]
+        if any(
+            nm is not None and nm.startswith("tmp:")
+            for op in stage0
+            for nm in (op.a, op.b)
+        ):
+            return
+
+        def resolve(name: str) -> DTable:
+            if name.startswith("tab:"):
+                return tables[int(name[4:])]
+            v = int(name[3:])
+            return acc.get(v, tables[v])
+
+        for i, op in enumerate(stage0):
+            op.seed = self.seed + 7919 * (self._seed_ctr + i + 1)
+        d0 = self.spmd.dispatch_count
+        md0 = self.spmd.measure_dispatch_count
+        index: Dict[Tuple, int] = {}
+        specs: List["B.MeasureSpec"] = []
+        for g in self._group(stage0, resolve):
+            key = self._signature(g[0], resolve)
+            if self.caps_cache is not None and key in self.caps_cache:
+                continue  # the next round will hit the cache for free
+            kind = g[0].kind
+            lhs = [resolve(op.a) for op in g]
+            rhs = None if kind == "dedup" else [resolve(op.b) for op in g]
+            spec = self.engine.measure_spec(
+                kind, lhs, rhs, [op.seed for op in g]
+            )
+            if spec is None:
+                continue
+            index[(key, tuple(op.seed for op in g))] = len(specs)
+            specs.append(spec)
+        if not specs:
+            return
+        counts = B.RoundCounts(self.spmd, specs, backend=self.local_backend)
+        self._pending = {
+            "counts": counts,
+            "index": index,
+            # held back from the CURRENT round's deltas (they were already
+            # snapshotted); execute_round charges them to the consumer
+            "dispatches": self.spmd.dispatch_count - d0,
+            "measure_dispatches": self.spmd.measure_dispatch_count - md0,
+        }
 
     # -- materialization (Theorem 15 stage 1) ------------------------------
     def materialize(
@@ -819,11 +1250,13 @@ class PhysicalExecutor:
         base: Dict[str, DTable],
         node_schema: Dict[int, Tuple[str, ...]],
         ledger: Ledger,
-    ) -> Tuple[Dict[int, DTable], int, int, int, int, int]:
+    ) -> Tuple[Dict[int, DTable], int, int, int, int, int, int]:
         """Compute IDB_v per tree vertex (one grid round or a hash-join
         cascade), with the centralized retry loop.  Returns
-        (tables, comm, padded, heavy, claimed_rounds, dispatches)."""
+        (tables, comm, padded, heavy, claimed_rounds, dispatches,
+        measure_dispatches)."""
         d0 = self.spmd.dispatch_count
+        md0 = self.spmd.measure_dispatch_count
         comm = 0
         padded = 0
         heavy = 0
@@ -841,7 +1274,13 @@ class PhysicalExecutor:
             heavy_try = 0
             tables = {}
             max_engine_rounds = 0
-            for v in ghd.nodes():
+            # phase A (as in execute_round): project every vertex's parts,
+            # then resolve the grid-path multijoin calibrations for ALL
+            # multi-atom vertices with one combined count dispatch
+            verts = list(ghd.nodes())
+            parts_by_v: Dict[int, List[DTable]] = {}
+            dedup_by_v: Dict[int, bool] = {}
+            for v in verts:
                 parts: List[DTable] = []
                 need_dedup = False
                 for alias in sorted(ghd.lam[v]):
@@ -851,20 +1290,49 @@ class PhysicalExecutor:
                     if len(keep) < len(t.schema):
                         need_dedup = True  # strict projection: cross-shard dups
                     parts.append(proj)
+                parts_by_v[v] = parts
+                dedup_by_v[v] = need_dedup
+            # payload seeds drawn up front: hash-path engines count with
+            # the routing seed the payload dispatch will reuse
+            mj_seeds = [self._next_seed() for _ in verts]
+            cal_map = (
+                self.engine.multijoin_measure_batch(
+                    [parts_by_v[v] for v in verts], mj_seeds
+                )
+                if self.calibrate
+                else {}
+            )
+            for vi, v in enumerate(verts):
+                parts = parts_by_v[v]
+                need_dedup = dedup_by_v[v]
+                vcal = cal_map.get(vi)
                 cap = self.capman.cap_for((v,))
                 out, st, er = self.engine.multijoin(
-                    parts, cap, self._next_seed(), calibrate=self.calibrate
+                    parts, cap, mj_seeds[vi], calibrate=self.calibrate,
+                    cal=None if vcal is None else vcal[0],
                 )
                 sent, drop = st["sent"], st["dropped"]
                 pad = st.get("padded", 0)
+                if vcal is not None:
+                    pad += vcal[1]  # the combined pre-pass's count cells
                 heavy_try += st.get("heavy", 0)
                 if need_dedup:
                     seeds = [self._next_seed()]
-                    dx = (
-                        self.engine.measure_group("dedup", [out], None, seeds)
-                        if self.calibrate
-                        else None
-                    )
+                    # materialization dedups cache like round groups do:
+                    # same projected shape across attempts/vertices reuses
+                    # the measured caps (signature sans seeds — caps are
+                    # seed-independent, only routing is)
+                    dkey = ("mat_dedup", out.cap, out.arity, cap)
+                    dx = None
+                    if self.calibrate:
+                        if self.caps_cache is not None:
+                            dx = self.caps_cache.lookup(dkey)
+                        if dx is None:
+                            dx = self.engine.measure_group(
+                                "dedup", [out], None, seeds
+                            )
+                            if self.caps_cache is not None and dx is not None:
+                                self.caps_cache.store(dkey, dx)
                     if dx is not None:
                         pad += dx.padded
                         if dx.out_recv and dx.out_recv > cap:
@@ -878,6 +1346,10 @@ class PhysicalExecutor:
                     drop += dstats[0]["dropped"]
                     pad += dstats[0].get("padded", 0)
                     er += r2
+                    if self.caps_cache is not None:
+                        self.caps_cache.observe(
+                            dkey, dstats[0]["sent"], bool(dstats[0]["dropped"])
+                        )
                 if drop:
                     dropped_any = True
                     self.capman.grow_node(v)
@@ -897,4 +1369,5 @@ class PhysicalExecutor:
         return (
             tables, comm, padded, heavy, max(1, max_engine_rounds),
             self.spmd.dispatch_count - d0,
+            self.spmd.measure_dispatch_count - md0,
         )

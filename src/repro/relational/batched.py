@@ -56,7 +56,7 @@ import numpy as np
 import dataclasses
 
 from .grid import _grid_send_one, _grid_shares, _position_groups
-from .hashing import dense_ranks
+from .hashing import dense_ranks, hash_columns
 from .localops import (
     get_local_backend,
     local_dedup_mask,
@@ -65,6 +65,7 @@ from .localops import (
     local_semijoin_mask,
 )
 from .shuffle import (
+    bucket_counts,
     exchange,
     exchange_counts,
     exchange_multi,
@@ -77,7 +78,7 @@ from .skew import (
     heavy_dest_flags_many,
     split_dests,
 )
-from .spmd import SPMD
+from .spmd import AXIS, SPMD
 from .table import DTable, schema_join
 
 
@@ -325,7 +326,8 @@ def _hybrid_pair_counts(
         ad, av, bd, bv, _seed_array(seeds, p),
         _key_array(a_keys, p), _key_array(b_keys, p), _heavy_array(heavy, p),
         p=p, dedup_b=dedup_b, swap=swap, backend=backend,
-        donate=(0, 1, 2, 3),
+        donate=(0, 1, 2, 3, 4, 5, 6, 7),
+        measure=True,
     )
     return SideCaps.from_counts(oa, ra), SideCaps.from_counts(ob, rb)
 
@@ -359,6 +361,38 @@ def _hybrid_join_count_shard_b(ad, av, bd, bv, seed, ak, bk, hw, *,
     return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, hw)
 
 
+def _finalize_pair_counts(
+    oa_np: np.ndarray,
+    ra,
+    ob_np: np.ndarray,
+    rb,
+    *,
+    p: int,
+    count_padded: int,
+    skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
+) -> GroupMeasure:
+    """Host-side tail shared by the per-group pair measure and the
+    combined round pre-pass: tight pow2 caps per side plus the free
+    heavy-destination detection.  The hash is key-consistent across both
+    sides, so per-destination overload on EITHER side flags the
+    destination's keys heavy for both."""
+    heavy = heavy_dest_flags_many(oa_np, p, skew_threshold) | heavy_dest_flags_many(
+        ob_np, p, skew_threshold
+    )
+    arrivals_a = oa_np.reshape(oa_np.shape[0], -1, p).sum(axis=0)  # (k, p)
+    arrivals_b = ob_np.reshape(ob_np.shape[0], -1, p).sum(axis=0)
+    return GroupMeasure(
+        lhs=SideCaps.from_counts(oa_np, ra),
+        rhs=SideCaps.from_counts(ob_np, rb),
+        out_recv=None,
+        padded=count_padded,
+        heavy=heavy,
+        n_heavy=int(heavy.sum()),
+        lhs_heavy_rows=int(arrivals_a[heavy].sum()),
+        rhs_heavy_rows=int(arrivals_b[heavy].sum()),
+    )
+
+
 def _measure_pair_many(
     spmd: SPMD,
     as_: Sequence[DTable],
@@ -379,26 +413,14 @@ def _measure_pair_many(
         ad, av, bd, bv, _seed_array(seeds, p),
         _key_array(a_keys, p), _key_array(b_keys, p),
         p=p, dedup_b=dedup_b, backend=backend,
-        donate=(0, 1, 2, 3),
+        donate=(0, 1, 2, 3, 4, 5, 6),
+        measure=True,
     )
-    # heavy-destination flags come free with the counts: the hash is
-    # key-consistent across both sides, so per-destination overload on
-    # EITHER side flags the destination's keys heavy for both
-    oa_np, ob_np = np.asarray(oa), np.asarray(ob)
-    heavy = heavy_dest_flags_many(oa_np, p, skew_threshold) | heavy_dest_flags_many(
-        ob_np, p, skew_threshold
-    )
-    arrivals_a = oa_np.reshape(oa_np.shape[0], -1, p).sum(axis=0)  # (k, p)
-    arrivals_b = ob_np.reshape(ob_np.shape[0], -1, p).sum(axis=0)
-    return GroupMeasure(
-        lhs=SideCaps.from_counts(oa, ra),
-        rhs=SideCaps.from_counts(ob, rb),
-        out_recv=None,
-        padded=2 * len(as_) * p * p,  # two (p,)-int count vectors each
-        heavy=heavy,
-        n_heavy=int(heavy.sum()),
-        lhs_heavy_rows=int(arrivals_a[heavy].sum()),
-        rhs_heavy_rows=int(arrivals_b[heavy].sum()),
+    return _finalize_pair_counts(
+        np.asarray(oa), ra, np.asarray(ob), rb,
+        p=p,
+        count_padded=2 * len(as_) * p * p,  # two (p,)-int count vectors each
+        skew_threshold=skew_threshold,
     )
 
 
@@ -420,12 +442,27 @@ def measure_semijoin_many(
         spmd, ss, rs, s_keys, r_keys, seeds, dedup_b=True, backend=backend,
         skew_threshold=skew_threshold,
     )
+    return finish_semijoin_measure(
+        spmd, ss, rs, seeds, m, hybrid=hybrid, backend=backend
+    )
+
+
+def finish_semijoin_measure(
+    spmd: SPMD, ss, rs, seeds, m: GroupMeasure, *,
+    hybrid: bool, backend: str = "jnp",
+) -> GroupMeasure:
+    """Tail of the semijoin pre-pass given pair counts ``m`` from ANY
+    source — the per-group dispatch above or one slice of the combined
+    round pre-pass (``RoundCounts``)."""
     if hybrid and m.n_heavy:
         # roles are fixed for a semijoin: S (the output side, one copy
         # per row) spreads, R's deduplicated key projection broadcasts —
         # a heavy KEY is a single R-side row after dedup, so broadcast
         # costs n_heavy * p keys, never a relation's row mass
         p = spmd.p
+        shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
+        s_keys = [s.cols(sh) for s, sh in zip(ss, shareds)]
+        r_keys = [r.cols(sh) for r, sh in zip(rs, shareds)]
         lhs, rhs = _hybrid_pair_counts(
             spmd, ss, rs, s_keys, r_keys, seeds, m.heavy,
             dedup_b=True, swap=False, backend=backend,
@@ -435,6 +472,39 @@ def measure_semijoin_many(
             padded=m.padded + 2 * len(ss) * p * p, hybrid_routed=True,
         )
     return dataclasses.replace(m, out_recv=m.lhs.cap_recv)
+
+
+def hybridize_join_measure(
+    spmd: SPMD, as_, bs, seeds, m: GroupMeasure, *,
+    hybrid: bool, backend: str = "jnp",
+) -> GroupMeasure:
+    """Join-measure middle stage shared by ``measure_join_many`` and the
+    combined round pre-pass: when heavy destinations were flagged,
+    re-measure both sides under hybrid routing (one extra count-only
+    dispatch, skew-dependent and rare)."""
+    if not (hybrid and m.n_heavy):
+        return m
+    # spread the side carrying the LARGER heavy row mass, broadcast
+    # the smaller — that balances both the wire and the join output
+    # (broadcasting the heavy mass would replicate it p ways AND pile
+    # the join's output rows onto the light partner's reducers)
+    p = spmd.p
+    shareds = [[x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)]
+    a_keys = [a.cols(sh) for a, sh in zip(as_, shareds)]
+    b_keys = [b.cols(sh) for b, sh in zip(bs, shareds)]
+    swap = m.rhs_heavy_rows > m.lhs_heavy_rows
+    lhs, rhs = _hybrid_pair_counts(
+        spmd, as_, bs, a_keys, b_keys, seeds, m.heavy,
+        dedup_b=False, swap=swap, backend=backend,
+    )
+    # any light-placement output count is void under hybrid routing (the
+    # spread side repositions the join output); the fused join-need pass
+    # recomputes it at the hybrid placement
+    return dataclasses.replace(
+        m, lhs=lhs, rhs=rhs, out_need=None,
+        padded=m.padded + 2 * len(as_) * p * p,
+        hybrid_routed=True, swap_spread=swap,
+    )
 
 
 def measure_join_many(
@@ -460,44 +530,32 @@ def measure_join_many(
         skew_threshold=skew_threshold,
     )
     k, nk = len(as_), len(a_keys[0])
-    hw = None
-    swap = False
-    if hybrid and m.n_heavy:
-        # spread the side carrying the LARGER heavy row mass, broadcast
-        # the smaller — that balances both the wire and the join output
-        # (broadcasting the heavy mass would replicate it p ways AND pile
-        # the join's output rows onto the light partner's reducers)
-        swap = m.rhs_heavy_rows > m.lhs_heavy_rows
-        lhs, rhs = _hybrid_pair_counts(
-            spmd, as_, bs, a_keys, b_keys, seeds, m.heavy,
-            dedup_b=False, swap=swap, backend=backend,
-        )
-        m = dataclasses.replace(
-            m, lhs=lhs, rhs=rhs,
-            padded=m.padded + 2 * k * p * p,
-            hybrid_routed=True, swap_spread=swap,
-        )
-        hw = _heavy_array(m.heavy, p)
+    m = hybridize_join_measure(
+        spmd, as_, bs, seeds, m, hybrid=hybrid, backend=backend
+    )
     ad, av = _stack(as_)
     bd, bv = _stack(bs)
-    if hw is None:
+    if not m.hybrid_routed:
         cnt = spmd.run(
             _join_count_shard_b,
             ad, av, bd, bv, _seed_array(seeds, p),
             _key_array(a_keys, p), _key_array(b_keys, p),
             p=p, c_out_a=m.lhs.c_out, c_out_b=m.rhs.c_out,
             cap_a=m.lhs.cap_recv, cap_b=m.rhs.cap_recv, backend=backend,
-            donate=(0, 1, 2, 3),
+            donate=(0, 1, 2, 3, 4, 5, 6),
+            measure=True,
         )
     else:
         cnt = spmd.run(
             _hybrid_join_count_shard_b,
             ad, av, bd, bv, _seed_array(seeds, p),
-            _key_array(a_keys, p), _key_array(b_keys, p), hw,
+            _key_array(a_keys, p), _key_array(b_keys, p),
+            _heavy_array(m.heavy, p),
             p=p, c_out_a=m.lhs.c_out, c_out_b=m.rhs.c_out,
-            cap_a=m.lhs.cap_recv, cap_b=m.rhs.cap_recv, swap=swap,
+            cap_a=m.lhs.cap_recv, cap_b=m.rhs.cap_recv, swap=m.swap_spread,
             backend=backend,
-            donate=(0, 1, 2, 3),
+            donate=(0, 1, 2, 3, 4, 5, 6, 7),
+            measure=True,
         )
     return dataclasses.replace(
         m,
@@ -538,7 +596,8 @@ def measure_dedup_many(
     cols = _key_array([tuple(range(t.arity)) for t in ts], p)
     o, r = spmd.run(
         _measure_one_shard_b, d, v, _seed_array(seeds, p), cols,
-        p=p, backend=backend, donate=(0, 1),
+        p=p, backend=backend, donate=(0, 1, 2, 3),
+        measure=True,
     )
     caps = SideCaps.from_counts(o, r)
     return GroupMeasure(
@@ -623,6 +682,7 @@ def measure_grid_join_many(
     oa, ra, ob, rb = spmd.run(
         _grid_measure_shard_b, _stack_valid(as_), _stack_valid(bs),
         plan=plan, p=p, donate=(0, 1),
+        measure=True,
     )
     return GroupMeasure(
         lhs=SideCaps.from_counts(oa, ra),
@@ -646,13 +706,452 @@ def measure_grid_semijoin_many(
     rk = _key_array([r.cols(sh) for r, sh in zip(rs, shareds)], p)
     oa, ra, ob, rb = spmd.run(
         _grid_measure_rkeys_shard_b, _stack_valid(ss), rd, rv, rk,
-        plan=plan, p=p, donate=(0, 1, 2),
+        plan=plan, p=p, donate=(0, 1, 2, 3),
+        measure=True,
     )
     return GroupMeasure(
         lhs=SideCaps.from_counts(oa, ra),
         rhs=SideCaps.from_counts(ob, rb),
         padded=2 * len(ss) * p * p,
     )
+
+
+# ---------------------------------------- combined round-level measure pass
+@dataclasses.dataclass
+class MeasureSpec:
+    """One op group's slice of a round's COMBINED count pre-pass.
+
+    Building a spec stacks the group's inputs on device but dispatches
+    NOTHING; ``RoundCounts`` fuses every spec of a round stage into one
+    program whose count blocks ride a single ``(m, p)`` ``all_to_all`` —
+    the per-group ``measure_*_many`` dispatches collapsed into one.
+
+    ``entry`` is the static per-group descriptor (part of the jit cache
+    key: rounds with the same group structure reuse the compiled
+    program); ``arrays`` are the traced inputs, all freshly stacked and
+    donated.  ``rows`` is how many count rows the spec owns in the
+    stacked block (2k for two-sided groups, k for single exchanges)."""
+
+    tag: str  # 'pair' | 'join_pair' | 'single' | 'grid_pair' | 'grid_rkeys'
+    entry: Tuple
+    arrays: Tuple
+    k: int
+    rows: int
+    count_padded: int  # int32 cells this spec's count vectors ship
+    skew_threshold: float = DEFAULT_SKEW_THRESHOLD
+    join_rows: int = 0  # rows this spec owns in the fused join-count block
+
+
+def pair_measure_spec(
+    spmd: SPMD, as_, bs, a_keys, b_keys, seeds, *,
+    dedup_b: bool, skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
+) -> MeasureSpec:
+    """Hash pair exchange counts (semijoin/join/intersect pre-pass)."""
+    p = spmd.p
+    ad, av = _stack(as_)
+    bd, bv = _stack(bs)
+    k = len(as_)
+    return MeasureSpec(
+        tag="pair",
+        entry=("pair", k, bool(dedup_b)),
+        arrays=(
+            ad, av, bd, bv, _seed_array(seeds, p),
+            _key_array(a_keys, p), _key_array(b_keys, p),
+        ),
+        k=k, rows=2 * k, count_padded=2 * k * p * p,
+        skew_threshold=skew_threshold,
+    )
+
+
+def join_pair_measure_spec(
+    spmd: SPMD, as_, bs, a_keys, b_keys, seeds, *,
+    g_a: int, g_b: int, skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
+) -> MeasureSpec:
+    """Hash join pre-pass with the output count FUSED into the same
+    dispatch: besides both sides' exchange counts, the program ships a
+    single hashed-key column per side at the STATIC guess capacities
+    ``g_a``/``g_b`` and counts the join output exactly per destination.
+
+    The guesses break the circular dependency (a tight keys-only
+    exchange would need the very ``c_out`` this dispatch measures): the
+    fetched counts themselves prove post-hoc whether the guess held
+    (max per-destination send <= g); ``_finalize_spec`` only trusts the
+    fused output count when it did, so an undershot guess costs one
+    fallback ``join_need_many`` dispatch, never an undercounted
+    capacity.  Matching on the 32-bit key hash can only OVER-count
+    (colliding keys land on one destination and count as matches), so
+    the derived ``out_need`` stays a sound capacity."""
+    p = spmd.p
+    ad, av = _stack(as_)
+    bd, bv = _stack(bs)
+    k = len(as_)
+    return MeasureSpec(
+        tag="join_pair",
+        entry=("join_pair", k, g_a, g_b),
+        arrays=(
+            ad, av, bd, bv, _seed_array(seeds, p),
+            _key_array(a_keys, p), _key_array(b_keys, p),
+        ),
+        k=k, rows=2 * k,
+        # count vectors + the two hashed-key (width 1) exchanges
+        count_padded=2 * k * p * p + k * p * p * (g_a + g_b),
+        skew_threshold=skew_threshold,
+        join_rows=k,
+    )
+
+
+def single_measure_spec(spmd: SPMD, ts, seeds) -> MeasureSpec:
+    """Full-row-key single exchange counts (dedup pre-pass)."""
+    p = spmd.p
+    d, v = _stack(ts)
+    cols = _key_array([tuple(range(t.arity)) for t in ts], p)
+    k = len(ts)
+    return MeasureSpec(
+        tag="single",
+        entry=("single", k),
+        arrays=(d, v, _seed_array(seeds, p), cols),
+        k=k, rows=k, count_padded=k * p * p,
+    )
+
+
+def grid_pair_measure_spec(spmd: SPMD, as_, bs) -> MeasureSpec:
+    """Positional grid join send counts (seedless, exact)."""
+    p = spmd.p
+    a0, b0 = as_[0], bs[0]
+    g = _grid_shares([a0.cap * a0.p, b0.cap * b0.p], p)
+    plan = _grid_pair_plan(g[0], g[1], a0.cap, b0.cap)
+    k = len(as_)
+    return MeasureSpec(
+        tag="grid_pair",
+        entry=("grid_pair", k, plan),
+        arrays=(_stack_valid(as_), _stack_valid(bs)),
+        k=k, rows=2 * k, count_padded=2 * k * p * p,
+    )
+
+
+def grid_rkeys_measure_spec(spmd: SPMD, ss, rs) -> MeasureSpec:
+    """Grid semijoin mark-stage counts: S positional, R the dedup'd key
+    projection (masked rows recounted, exactly as the mark stage does)."""
+    p = spmd.p
+    s0, r0 = ss[0], rs[0]
+    g_s, g_r = _grid_shares([s0.cap * s0.p, r0.cap * r0.p], p)
+    plan = _grid_pair_plan(g_s, g_r, s0.cap, r0.cap)
+    shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
+    rd, rv = _stack(rs)
+    rk = _key_array([r.cols(sh) for r, sh in zip(rs, shareds)], p)
+    k = len(ss)
+    return MeasureSpec(
+        tag="grid_rkeys",
+        entry=("grid_rkeys", k, plan),
+        arrays=(_stack_valid(ss), rd, rv, rk),
+        k=k, rows=2 * k, count_padded=2 * k * p * p,
+    )
+
+
+def _measure_round_shard(*arrays, entries, p, backend):
+    """Per-shard body of the combined pre-pass: every group's local
+    per-destination counts are computed with the SAME destination logic
+    as its payload/legacy measure, concatenated into one ``(m, p)``
+    block, and shipped over ONE ``all_to_all`` (split/concat on the
+    count-vector axis — each shard receives column s from sender s).
+
+    Returns ``(local_counts (m, p), recv_totals (m,), join_counts (j,))``
+    — the first two exactly the ``(out, recv.sum())`` pair
+    ``shuffle.exchange_counts`` yields per instance (so the host-side
+    finalizers are shared with the legacy per-group dispatches), the
+    last this shard's per-destination join output counts for every
+    ``join_pair`` spec (empty when the stage has none)."""
+    blocks = []
+    jblocks = []
+    i = 0
+    for e in entries:
+        tag = e[0]
+        if tag == "pair":
+            _, k, dedup_b = e
+            ad, av, bd, bv, seed, ak, bk = arrays[i : i + 7]
+            i += 7
+
+            def pair_one(ad, av, bd, bv, seed, ak, bk, _dd=dedup_b):
+                da = _dests(_take(ad, ak), av, p, seed, backend)
+                bkeys = _take(bd, bk)
+                bv2 = (
+                    local_dedup_mask(bkeys, bv, tuple(range(bk.shape[0])))
+                    if _dd
+                    else bv
+                )
+                db = _dests(bkeys, bv2, p, seed, backend)
+                return bucket_counts(da, p), bucket_counts(db, p)
+
+            oa, ob = jax.vmap(pair_one)(ad, av, bd, bv, seed, ak, bk)
+            blocks += [oa, ob]
+        elif tag == "join_pair":
+            _, k, g_a, g_b = e
+            ad, av, bd, bv, seed, ak, bk = arrays[i : i + 7]
+            i += 7
+
+            def jp_one(ad, av, bd, bv, seed, ak, bk, _ga=g_a, _gb=g_b):
+                akeys = _take(ad, ak)
+                da = _dests(akeys, av, p, seed, backend)
+                bkeys = _take(bd, bk)
+                db = _dests(bkeys, bv, p, seed, backend)
+                # a single hashed-key column stands in for the nk-wide
+                # projection: equal keys keep equal hashes (and equal
+                # destinations), so the exchanged count can only over-
+                # count — a sound out_need at width-1 wire cost
+                ha = jax.lax.bitcast_convert_type(
+                    hash_columns(akeys, tuple(range(ak.shape[0])), seed),
+                    jnp.int32,
+                )[:, None]
+                hb = jax.lax.bitcast_convert_type(
+                    hash_columns(bkeys, tuple(range(bk.shape[0])), seed),
+                    jnp.int32,
+                )[:, None]
+                a2, a2v, *_ = exchange(
+                    ha, av, da, p=p, c_out=_ga, cap_recv=p * _ga
+                )
+                b2, b2v, *_ = exchange(
+                    hb, bv, db, p=p, c_out=_gb, cap_recv=p * _gb
+                )
+                jc = local_join_count(a2, a2v, b2, b2v, (0,), (0,), backend)
+                return bucket_counts(da, p), bucket_counts(db, p), jc
+
+            oa, ob, jc = jax.vmap(jp_one)(ad, av, bd, bv, seed, ak, bk)
+            blocks += [oa, ob]
+            jblocks.append(jc)
+        elif tag == "single":
+            _, k = e
+            d, v, seed, cols = arrays[i : i + 4]
+            i += 4
+
+            def single_one(d, v, seed, cols):
+                return bucket_counts(
+                    _dests(_take(d, cols), v, p, seed, backend), p
+                )
+
+            blocks.append(jax.vmap(single_one)(d, v, seed, cols))
+        elif tag == "grid_pair":
+            _, k, plan = e
+            gav, gbv = arrays[i : i + 2]
+            i += 2
+
+            def grid_one(av, bv, _plan=plan):
+                da, db = _grid_pair_dests(av, bv, p=p, **dict(_plan))
+                return bucket_counts(da, p), bucket_counts(db, p)
+
+            oa, ob = jax.vmap(grid_one)(gav, gbv)
+            blocks += [oa, ob]
+        else:  # grid_rkeys
+            _, k, plan = e
+            sv, rd, rv, rk = arrays[i : i + 4]
+            i += 4
+
+            def grkeys_one(sv, rd, rv, rk, _plan=plan):
+                rkeys = _take(rd, rk)
+                rkv = local_dedup_mask(rkeys, rv, tuple(range(rk.shape[0])))
+                da, db = _grid_pair_dests(sv, rkv, p=p, **dict(_plan))
+                return bucket_counts(da, p), bucket_counts(db, p)
+
+            oa, ob = jax.vmap(grkeys_one)(sv, rd, rv, rk)
+            blocks += [oa, ob]
+    cnts = jnp.concatenate(blocks, axis=0)  # (m, p)
+    recv = jax.lax.all_to_all(
+        cnts, AXIS, split_axis=1, concat_axis=1, tiled=False
+    )
+    jcnt = (
+        jnp.concatenate(jblocks, axis=0)
+        if jblocks
+        else jnp.zeros((0,), jnp.int32)
+    )
+    return cnts, recv.sum(axis=1), jcnt
+
+
+def _finalize_spec(
+    spec: MeasureSpec, cnts: np.ndarray, recv: np.ndarray, off: int, p: int,
+    jcnt: Optional[np.ndarray] = None, joff: int = 0,
+) -> GroupMeasure:
+    """Slice one spec's rows out of the fetched combined counts and
+    reproduce the exact host-side semantics of its legacy measure."""
+    k = spec.k
+    if spec.tag == "single":
+        o, r = cnts[:, off : off + k, :], recv[:, off : off + k]
+        caps = SideCaps.from_counts(o, r)
+        return GroupMeasure(
+            lhs=caps, out_recv=caps.cap_recv, padded=spec.count_padded
+        )
+    oa, ra = cnts[:, off : off + k, :], recv[:, off : off + k]
+    ob, rb = cnts[:, off + k : off + 2 * k, :], recv[:, off + k : off + 2 * k]
+    if spec.tag in ("pair", "join_pair"):
+        m = _finalize_pair_counts(
+            oa, ra, ob, rb, p=p,
+            count_padded=spec.count_padded,
+            skew_threshold=spec.skew_threshold,
+        )
+        if spec.tag == "join_pair":
+            # trust the fused output count only when the counts prove
+            # the hashed-key exchanges held every send (guess capacity
+            # not exceeded) — otherwise out_need stays None and the
+            # executor falls back to the exact join_need_many dispatch
+            _, _, g_a, g_b = spec.entry
+            if int(oa.max()) <= g_a and int(ob.max()) <= g_b:
+                jc = jcnt[:, joff : joff + spec.join_rows]
+                m = dataclasses.replace(
+                    m, out_need=pow2(max(1, int(jc.max())))
+                )
+        return m
+    # grid variants: positional routing, no heavy-destination surface
+    return GroupMeasure(
+        lhs=SideCaps.from_counts(oa, ra),
+        rhs=SideCaps.from_counts(ob, rb),
+        padded=spec.count_padded,
+    )
+
+
+class RoundCounts:
+    """Handle over ONE combined count dispatch covering every measuring
+    op group of a round stage.
+
+    Construction launches the dispatch and returns immediately — the
+    results are JAX futures, so the executor can issue it while the
+    previous round's payload exchanges are still in flight (measure
+    prefetch).  ``fetch()`` performs the round's SINGLE
+    ``jax.device_get`` (the one host sync of the whole measure path);
+    ``measures()`` finalizes every group from the fetched block."""
+
+    def __init__(self, spmd: SPMD, specs: Sequence[MeasureSpec], *,
+                 backend: str = "jnp"):
+        self.spmd = spmd
+        self.specs = list(specs)
+        self.p = spmd.p
+        arrays: List[jax.Array] = []
+        entries = []
+        for s in self.specs:
+            entries.append(s.entry)
+            arrays.extend(s.arrays)
+        self._cnts, self._recv, self._jcnt = spmd.run(
+            _measure_round_shard, *arrays,
+            entries=tuple(entries), p=spmd.p, backend=backend,
+            donate=tuple(range(len(arrays))),
+            measure=True,
+        )
+        self._host: Optional[
+            Tuple[np.ndarray, np.ndarray, np.ndarray]
+        ] = None
+
+    @property
+    def count_padded(self) -> int:
+        return sum(s.count_padded for s in self.specs)
+
+    def fetch(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if self._host is None:
+            self._host = jax.device_get(
+                (self._cnts, self._recv, self._jcnt)
+            )
+        return self._host
+
+    def measures(self) -> List[GroupMeasure]:
+        cnts, recv, jcnt = self.fetch()
+        out = []
+        off = 0
+        joff = 0
+        for s in self.specs:
+            out.append(
+                _finalize_spec(s, cnts, recv, off, self.p, jcnt, joff)
+            )
+            off += s.rows
+            joff += s.join_rows
+        return out
+
+
+def _join_need_round_shard(*arrays, entries, p, backend):
+    """Per-shard body of the fused join output-count pass: every join
+    group's keys-only exchange (at its already-calibrated capacities)
+    plus exact local join count, concatenated — one dispatch per round
+    stage instead of one per join group."""
+    outs = []
+    i = 0
+    for e in entries:
+        if e[0] == "hash":
+            _, k, coa, cob, ca, cb = e
+            ad, av, bd, bv, seed, ak, bk = arrays[i : i + 7]
+            i += 7
+            one = functools.partial(
+                _join_count_one, p=p, c_out_a=coa, c_out_b=cob,
+                cap_a=ca, cap_b=cb, backend=backend,
+            )
+            outs.append(jax.vmap(one)(ad, av, bd, bv, seed, ak, bk))
+        else:  # hybrid placement
+            _, k, coa, cob, ca, cb, swap = e
+            ad, av, bd, bv, seed, ak, bk, hw = arrays[i : i + 8]
+            i += 8
+            one = functools.partial(
+                _hybrid_join_count_one, p=p, c_out_a=coa, c_out_b=cob,
+                cap_a=ca, cap_b=cb, swap=swap, backend=backend,
+            )
+            outs.append(jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, hw))
+    return jnp.concatenate(outs, axis=0)  # (sum_k,) per shard
+
+
+def join_need_many(
+    spmd: SPMD,
+    items: Sequence[Tuple[Sequence[DTable], Sequence[DTable], Sequence[int], GroupMeasure]],
+    *,
+    backend: str = "jnp",
+) -> List[GroupMeasure]:
+    """ONE dispatch computing the exact join-output requirement for EVERY
+    join group of a round stage; each returned measure carries
+    ``out_need`` with the keys-only exchange priced into ``padded`` —
+    identical numbers to ``measure_join_many``'s per-group tail."""
+    p = spmd.p
+    arrays: List[jax.Array] = []
+    entries = []
+    nks = []
+    for as_, bs, seeds, m in items:
+        shareds = [
+            [x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)
+        ]
+        a_keys = [a.cols(sh) for a, sh in zip(as_, shareds)]
+        b_keys = [b.cols(sh) for b, sh in zip(bs, shareds)]
+        nks.append(len(a_keys[0]))
+        ad, av = _stack(as_)
+        bd, bv = _stack(bs)
+        base = (
+            ad, av, bd, bv, _seed_array(seeds, p),
+            _key_array(a_keys, p), _key_array(b_keys, p),
+        )
+        if m.hybrid_routed:
+            entries.append((
+                "hybrid", len(as_), m.lhs.c_out, m.rhs.c_out,
+                m.lhs.cap_recv, m.rhs.cap_recv, m.swap_spread,
+            ))
+            arrays.extend(base + (_heavy_array(m.heavy, p),))
+        else:
+            entries.append((
+                "hash", len(as_), m.lhs.c_out, m.rhs.c_out,
+                m.lhs.cap_recv, m.rhs.cap_recv,
+            ))
+            arrays.extend(base)
+    cnt = np.asarray(spmd.run(
+        _join_need_round_shard, *arrays,
+        entries=tuple(entries), p=p, backend=backend,
+        donate=tuple(range(len(arrays))),
+        measure=True,
+    ))  # (p, sum_k)
+    out = []
+    off = 0
+    for (as_, bs, seeds, m), e, nk in zip(items, entries, nks):
+        k = e[1]
+        c = cnt[:, off : off + k]
+        off += k
+        out.append(dataclasses.replace(
+            m,
+            out_need=pow2(max(1, int(c.max()))),
+            padded=m.padded
+            + k * (
+                padded_slots(p, m.lhs.c_out, nk)
+                + padded_slots(p, m.rhs.c_out, nk)
+            ),
+        ))
+    return out
 
 
 # ------------------------------------------------------------ hash semijoin

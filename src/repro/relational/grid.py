@@ -67,6 +67,83 @@ def _grid_shares(sizes: Sequence[int], p: int) -> List[int]:
     return g
 
 
+def _grid_geometry(
+    sizes: Sequence[int], p: int
+) -> Tuple[List[int], List[int], List[Tuple[int, ...]]]:
+    """Shared geometry of one grid join: per-relation group counts,
+    reducer-index strides, and each relation's replication offsets over
+    the other dimensions.  Deterministic in (sizes, p), so the count
+    pre-pass and the payload always agree on the grid."""
+    w = len(sizes)
+    g = _grid_shares(sizes, p)
+    strides = [1] * w
+    acc = 1
+    for i in range(w - 1, -1, -1):
+        strides[i] = acc
+        acc *= g[i]
+    all_offs: List[Tuple[int, ...]] = []
+    for i in range(w):
+        offs: List[int] = []
+        other = [j for j in range(w) if j != i]
+
+        def rec(k: int, base: int):
+            if k == len(other):
+                offs.append(base)
+                return
+            j = other[k]
+            for c in range(g[j]):
+                rec(k + 1, base + c * strides[j])
+
+        rec(0, 0)
+        all_offs.append(tuple(offs))
+    return g, strides, all_offs
+
+
+def grid_multiway_count(
+    spmd: SPMD, table_groups: List[List[DTable]]
+) -> Tuple[List[List[Tuple[int, int]]], List[int]]:
+    """ONE combined count dispatch for the position-group sends of
+    SEVERAL multiway joins (one per GHD vertex at materialization) —
+    the cross-vertex fused form of ``grid_multiway_join``'s internal
+    pre-pass, so a query with many multi-atom bags still pays a single
+    measure dispatch for the whole materialization stage.
+
+    Returns (cals, count_pads): per group, the (c_out, cap_recv) pow2
+    pair for each relation (feed to ``grid_multiway_join(cals=...)``)
+    and the count wire cells to charge ((p,)-ints per relation)."""
+    entries: List[Tuple[int, int, Tuple[int, ...], int]] = []
+    valids = []
+    slices: List[Tuple[int, int]] = []
+    for tables in table_groups:
+        sizes = [t.cap * t.p for t in tables]
+        g, strides, all_offs = _grid_geometry(sizes, spmd.p)
+        start = len(entries)
+        for i, t in enumerate(tables):
+            entries.append((g[i], strides[i], all_offs[i], t.cap))
+            valids.append(t.valid)
+        slices.append((start, len(entries)))
+    oc, rt = spmd.run(
+        _grid_send_count_round,
+        *valids,
+        entries=tuple(entries),
+        p=spmd.p,
+        measure=True,
+    )
+    oc, rt = jax.device_get((oc, rt))  # (shards, n, p), (shards, n)
+    cals = [
+        [
+            (
+                pow2(max(1, int(oc[:, i].max()))),
+                pow2(max(1, int(rt[:, i].max()))),
+            )
+            for i in range(a, b)
+        ]
+        for a, b in slices
+    ]
+    pads = [(b - a) * spmd.p * spmd.p for a, b in slices]
+    return cals, pads
+
+
 def grid_multiway_join(
     spmd: SPMD,
     tables: List[DTable],
@@ -76,6 +153,7 @@ def grid_multiway_join(
     cap_recv: Optional[int] = None,
     sizes: Optional[Sequence[int]] = None,
     calibrate: bool = False,
+    cals: Optional[List[Tuple[int, int]]] = None,
     backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     """Lemma 8: join w relations in ONE round on a grid of prod(g_i) <= p
@@ -88,6 +166,9 @@ def grid_multiway_join(
     ``calibrate=True``: a count-only pre-pass per relation replaces the
     worst-case send capacity (full shard cap replicated to every other
     grid dim) with the tight pow2 occupancy of the position groups.
+    ``cals`` supplies those (c_out, cap_recv) pairs pre-measured by
+    ``grid_multiway_count`` (which fuses SEVERAL multijoins' pre-passes
+    into one dispatch) — the caller then owns the count-pad accounting.
     """
     w = len(tables)
     assert w >= 1
@@ -95,54 +176,49 @@ def grid_multiway_join(
     if w == 1:
         return tables[0], {"sent": 0, "dropped": 0, "padded": 0}
     sizes = list(sizes) if sizes is not None else [t.cap * t.p for t in tables]
-    g = _grid_shares(sizes, p)
-    strides = [1] * w
-    acc = 1
-    for i in range(w - 1, -1, -1):
-        strides[i] = acc
-        acc *= g[i]
+    g, strides, all_offs = _grid_geometry(sizes, p)
+    acc = math.prod(g)
+
+    count_pad = 0
+    if cals is None and calibrate and c_out is None and cap_recv is None:
+        # ONE combined count dispatch for every relation's position-group
+        # send (and one host sync), instead of one per relation
+        oc, rt = spmd.run(
+            _grid_send_count_round,
+            *[t.valid for t in tables],
+            entries=tuple(
+                (g[i], strides[i], all_offs[i], tables[i].cap)
+                for i in range(w)
+            ),
+            p=p,
+            measure=True,
+        )
+        oc, rt = jax.device_get((oc, rt))  # (shards, w, p), (shards, w)
+        cals = [
+            (
+                pow2(max(1, int(oc[:, i].max()))),
+                pow2(max(1, int(rt[:, i].max()))),
+            )
+            for i in range(w)
+        ]
+        count_pad = p * p  # one (p,)-int count vector per relation
 
     parts: List[DTable] = []
     stats_total = {"sent": 0, "dropped": 0, "padded": 0}
     for i, t in enumerate(tables):
-        # offsets over all other dims
         n_other = acc // g[i]
-        offs = []
-        other = [j for j in range(w) if j != i]
-
-        def rec(k: int, base: int):
-            if k == len(other):
-                offs.append(base)
-                return
-            j = other[k]
-            for c in range(g[j]):
-                rec(k + 1, base + c * strides[j])
-
-        rec(0, 0)
-        co = c_out if c_out is not None else t.cap * n_other
-        cr = cap_recv if cap_recv is not None else -(-(t.p * t.cap) // g[i])
-        count_pad = 0
-        if calibrate and c_out is None and cap_recv is None:
-            oc, rt = spmd.run(
-                _grid_send_count_one,
-                t.valid,
-                g_self=g[i],
-                stride=strides[i],
-                offsets=tuple(offs),
-                p=p,
-                cap=t.cap,
-            )
-            co = pow2(max(1, int(oc.max())))
-            cr = pow2(max(1, int(rt.max())))
-            count_pad = p * p  # the (p,)-int count vector itself
-        grp_fn = _grid_send_one
+        if cals is not None:
+            co, cr = cals[i]
+        else:
+            co = c_out if c_out is not None else t.cap * n_other
+            cr = cap_recv if cap_recv is not None else -(-(t.p * t.cap) // g[i])
         rd, rv, stats = spmd.run(
-            grp_fn,
+            _grid_send_one,
             t.data,
             t.valid,
             g_self=g[i],
             stride=strides[i],
-            offsets=tuple(offs),
+            offsets=all_offs[i],
             p=p,
             cap=t.cap,
             c_out=co,
@@ -172,6 +248,23 @@ def _grid_send_count_one(valid, *, g_self, stride, offsets, p, cap):
         (grp < g_self)[:, None], grp[:, None] * stride + offs[None, :], p
     ).astype(jnp.int32)
     return exchange_counts(dests, p)
+
+
+def _grid_send_count_round(*valids, entries, p):
+    """Every relation's position-group send counted in ONE program (the
+    fused form of n ``_grid_send_count_one`` dispatches — n relations of
+    one multijoin, or of several when ``grid_multiway_count`` batches a
+    whole materialization stage).  ``entries`` is a static tuple of
+    (g_self, stride, offsets, cap) per relation; returns stacked
+    ((n, p) out_counts, (n,) recv totals) per shard."""
+    outs, recvs = [], []
+    for v, (g_self, stride, offsets, cap) in zip(valids, entries):
+        o, r = _grid_send_count_one(
+            v, g_self=g_self, stride=stride, offsets=offsets, p=p, cap=cap
+        )
+        outs.append(o)
+        recvs.append(r)
+    return jnp.stack(outs), jnp.stack(recvs)
 
 
 def _grid_send_one(data, valid, *, g_self, stride, offsets, p, cap, c_out, cap_recv):

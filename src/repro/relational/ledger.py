@@ -29,6 +29,9 @@ class RoundRecord:
     dispatches: int = 0  # MEASURED SPMD program dispatches (0 = not measured)
     padded_slots: int = 0  # MEASURED dense all_to_all slots shipped
     heavy_tuples: int = 0  # tuple-sends routed via the heavy-hitter path
+    # the subset of ``dispatches`` that were count-only measure pre-passes.
+    # Defaulted so pre-split snapshots (``RoundRecord(**r)``) keep loading.
+    measure_dispatches: int = 0
 
 
 class Ledger:
@@ -50,6 +53,21 @@ class Ledger:
         *did*.  With round fusion the two converge; without it this is
         ~ops-per-round times larger."""
         return sum(r.dispatches for r in self.records)
+
+    @property
+    def measure_dispatches(self) -> int:
+        """Count-only calibration pre-pass dispatches — the price of
+        measured capacities.  The amortized-calibration layer (combined
+        per-round count dispatch + ``CapsCache`` + prefetch) bounds this at
+        ~one per executed round instead of one per op group."""
+        return sum(r.measure_dispatches for r in self.records)
+
+    @property
+    def payload_dispatches(self) -> int:
+        """Dispatches that moved actual operator payload (total minus the
+        measure pre-passes) — tracks the schedule, not the calibration
+        policy."""
+        return self.measured_dispatches - self.measure_dispatches
 
     @property
     def comm_tuples(self) -> int:
@@ -108,11 +126,13 @@ class Ledger:
         dispatches: int = 0,
         padded: int = 0,
         heavy: int = 0,
+        measure_dispatches: int = 0,
     ) -> None:
         self.records.append(
             RoundRecord(
                 len(self.records), phase, list(ops), int(comm), note, n_rounds,
                 int(dispatches), int(padded), int(heavy),
+                int(measure_dispatches),
             )
         )
 
@@ -147,6 +167,8 @@ class Ledger:
             "measured_shuffle": int(self.shuffle_tuples),
             "measured_rounds": int(self.rounds),
             "measured_dispatches": int(self.measured_dispatches),
+            "measure_dispatches": int(self.measure_dispatches),
+            "payload_dispatches": int(self.payload_dispatches),
             "measured_padded": int(self.padded_slots),
             "measured_heavy": int(self.heavy_tuples),
             "payload_efficiency": float(self.payload_efficiency),
@@ -159,16 +181,26 @@ class Ledger:
         for r in self.records:
             ph = phases.setdefault(
                 r.phase,
-                {"rounds": 0, "comm": 0, "dispatches": 0, "padded": 0, "heavy": 0},
+                {
+                    "rounds": 0,
+                    "comm": 0,
+                    "dispatches": 0,
+                    "measure_dispatches": 0,
+                    "padded": 0,
+                    "heavy": 0,
+                },
             )
             ph["rounds"] += r.n_rounds
             ph["comm"] += r.comm_tuples
             ph["dispatches"] += r.dispatches
+            ph["measure_dispatches"] += r.measure_dispatches
             ph["padded"] += r.padded_slots
             ph["heavy"] += r.heavy_tuples
         return {
             "rounds": self.rounds,
             "measured_dispatches": self.measured_dispatches,
+            "measure_dispatches": self.measure_dispatches,
+            "payload_dispatches": self.payload_dispatches,
             "comm_tuples": self.comm_tuples,
             "shuffle_tuples": self.shuffle_tuples,
             "padded_slots": self.padded_slots,

@@ -119,11 +119,118 @@ def measure_exchange(
         p=spmd.p,
         dedup=dedup,
         backend=backend,
+        measure=True,
     )
+    out_counts, recv_tot = jax.device_get((out_counts, recv_tot))
     return (
-        pow2(max(1, int(np.asarray(out_counts).max()))),
-        pow2(max(1, int(np.asarray(recv_tot).max()))),
+        pow2(max(1, int(out_counts.max()))),
+        pow2(max(1, int(recv_tot.max()))),
     )
+
+
+def _exchange_count_pair_shard(
+    ad, av, bd, bv, seed, *, cols_a, cols_b, p, dedup_a, dedup_b, backend
+):
+    """Both sides of a two-table exchange counted in ONE program — the
+    fused form of two ``_exchange_count_shard`` dispatches."""
+    be = get_local_backend(backend)
+    va, vb = av, bv
+    if dedup_a:
+        ka, va = local_project(ad, av, cols_a, dedup=True)
+        da = be.dests(ka, va, tuple(range(len(cols_a))), p, seed)
+    else:
+        da = be.dests(ad, va, cols_a, p, seed)
+    if dedup_b:
+        kb, vb = local_project(bd, bv, cols_b, dedup=True)
+        db = be.dests(kb, vb, tuple(range(len(cols_b))), p, seed)
+    else:
+        db = be.dests(bd, vb, cols_b, p, seed)
+    return exchange_counts(da, p), exchange_counts(db, p)
+
+
+def measure_exchange_pair(
+    spmd: SPMD,
+    a: DTable,
+    b: DTable,
+    attrs_a: Sequence[str],
+    attrs_b: Sequence[str],
+    *,
+    seed: int,
+    dedup: Tuple[bool, bool] = (False, False),
+    backend: str = "jnp",
+) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """Count-only pre-pass for BOTH sides of a join/semijoin exchange in
+    one dispatch and one host sync.  Returns ``(c_out, cap_recv)`` pairs
+    ordered (a, b) — identical numbers to two ``measure_exchange`` calls
+    with the same seed, at half the dispatch and sync cost."""
+    (oa, ra), (ob, rb) = spmd.run(
+        _exchange_count_pair_shard,
+        a.data, a.valid, b.data, b.valid, spmd.seeds(seed),
+        cols_a=a.cols(attrs_a), cols_b=b.cols(attrs_b),
+        p=spmd.p, dedup_a=dedup[0], dedup_b=dedup[1],
+        backend=backend,
+        measure=True,
+    )
+    oa, ra, ob, rb = jax.device_get((oa, ra, ob, rb))
+    return (
+        (pow2(max(1, int(oa.max()))), pow2(max(1, int(ob.max())))),
+        (pow2(max(1, int(ra.max()))), pow2(max(1, int(rb.max())))),
+    )
+
+
+def _exchange_count_pairs_shard(*args, entries, p, backend):
+    """SEVERAL two-table exchanges counted in ONE program — the
+    cross-group fused form of ``_exchange_count_pair_shard`` (e.g. every
+    2-way multijoin of one GHD materialization stage, each with its own
+    seed).  ``args`` packs (a_data, a_valid, b_data, b_valid, seed) per
+    entry; ``entries`` the static (cols_a, cols_b, dedup_a, dedup_b)."""
+    out = []
+    for i, (cols_a, cols_b, dedup_a, dedup_b) in enumerate(entries):
+        ad, av, bd, bv, seed = args[5 * i: 5 * i + 5]
+        out.append(
+            _exchange_count_pair_shard(
+                ad, av, bd, bv, seed,
+                cols_a=cols_a, cols_b=cols_b, p=p,
+                dedup_a=dedup_a, dedup_b=dedup_b, backend=backend,
+            )
+        )
+    return tuple(out)
+
+
+def measure_exchange_pairs(
+    spmd: SPMD,
+    items,
+    *,
+    backend: str = "jnp",
+):
+    """Count-only pre-pass for SEVERAL two-table exchanges in one
+    dispatch and one host sync — ``measure_exchange_pair`` amortized over
+    a whole stage of independent pair joins.  ``items`` are
+    (a, b, attrs_a, attrs_b, seed, (dedup_a, dedup_b)) tuples; returns
+    the per-item ((c_out_a, c_out_b), (cap_recv_a, cap_recv_b))."""
+    arrays = []
+    entries = []
+    for a, b, attrs_a, attrs_b, seed, dedup in items:
+        arrays += [a.data, a.valid, b.data, b.valid, spmd.seeds(seed)]
+        entries.append(
+            (a.cols(attrs_a), b.cols(attrs_b), bool(dedup[0]), bool(dedup[1]))
+        )
+    res = spmd.run(
+        _exchange_count_pairs_shard,
+        *arrays,
+        entries=tuple(entries),
+        p=spmd.p,
+        backend=backend,
+        measure=True,
+    )
+    res = jax.device_get(res)
+    return [
+        (
+            (pow2(max(1, int(oa.max()))), pow2(max(1, int(ob.max())))),
+            (pow2(max(1, int(ra.max()))), pow2(max(1, int(rb.max())))),
+        )
+        for (oa, ra), (ob, rb) in res
+    ]
 
 
 # ----------------------------------------------------------------------- join
@@ -186,9 +293,10 @@ def dist_join(
     p = spmd.p
     count_pad = 0
     if calibrate and shared and c_out is None and cap_recv is None:
-        ca, ra = measure_exchange(spmd, a, shared, seed=seed, backend=backend)
-        cb, rb = measure_exchange(spmd, b, shared, seed=seed, backend=backend)
-        c_out, cap_recv = (ca, cb), (ra, rb)
+        # one fused count dispatch for both sides (one host sync)
+        c_out, cap_recv = measure_exchange_pair(
+            spmd, a, b, shared, shared, seed=seed, backend=backend
+        )
         count_pad = 2 * p * p  # the two (p,)-int count vectors
     c_out = c_out or (a.cap, b.cap)           # safe: one shard sends all
     cap_recv = cap_recv or (p * a.cap, p * b.cap)  # safe: one shard gets all
@@ -576,6 +684,7 @@ def dist_join_count(
         c_out_a=a.cap, c_out_b=b.cap,
         cap_a=p * a.cap, cap_b=p * b.cap,
         backend=backend,
+        measure=True,
     )
     return np.asarray(counts)
 

@@ -49,6 +49,13 @@ class SPMD:
         # or cache-hit) — the *measured* counterpart of the ledger's claimed
         # BSP rounds; round fusion is proven by this counter going down.
         self.dispatch_count: int = 0
+        # the subset of ``dispatch_count`` that were count-only measure
+        # pre-passes (``run(..., measure=True)``).  Splitting the two is
+        # what lets the ledger attribute wall-clock regressions: payload
+        # dispatches track the schedule, measure dispatches track the
+        # calibration policy (amortized to ~one per round by the combined
+        # pre-pass + CapsCache, see ``core.caps_cache``).
+        self.measure_dispatch_count: int = 0
 
     # -- execution --------------------------------------------------------
     def _build(self, fn: Callable, statics: Tuple, donate: Tuple[int, ...]) -> Callable:
@@ -76,7 +83,14 @@ class SPMD:
             return jax.jit(mapped, donate_argnums=donate)
         return jax.jit(mapped)
 
-    def run(self, fn: Callable, *args, donate: Tuple[int, ...] = (), **statics):
+    def run(
+        self,
+        fn: Callable,
+        *args,
+        donate: Tuple[int, ...] = (),
+        measure: bool = False,
+        **statics,
+    ):
         """Run per-shard ``fn`` over the reducer axis.  ``statics`` must be
         hashable and are part of the compilation cache key.
 
@@ -86,7 +100,17 @@ class SPMD:
         ``donate_argnums`` when the backend supports donation, so the
         exchange output reuses the input's HBM instead of double-buffering.
         Part of the cache key: the same fn with and without donation are
-        distinct programs."""
+        distinct programs.
+
+        ``measure``: tag this dispatch as a count-only calibration
+        pre-pass (tallied in ``measure_dispatch_count`` as well); not part
+        of the cache key.  Returned arrays are JAX futures either way —
+        dispatch is async, and the host only blocks when a caller fetches
+        values (``jax.device_get`` / ``np.asarray``).  That asymmetry is
+        what the executor's measure prefetch exploits: round r+1's
+        combined count pre-pass is launched while round r's payload
+        exchanges are still in flight, and its count vectors are synced
+        only when capacity planning actually needs them."""
         donate = tuple(sorted(donate))
         key = (fn, tuple(sorted(statics.items())), donate)
         if key not in self._cache:
@@ -94,6 +118,8 @@ class SPMD:
                 fn, tuple(sorted(statics.items())), donate
             )
         self.dispatch_count += 1
+        if measure:
+            self.measure_dispatch_count += 1
         return self._cache[key](*args)
 
     def seeds(self, seed: int) -> jnp.ndarray:

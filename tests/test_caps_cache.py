@@ -1,0 +1,193 @@
+"""Amortized calibration: the cross-round ``CapsCache`` policy.
+
+Pins the safety model documented in ``repro.core.caps_cache``:
+
+- served caps can never silently undercount — either the entry's caps
+  cover the demand, or the payload's drop counter trips the executor's
+  abort-and-retry, which invalidates the entry and re-measures (the
+  no-undercount property, swept deterministically and, when available,
+  with hypothesis);
+- an entry must be CONFIRMED by a second fresh measure before it serves
+  hits (a single seed-bound observation proves nothing about the next
+  round's routing);
+- the watermark band invalidates drifting entries in both directions;
+- the cache snapshots with the driver (resume keeps amortization warm);
+- end to end: enabling the cache leaves result rows bit-identical to the
+  measure-every-round oracle across engines and fusion modes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.caps_cache import CapsCache
+from repro.core.gym import GymConfig, GymDriver, gym
+from repro.core.queries import star_ghd, star_query
+from repro.data.synthetic import star_data_sparse
+from repro.relational.batched import GroupMeasure, SideCaps
+from repro.relational.oracle import canon
+from repro.relational.shuffle import pow2
+from repro.relational.spmd import SPMD
+
+
+def gm(c_out, cap_recv, **kw) -> GroupMeasure:
+    return GroupMeasure(lhs=SideCaps(c_out, cap_recv), **kw)
+
+
+# --------------------------------------------------------------- policy
+def test_unconfirmed_entry_never_serves():
+    cache = CapsCache()
+    cache.store(("k",), gm(8, 16))
+    assert cache.lookup(("k",)) is None  # one observation is not stability
+    assert cache.misses == 1 and cache.hits == 0
+
+
+def test_covered_restore_promotes_and_serves():
+    cache = CapsCache()
+    cache.store(("k",), gm(8, 16, out_recv=32))
+    cache.store(("k",), gm(8, 8, out_recv=32))  # fresh measure <= stored caps
+    m = cache.lookup(("k",))
+    assert m is not None and cache.hits == 1
+    # hits serve one pow2 notch of headroom over the stored caps: the
+    # entry proved stability on past seeds only, and a single-notch
+    # demand drift is the common growth mode between observations
+    assert (m.lhs.c_out, m.lhs.cap_recv, m.out_recv) == (16, 32, 64)
+    assert m.padded == 0 and m.n_heavy == 0 and not m.hybrid_routed
+
+
+def test_growing_restore_merges_but_demotes():
+    cache = CapsCache()
+    cache.store(("k",), gm(8, 16))
+    cache.store(("k",), gm(32, 8))  # c_out grew past the entry: not stable
+    assert cache.lookup(("k",)) is None  # demoted back to unconfirmed
+    e = cache.entry(("k",))
+    assert e.lhs == (32, 16)  # merge is elementwise max: caps only grow
+    cache.store(("k",), gm(16, 16))  # now covered again -> promoted
+    assert cache.lookup(("k",)) is not None
+
+
+def test_heavy_and_hybrid_measures_refused():
+    cache = CapsCache()
+    assert not cache.store(("h",), gm(8, 8, n_heavy=2))
+    assert not cache.store(("h",), gm(8, 8, hybrid_routed=True))
+    assert ("h",) not in cache
+
+
+def test_watermark_band_invalidates_both_directions():
+    for max_sent, gone in ((13, False), (40, True), (2, True)):
+        cache = CapsCache()  # defaults: growth 1.0, shrink 0.25
+        cache.store(("k",), gm(16, 16))
+        cache.observe(("k",), 13, dropped=False)  # baseline sent0 = 13
+        cache.observe(("k",), max_sent, dropped=False)
+        assert (("k",) not in cache) == gone, max_sent
+    cache = CapsCache()
+    cache.store(("k",), gm(16, 16))
+    cache.observe(("k",), 13, dropped=True)  # a drop always invalidates
+    assert ("k",) not in cache and cache.invalidations == 1
+
+
+def test_json_round_trip_preserves_confirmation():
+    cache = CapsCache()
+    cache.store(("a", 4), gm(8, 16, out_recv=32, out_need=64))
+    cache.store(("a", 4), gm(8, 16, out_recv=32, out_need=64))
+    cache.store(("b", 2), gm(4, 4))
+    cache.observe(("a", 4), 7, dropped=False)
+    other = CapsCache()
+    other.load_json(cache.to_json())
+    assert len(other) == 2
+    assert other.lookup(("a", 4)) is not None  # still confirmed
+    assert other.lookup(("b", 2)) is None  # still probationary
+    assert other.entry(("a", 4)).sent0 == 7
+
+
+# ------------------------------------------------- no-undercount property
+def _protocol_covers(demands) -> None:
+    """Replay the executor's protocol against an arbitrary per-round
+    demand sequence for one signature: lookup -> (hit ? cached : fresh
+    pow2 measure) -> payload -> on overflow abort, invalidate, re-measure.
+    The pinned property: every round ends with caps >= demand, and a
+    retry only ever happens on a HIT (a fresh measure can't undercount
+    its own round)."""
+    cache = CapsCache()
+    key = ("sig",)
+    for demand in demands:
+        m = cache.lookup(key)
+        hit = m is not None
+        cap = m.lhs.c_out if hit else pow2(max(1, demand))
+        if cap < demand:  # payload counts drops -> abort-and-retry
+            assert hit, "fresh measure undercounted its own round"
+            cache.invalidate(key)
+            cap = pow2(max(1, demand))
+        assert cap >= demand
+        if not hit:
+            cache.store(key, gm(pow2(max(1, demand)), pow2(max(1, demand))))
+        cache.observe(key, demand, dropped=False)
+
+
+def test_no_undercount_deterministic_sweep():
+    sweeps = [
+        [5, 5, 5, 5, 5],  # stable: confirms then hits
+        [5, 5, 5, 90, 90],  # growth after confirmation: one retry, recovers
+        [90, 5, 5, 5, 5],  # shrink: watermark re-tightens
+        [1, 2, 4, 8, 16, 32],  # doubling every round: never stable
+        [7, 7, 100, 7, 7, 7, 7],  # spike and return
+        [0, 0, 3, 3, 3],
+    ]
+    for demands in sweeps:
+        _protocol_covers(demands)
+
+
+def test_no_undercount_property_random():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.integers(min_value=0, max_value=1 << 16), max_size=30))
+    def run(demands):
+        _protocol_covers(demands)
+
+    run()
+
+
+# ------------------------------------------------------ driver integration
+@pytest.mark.slow
+def test_snapshot_resume_keeps_cache_warm(tmp_path):
+    q, g = star_query(4), star_ghd(4)
+    data = star_data_sparse(4, seed=7)
+    drv = GymDriver(q, g, data, SPMD(4), GymConfig(seed=11))
+    drv.step()
+    drv.step()
+    saved = drv.executor.caps_cache.to_json()
+    snap = str(tmp_path / "caps_cache_snap.npz")
+    drv.save(snap)
+
+    drv2 = GymDriver(q, g, data, SPMD(4), GymConfig(seed=11))
+    drv2.load(snap)
+    assert drv2.executor.caps_cache.to_json() == saved  # warm, not re-measured
+    want = canon(drv.run().to_numpy())
+    assert canon(drv2.run().to_numpy()) == want
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["hash", "grid", "hybrid"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_bit_parity_with_measure_every_round_oracle(strategy, fused):
+    """Cache on vs off must be invisible in the results: same rows, and on
+    retry-free inputs the same comm_tuples (cached caps only change how a
+    round is measured, never what it ships on a successful attempt)."""
+    q, g = star_query(4), star_ghd(4)
+    data = star_data_sparse(4, seed=7)
+    runs = {}
+    for cc in (False, True):
+        rows, schema, led = gym(
+            q, data, ghd=g, p=4,
+            config=GymConfig(
+                strategy=strategy, fused=fused, seed=11,
+                caps_cache=cc, prefetch_measures=False,
+            ),
+        )
+        runs[cc] = (canon(rows), tuple(schema), led)
+    assert runs[True][0] == runs[False][0]
+    assert runs[True][1] == runs[False][1]
+    if runs[True][2].retries == 0 == runs[False][2].retries:
+        assert runs[True][2].comm_tuples == runs[False][2].comm_tuples
