@@ -1,22 +1,28 @@
-"""Occupancy-adaptive shuffle: count-calibrated capacities vs the fixed
-worst-case capacities, on the Table-1 families (S_8 / C_8 / TC_9, hash
-engine, p=8).
+"""Occupancy-adaptive shuffle: fixed worst-case capacities vs
+count-calibrated capacities vs the calibrated+packed wire format, on the
+Table-1 families (S_8 / C_8 / TC_9, hash engine, p=8).
 
 The acceptance bar this bench enforces:
 
-- results are bit-identical (rows, ``comm_tuples``) across the two modes;
+- results are bit-identical (rows, ``comm_tuples``) across all modes;
 - measured ``padded_slots`` drops >= 2x with calibration;
 - the families complete with ZERO abort-retries when the count pre-pass
   is enabled (blown capacities are pre-floored from measured counts);
 - dispatch economics: amortized calibration (combined per-stage count
   dispatch with the join output count fused in, cross-round caps cache,
   prefetch overlap) makes the calibrated mode at most as slow as fixed
-  on wall-clock, with at most one measure dispatch per claimed round.
+  on wall-clock, with at most one measure dispatch per claimed round;
+- the packed wire format (``GymConfig(wire_format="packed")``, bit-widths
+  from the base relations' value ranges, ``relational/wire.py``) moves
+  the SAME rows/comm/retries as calibrated-dense while improving
+  byte-true ``payload_efficiency_bytes`` >= 4x, at steady-state wall
+  clock no worse than calibrated-dense.
 
-Timing methodology: each (family, mode) pair runs twice on one shared
-``SPMD`` — the first run compiles every XLA program (reported as
-``cold_secs``), the second reuses them and its wall time is the
-``secs`` the guards compare.  The paper's cost model prices rounds and
+Timing methodology: each (family, mode) pair runs three times on one
+shared ``SPMD`` — the first run compiles every XLA program (reported
+as ``cold_secs``), the next two reuse them and the BEST wall time is
+the ``secs`` the guards compare (min-of-2: the noise-robust
+steady-state estimator).  The paper's cost model prices rounds and
 communication, not XLA compilation; steady-state is where dispatch
 economics are visible (a calibrated run launches tiny count programs
 but ships ~5x fewer padded cells, which one-time compile cost would
@@ -77,16 +83,34 @@ FAMILIES = {
 }
 
 
-def _one(q, g, data, *, calibrate: bool, p: int = 8):
-    cfg = GymConfig(strategy="hash", seed=23, calibrate_shuffle=calibrate)
+# mode name -> (calibrate_shuffle, wire_format)
+MODES = {
+    "fixed": (False, "dense"),
+    "calibrated": (True, "dense"),
+    "packed": (True, "packed"),
+}
+
+
+def _one(q, g, data, *, calibrate: bool, wire_format: str = "dense", p: int = 8):
+    cfg = GymConfig(
+        strategy="hash",
+        seed=23,
+        calibrate_shuffle=calibrate,
+        wire_format=wire_format,
+    )
     spmd = SPMD(p)
     t0 = time.time()
     GymDriver(q, g, data, spmd, cfg).run()  # compile warmup (cold run)
     cold = time.time() - t0
-    t0 = time.time()
-    drv = GymDriver(q, g, data, spmd, cfg)  # steady state: programs warm
-    rows = drv.run().to_numpy()
-    secs = time.time() - t0
+    # steady state: programs warm; best-of-2 is the noise-robust
+    # steady-state estimator (single samples on a busy CPU jitter by
+    # more than the mode deltas the guards compare)
+    secs = float("inf")
+    for _ in range(2):
+        t0 = time.time()
+        drv = GymDriver(q, g, data, spmd, cfg)
+        rows = drv.run().to_numpy()
+        secs = min(secs, time.time() - t0)
     return rows, drv.ledger, secs, cold
 
 
@@ -98,20 +122,29 @@ def run() -> list:
     for name in names:
         q, g, data = FAMILIES[name]()
         res = {}
-        for calibrate in (False, True):
-            rows, led, secs, cold = _one(q, g, data, calibrate=calibrate)
-            res[calibrate] = (rows, led)
+        secs_by = {}
+        for mode, (calibrate, wf) in MODES.items():
+            rows, led, secs, cold = _one(
+                q, g, data, calibrate=calibrate, wire_format=wf
+            )
+            res[mode] = (rows, led)
+            secs_by[mode] = secs
             rec = dict(
                 bench="shuffle",
                 query=name,
                 engine="hash",
-                mode="calibrated" if calibrate else "fixed",
+                mode=mode,
                 secs=round(secs, 3),
                 cold_secs=round(cold, 2),
                 comm_tuples=led.comm_tuples,
                 shuffle_tuples=led.shuffle_tuples,
                 padded_slots=led.padded_slots,
                 payload_efficiency=round(led.payload_efficiency, 4),
+                payload_bytes=led.payload_bytes,
+                useful_bytes=led.useful_bytes,
+                payload_efficiency_bytes=round(
+                    led.payload_efficiency_bytes, 4
+                ),
                 retries=led.retries,
                 dispatches=led.measured_dispatches,
                 measure_dispatches=led.measure_dispatches,
@@ -121,8 +154,9 @@ def run() -> list:
             )
             out.append(rec)
             trajectory.append(rec)
-        rows_f, led_f = res[False]
-        rows_c, led_c = res[True]
+        rows_f, led_f = res["fixed"]
+        rows_c, led_c = res["calibrated"]
+        rows_p, led_p = res["packed"]
         # calibration must not change WHAT moves — only how it is packed
         assert {tuple(r) for r in rows_c} == {tuple(r) for r in rows_f}, name
         assert led_c.comm_tuples == led_f.comm_tuples, (
@@ -136,15 +170,36 @@ def run() -> list:
         assert led_c.retries == 0, (name, led_c.retries)
         # acceptance: amortization pays for the pre-pass — calibrated
         # never loses the wall clock to fixed ...
-        secs_f = next(r["secs"] for r in out
-                      if r["query"] == name and r["mode"] == "fixed")
-        secs_c = next(r["secs"] for r in out
-                      if r["query"] == name and r["mode"] == "calibrated")
-        assert secs_c <= secs_f, (name, secs_c, secs_f)
+        assert secs_by["calibrated"] <= secs_by["fixed"], (
+            name, secs_by["calibrated"], secs_by["fixed"],
+        )
         # ... and batching + caching keep the measure traffic at no more
         # than one count dispatch per claimed round
         assert led_c.measure_dispatches <= led_c.rounds, (
             name, led_c.measure_dispatches, led_c.rounds,
+        )
+        # acceptance (packed wire format): bit-identical rows and comm;
+        # zero retries; the useful payload is identical by construction
+        # so the byte-efficiency ratio IS the shipped-byte ratio —
+        # require >= 4x over calibrated-dense.  (padded_slots is NOT
+        # compared: the packed join pre-count ships the actual key
+        # projections — multi-column slots — where dense ships a
+        # width-1 hashed column, so the slot metric legitimately
+        # diverges; bytes are what the packed mode is judged on.)
+        assert {tuple(r) for r in rows_p} == {tuple(r) for r in rows_c}, name
+        assert led_p.comm_tuples == led_c.comm_tuples, (
+            name, led_p.comm_tuples, led_c.comm_tuples,
+        )
+        assert led_p.retries == 0, (name, led_p.retries)
+        assert led_p.useful_bytes == led_c.useful_bytes, (
+            name, led_p.useful_bytes, led_c.useful_bytes,
+        )
+        eff_p = led_p.payload_efficiency_bytes
+        eff_c = led_c.payload_efficiency_bytes
+        assert eff_p >= 4.0 * eff_c, (name, eff_p, eff_c)
+        # packed encode/decode must not cost the steady-state wall clock
+        assert secs_by["packed"] <= secs_by["calibrated"], (
+            name, secs_by["packed"], secs_by["calibrated"],
         )
     path = OUT_PATH if not only else PARTIAL_PATH
     with open(path, "w") as f:

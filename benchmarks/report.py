@@ -46,6 +46,15 @@ PREDICTED_COLUMNS = [
      "repro.relational.ledger.Ledger.padded_slots / .payload_efficiency",
      "measured dense slots shipped vs Sec. 3.2 useful tuples; calibration"
      " per Hu & Yi / Joglekar & Ré count statistics (PAPERS.md)"),
+    ("shuffle", "payload_bytes / payload_efficiency_bytes",
+     "repro.relational.ledger.Ledger.payload_bytes /"
+     " .payload_efficiency_bytes + repro.relational.wire",
+     "byte-true wire accounting: packed bit-stream bytes (or dense int32"
+     " cells + valid flags) vs the Lemma-2/Sec. 3.2 useful-tuple bytes"),
+    ("optimizer", "pred_wire (packed)",
+     "repro.core.costs.shuffle_pad_factor(wire_gain=...) +"
+     " repro.relational.wire.wire_gain",
+     "pad factor deflated by the packed format's mean row compression"),
 ]
 
 

@@ -1,0 +1,57 @@
+"""Regenerate ``tests/fixtures/wire_s8_packed.npz`` — the golden byte
+snapshot pinning the packed wire format's bit layout (see the layout
+paragraph in ``repro/relational/wire.py``).  The fixture is the encoded
+bytes of a deterministic S_8 hub-relation exchange buffer; any codec
+change that moves a single bit fails
+``tests/test_wire_format.py::test_golden_fixture_pins_s8_packed_bytes``.
+
+Only rerun this after an intentional, documented format change:
+
+    PYTHONPATH=src python scripts/make_wire_fixture.py
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.queries import star_query
+from repro.data.synthetic import star_data_sparse
+from repro.relational.wire import WirePolicy, wire_encode
+
+OUT = os.path.join(
+    os.path.dirname(__file__), "..", "tests", "fixtures", "wire_s8_packed.npz"
+)
+
+
+def main() -> None:
+    q = star_query(8)
+    data = star_data_sparse(8, domain=64, hub_rows=256, spoke_extra=64, seed=21)
+    pol = WirePolicy.from_columns([(a.attrs, data[a.rel]) for a in q.atoms])
+    hub = next(a for a in q.atoms if len(a.attrs) > 2)
+    fmt = pol.format_for(hub.attrs)
+
+    # the same deterministic bucketization the test rebuilds: row i of
+    # the deduped hub -> bucket i % 8, slot i // 8
+    rows = np.unique(data[hub.rel], axis=0)[:200]
+    p, c_out = 8, 32
+    buf = np.zeros((p, c_out, rows.shape[1]), np.int32)
+    valid = np.zeros((p, c_out), bool)
+    for i, r in enumerate(rows):
+        buf[i % p, i // p] = r
+        valid[i % p, i // p] = True
+    wire = np.asarray(wire_encode(buf, valid, fmt))
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    np.savez(
+        OUT,
+        wire=wire,
+        col_bits=np.asarray(fmt.col_bits, np.int32),
+        c_out=np.asarray(c_out),
+    )
+    print(f"wrote {os.path.normpath(OUT)}: wire {wire.shape}, "
+          f"col_bits {fmt.col_bits}")
+
+
+if __name__ == "__main__":
+    main()

@@ -153,7 +153,7 @@ def join_size_estimate(a: float, b: float, shared: bool = True) -> float:
     return max(a, b)
 
 
-def shuffle_pad_factor(p: int, calibrated: bool) -> float:
+def shuffle_pad_factor(p: int, calibrated: bool, wire_gain: float = 1.0) -> float:
     """Predicted inflation of wire slots over useful tuples for one hash
     exchange on a p-shard SPMD.
 
@@ -165,8 +165,16 @@ def shuffle_pad_factor(p: int, calibrated: bool) -> float:
     only the pow2 rounding loss (< 2x) plus per-bucket remainders.  The
     paper prices *useful* tuples (Sec. 3.2); this factor converts that to
     what the wire actually carries, so the advisor can rank by shipped
-    slots (``predict_plan_cost(..., calibrate_shuffle=...)``)."""
-    return 2.0 if calibrated else 2.0 * float(max(1, p))
+    slots (``predict_plan_cost(..., calibrate_shuffle=...)``).
+
+    ``wire_gain`` (>= 1) reprices the PACKED wire format: the mean
+    dense-bits/packed-bits row compression of the query's exchange
+    formats (``relational.wire.wire_gain``).  The packed codec shrinks
+    every shipped slot — occupied or padding — by that ratio, so the
+    pad factor divides through; 1.0 (dense) recovers the slot prices
+    above."""
+    base = 2.0 if calibrated else 2.0 * float(max(1, p))
+    return base / max(1.0, float(wire_gain))
 
 
 # Wire-slot-equivalent price of ONE extra program dispatch (launch latency
@@ -317,6 +325,7 @@ def predict_plan_cost(
     dispatch_overhead: float = 0.0,
     dispatches: float = 0.0,
     measure_dispatches: float = 0.0,
+    wire_gain: float = 1.0,
 ) -> Dict[str, float]:
     """Walk one planner schedule op-by-op and price it under ``engine``
     on a p-shard SPMD.
@@ -340,7 +349,9 @@ def predict_plan_cost(
       per-query decision: calibration shrinks the pad factor but adds
       measure dispatches, and tiny inputs can lose the trade.  This is
       what the advisor ranks by — the wire carries slots, not the
-      paper's useful tuples.
+      paper's useful tuples.  ``wire_gain`` > 1 (the packed wire
+      format's mean row compression) deflates the pad factor, so a
+      packed execution reprices calibrated-vs-fixed honestly.
 
     Node sizes evolve under the matching-database assumption
     (``join_size_estimate``); semijoins never grow a table, so sizes are
@@ -445,7 +456,9 @@ def predict_plan_cost(
     # the wire ships padded slots for the shuffled part; the output is
     # written compacted, so it rides un-inflated (same calibration scale
     # as ``comm`` so the two stay comparable)
-    wire = shuffled * shuffle_pad_factor(p, calibrate_shuffle) + (comm - shuffled)
+    wire = shuffled * shuffle_pad_factor(p, calibrate_shuffle, wire_gain) + (
+        comm - shuffled
+    )
     overhead = float(dispatch_overhead) * (
         float(dispatches) + float(measure_dispatches)
     )

@@ -77,6 +77,12 @@ class GymConfig:
     # workload, but finite, so adversarial skew aborts with an actionable
     # CapacityCeiling instead of doubling into an OOM.
     max_cap_tuples: Optional[int] = None
+    # exchange encoding: 'dense' ships (p, c_out, arity) int32 buffers +
+    # bool valid planes; 'packed' bit-packs rows to the base relations'
+    # observed value widths (relational/wire.py) and ships one segmented
+    # uint8 buffer per fused group.  Rows, comm_tuples and retries are
+    # bit-identical either way; only the wire bytes change.
+    wire_format: str = "dense"
     # 'manual' = run exactly the knobs above; 'auto' = let the advisor
     # (core/optimizer.py) pick GHD/schedule/engine/fusion from stats.
     # After resolution the field holds the chosen Plan.key, so snapshots
@@ -110,6 +116,17 @@ class GymDriver:
             if rows.shape[0]:
                 rows = np.unique(rows, axis=0)
             dedup_rows[atom.alias] = rows
+        # sound per-attribute bit widths from the base relations' value
+        # ranges (joins never create values, so these cover every
+        # intermediate).  Derived unconditionally — it is one min/max per
+        # base column — and applied only when wire_format == 'packed', so
+        # a snapshot restored with a different wire_format (the
+        # snapshot's config wins) can rebuild either executor.
+        from ..relational.wire import WirePolicy
+
+        self._wire_policy = WirePolicy.from_columns(
+            [(atom.attrs, dedup_rows[atom.alias]) for atom in query.atoms]
+        )
         if plan is None and self.config.plan == "auto":
             from .costs import DEFAULT_DISPATCH_OVERHEAD_SLOTS
             from .optimizer import MachineProfile, choose_plan, skew_share
@@ -123,6 +140,21 @@ class GymDriver:
             skew = {
                 a.rel: skew_share(dedup_rows[a.alias]) for a in query.atoms
             }
+            # packed executions ship compressed rows: deflate the pad
+            # factor by the mean row compression of the base-relation
+            # formats so the ranking prices the wire it will actually run
+            from ..relational.wire import wire_gain
+
+            wg = (
+                wire_gain(
+                    [
+                        self._wire_policy.format_for(a.attrs)
+                        for a in query.atoms
+                    ]
+                )
+                if self.config.wire_format == "packed"
+                else 1.0
+            )
             plan = choose_plan(
                 query,
                 stats,
@@ -140,6 +172,7 @@ class GymDriver:
                 skew=skew,
                 skew_threshold=self.config.skew_threshold,
                 calibrate_options=(True, False),
+                wire_gain=wg,
             )
         self.plan = plan
         if plan is not None:
@@ -201,6 +234,7 @@ class GymDriver:
 
     def _make_executor(self) -> PhysicalExecutor:
         cfg = self.config
+        wp = self._wire_policy if cfg.wire_format == "packed" else None
         if self.plan is not None:
             # config mirrors the plan by construction (to_config in
             # __init__); load() clears self.plan before rebuilding, so a
@@ -216,6 +250,7 @@ class GymDriver:
                 skew_threshold=cfg.skew_threshold,
                 caps_cache=cfg.caps_cache,
                 prefetch=cfg.prefetch_measures,
+                wire_policy=wp,
             )
         return PhysicalExecutor(
             self.spmd,
@@ -230,6 +265,7 @@ class GymDriver:
             skew_threshold=cfg.skew_threshold,
             caps_cache=cfg.caps_cache,
             prefetch=cfg.prefetch_measures,
+            wire_policy=wp,
         )
 
     # caps live in the capacity manager; kept as a property for snapshots
@@ -257,7 +293,7 @@ class GymDriver:
         if self.cursor < 0:
             (
                 tables, comm, padded, heavy, claimed, dispatches,
-                measure_dispatches,
+                measure_dispatches, wire_bytes, useful_bytes,
             ) = self.executor.materialize(
                 self.ghd, self.base, self.node_schema, self.ledger
             )
@@ -278,6 +314,8 @@ class GymDriver:
                 padded=padded,
                 heavy=heavy,
                 measure_dispatches=measure_dispatches,
+                payload_bytes=wire_bytes,
+                useful_bytes=useful_bytes,
             )
             self.cursor = 0
             return True
@@ -287,7 +325,7 @@ class GymDriver:
         rnd = self.schedule[self.cursor]
         (
             new_tab, new_acc, comm, padded, heavy, claimed, dispatches,
-            measure_dispatches,
+            measure_dispatches, wire_bytes, useful_bytes,
         ) = self.executor.execute_round(rnd, self.tables, self.acc, self.ledger)
         self.tables = {**self.tables, **new_tab}
         self.acc = {**self.acc, **new_acc}
@@ -306,6 +344,8 @@ class GymDriver:
             padded=padded,
             heavy=heavy,
             measure_dispatches=measure_dispatches,
+            payload_bytes=wire_bytes,
+            useful_bytes=useful_bytes,
         )
         self.cursor += 1
         if self.cursor >= len(self.schedule):

@@ -326,9 +326,16 @@ def enumerate_plans(
     skew: Optional[Mapping[str, float]] = None,
     skew_threshold: Optional[float] = None,
     calibrate_options: Optional[Sequence[bool]] = None,
+    wire_gain: float = 1.0,
 ) -> List[Plan]:
     """Score every candidate plan; returns them best-first (by predicted
     wire slots under the given shuffle mode, see ``_plan_order``).
+
+    ``wire_gain`` is the executing wire format's mean row compression
+    ratio (``relational.wire.wire_gain``): 1.0 for the dense exchange,
+    > 1 when ``GymConfig.wire_format == "packed"``.  It deflates the
+    shuffle pad factor so a packed execution's plan ranking reflects
+    the bytes its wire will actually carry.
 
     ``skew`` maps relation names to their max single-key share
     (``skew_from_data``); without it every engine prices at balanced
@@ -382,6 +389,7 @@ def enumerate_plans(
                             dispatch_overhead=profile.dispatch_overhead,
                             dispatches=disp,
                             measure_dispatches=meas,
+                            wire_gain=wire_gain,
                         )
                         plans.append(
                             Plan(
@@ -426,6 +434,7 @@ def choose_plan(
     skew: Optional[Mapping[str, float]] = None,
     skew_threshold: Optional[float] = None,
     calibrate_options: Optional[Sequence[bool]] = None,
+    wire_gain: float = 1.0,
 ) -> Plan:
     """The advisor's decision: argmin over the candidate plans by
     (predicted wire slots under the configured shuffle mode, calibrated
@@ -448,6 +457,7 @@ def choose_plan(
         skew=skew,
         skew_threshold=skew_threshold,
         calibrate_options=calibrate_options,
+        wire_gain=wire_gain,
     )
     assert plans, "no executable plan candidates"
     return plans[0]

@@ -68,6 +68,7 @@ from ..relational.shuffle import pow2
 from ..relational.skew import DEFAULT_SKEW_THRESHOLD
 from ..relational.spmd import SPMD
 from ..relational.table import DTable
+from ..relational.wire import WireFormat, WirePolicy, count_wire_bytes
 from .ghd import GHD
 from .planner import Op, Round
 
@@ -97,6 +98,7 @@ def get_engine(
     spmd: SPMD,
     local_backend: str = "jnp",
     skew_threshold: Optional[float] = None,
+    wire_policy: Optional[WirePolicy] = None,
 ) -> "Engine":
     try:
         cls = ENGINES[name]
@@ -104,7 +106,10 @@ def get_engine(
         raise ValueError(
             f"unknown engine strategy {name!r}; registered: {sorted(ENGINES)}"
         ) from None
-    return cls(spmd, local_backend, skew_threshold=skew_threshold)
+    return cls(
+        spmd, local_backend, skew_threshold=skew_threshold,
+        wire_policy=wire_policy,
+    )
 
 
 class Engine:
@@ -132,12 +137,65 @@ class Engine:
         spmd: SPMD,
         local_backend: str = "jnp",
         skew_threshold: Optional[float] = None,
+        wire_policy: Optional[WirePolicy] = None,
     ):
         self.spmd = spmd
         self.local_backend = local_backend
         self.skew_threshold = (
             DEFAULT_SKEW_THRESHOLD if skew_threshold is None else skew_threshold
         )
+        # packed wire format policy (None = dense exchanges).  Derived by
+        # the driver from the base relations' value ranges, so any format
+        # built from it is sound for every intermediate of the query.
+        self.wire_policy = wire_policy
+
+    # -- packed wire formats -----------------------------------------------
+    def _fmt_for(self, schemas) -> Optional[WireFormat]:
+        """Group-uniform packed format of one exchange side: the widest-
+        per-column union over the group's instances (wider is sound)."""
+        if self.wire_policy is None:
+            return None
+        return WireFormat.union(
+            [self.wire_policy.format_for(s) for s in schemas]
+        )
+
+    def _pair_fmts(self, lhs, rhs, xcaps, rhs_keys_only: bool = False):
+        """Formats of a two-sided exchange group, recorded per-exchange
+        in the measurement's ``SideCaps``.  ``rhs_keys_only``: the rhs
+        ships its deduplicated shared-key projection (semijoins), so its
+        format covers the key columns only.  Returns (fmts, xcaps)."""
+        if self.wire_policy is None:
+            return None, xcaps
+        fmt_l = self._fmt_for([t.schema for t in lhs])
+        if rhs_keys_only:
+            rschemas = [
+                tuple(x for x in l.schema if x in set(r.schema))
+                for l, r in zip(lhs, rhs)
+            ]
+        else:
+            rschemas = [r.schema for r in rhs]
+        fmt_r = self._fmt_for(rschemas)
+        if xcaps is not None:
+            xcaps = dataclasses.replace(
+                xcaps,
+                lhs=dataclasses.replace(xcaps.lhs, fmt=fmt_l),
+                rhs=None
+                if xcaps.rhs is None
+                else dataclasses.replace(xcaps.rhs, fmt=fmt_r),
+            )
+        return (fmt_l, fmt_r), xcaps
+
+    def _single_fmt(self, ts, xcaps):
+        """Format of a one-sided exchange group (dedup), recorded in the
+        measurement's ``SideCaps``.  Returns (fmt, xcaps)."""
+        if self.wire_policy is None:
+            return None, xcaps
+        fmt = self._fmt_for([t.schema for t in ts])
+        if xcaps is not None:
+            xcaps = dataclasses.replace(
+                xcaps, lhs=dataclasses.replace(xcaps.lhs, fmt=fmt)
+            )
+        return fmt, xcaps
 
     # -- calibration pre-pass ----------------------------------------------
     def measure_group(
@@ -208,7 +266,8 @@ class Engine:
         raise NotImplementedError
 
     def intersect_many(self, as_, bs, cap: int, seeds, xcaps=None):
-        kw = {}
+        fmts, xcaps = self._pair_fmts(as_, bs, xcaps)
+        kw = {"fmts": fmts}
         if xcaps is not None:
             kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
             kw["cap_recv"] = (max(cap, xcaps.lhs.cap_recv), xcaps.rhs.cap_recv)
@@ -220,7 +279,8 @@ class Engine:
         return outs, stats, 1
 
     def dedup_many(self, ts, cap: int, seeds, xcaps=None):
-        kw = {"cap_recv": cap}
+        fmt, xcaps = self._single_fmt(ts, xcaps)
+        kw = {"cap_recv": cap, "fmt": fmt}
         if xcaps is not None:
             kw["c_out"] = xcaps.lhs.c_out
             kw["cap_recv"] = max(cap, xcaps.lhs.cap_recv)
@@ -250,20 +310,31 @@ class Engine:
         ]
         if not idx:
             return {}
-        cals, pads = G.grid_multiway_count(
+        cals, pads, byts = G.grid_multiway_count(
             self.spmd, [parts_list[i] for i in idx]
         )
-        return {i: (c, pad) for i, c, pad in zip(idx, cals, pads)}
+        return {
+            i: (c, pad, by)
+            for i, c, pad, by in zip(idx, cals, pads, byts)
+        }
 
     def multijoin(
         self, parts: List[DTable], cap: int, seed: int, calibrate=False,
         cal=None,
     ):
         if len(parts) == 1:
-            return parts[0], {"sent": 0, "dropped": 0, "padded": 0}, 0
+            return parts[0], {
+                "sent": 0, "dropped": 0, "padded": 0,
+                "wire_bytes": 0, "ubytes": 0,
+            }, 0
+        fmts = (
+            None
+            if self.wire_policy is None
+            else [self.wire_policy.format_for(t.schema) for t in parts]
+        )
         out, st = G.grid_multiway_join(
             self.spmd, parts, out_cap=cap, calibrate=calibrate, cals=cal,
-            backend=self.local_backend,
+            fmts=fmts, backend=self.local_backend,
         )
         return out, st, 1
 
@@ -301,14 +372,17 @@ class HashEngine(Engine):
             b_keys = [b.cols(sh) for b, sh in zip(rhs, shareds)]
             if kind == "join":
                 # fuse the output pre-count into the same dispatch; the
-                # hashed-key exchanges ride at a static guess (4x the
+                # keys-only exchanges ride at a static guess (4x the
                 # uniform per-destination share) that the counts verify
-                # post hoc — see join_pair_measure_spec
+                # post hoc — see join_pair_measure_spec.  Packed runs
+                # ship the actual key projections bit-packed (exact
+                # count) instead of the dense hashed-key column.
                 return B.join_pair_measure_spec(
                     self.spmd, lhs, rhs, a_keys, b_keys, seeds,
                     g_a=self._keys_guess(lhs[0].cap),
                     g_b=self._keys_guess(rhs[0].cap),
                     skew_threshold=self.skew_threshold,
+                    fmt=self._fmt_for([tuple(sh) for sh in shareds]),
                 )
             return B.pair_measure_spec(
                 self.spmd, lhs, rhs, a_keys, b_keys,
@@ -319,7 +393,15 @@ class HashEngine(Engine):
 
     def _keys_guess(self, cap: int) -> int:
         per = -(-cap // self.spmd.p)  # ceil: the uniform share
-        return pow2(min(cap, max(8, 4 * per)))
+        # The guess trades slot headroom against wire bytes: headroom
+        # avoids the one fallback ``join_need_many`` dispatch an
+        # undershot guess costs, but every guessed slot ships.  Dense
+        # already pays 5 bytes per slot elsewhere, so 4x headroom is
+        # cheap insurance; a packed run's contract is byte-minimality,
+        # so it guesses the uniform share and accepts the (rare, still
+        # exact) fallback dispatch under skew.
+        mult = 1 if self.wire_policy is not None else 4
+        return pow2(min(cap, max(8, mult * per)))
 
     def measure_finish(self, kind, lhs, rhs, seeds, m):
         if kind == "semijoin":
@@ -338,7 +420,8 @@ class HashEngine(Engine):
         return kind == "join"
 
     def semijoin_many(self, ss, rs, cap, seeds, xcaps=None):
-        kw = {}
+        fmts, xcaps = self._pair_fmts(ss, rs, xcaps, rhs_keys_only=True)
+        kw = {"fmts": fmts}
         if xcaps is not None:
             kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
             # S receives the output: never below the managed capacity (so
@@ -352,7 +435,8 @@ class HashEngine(Engine):
         return outs, stats, 1
 
     def join_many(self, as_, bs, cap, seeds, xcaps=None):
-        kw = {}
+        fmts, xcaps = self._pair_fmts(as_, bs, xcaps)
+        kw = {"fmts": fmts}
         if xcaps is not None:
             kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
             kw["cap_recv"] = (xcaps.lhs.cap_recv, xcaps.rhs.cap_recv)
@@ -397,7 +481,7 @@ class HashEngine(Engine):
             )
             pad = 2 * self.spmd.p * self.spmd.p  # two (p,)-int vectors
             for i, cal in zip(pidx, res):
-                cal_map[i] = (cal, pad)
+                cal_map[i] = (cal, pad, count_wire_bytes(self.spmd.p, 2))
         return cal_map
 
     def multijoin(self, parts, cap, seed, calibrate=False, cal=None):
@@ -405,6 +489,17 @@ class HashEngine(Engine):
             kw = {}
             if cal is not None:
                 kw["c_out"], kw["cap_recv"] = cal
+            shared = [x for x in parts[0].schema if x in parts[1].schema]
+            if self.wire_policy is not None and shared:
+                # packed runs route the materialization 2-way join through
+                # the batched exchange (same shard semantics, fmt-aware
+                # wire) — sequential dist_join ships dense only
+                fmts, _ = self._pair_fmts([parts[0]], [parts[1]], None)
+                outs, stats = B.dist_join_many(
+                    self.spmd, [parts[0]], [parts[1]], seeds=[seed],
+                    out_cap=cap, fmts=fmts, backend=self.local_backend, **kw,
+                )
+                return outs[0], stats[0], 1
             out, st = R.dist_join(
                 self.spmd, parts[0], parts[1], seed=seed, out_cap=cap,
                 calibrate=calibrate, backend=self.local_backend, **kw,
@@ -450,23 +545,25 @@ class HybridEngine(HashEngine):
     def semijoin_many(self, ss, rs, cap, seeds, xcaps=None):
         if xcaps is None or not xcaps.hybrid_routed:
             return HashEngine.semijoin_many(self, ss, rs, cap, seeds, xcaps)
+        fmts, xcaps = self._pair_fmts(ss, rs, xcaps, rhs_keys_only=True)
         outs, stats = B.hybrid_semijoin_many(
             self.spmd, ss, rs, seeds=seeds, heavy=xcaps.heavy,
             c_out=(xcaps.lhs.c_out, xcaps.rhs.c_out),
             cap_recv=(max(cap, xcaps.lhs.cap_recv), xcaps.rhs.cap_recv),
-            backend=self.local_backend,
+            fmts=fmts, backend=self.local_backend,
         )
         return outs, stats, 1
 
     def join_many(self, as_, bs, cap, seeds, xcaps=None):
         if xcaps is None or not xcaps.hybrid_routed:
             return HashEngine.join_many(self, as_, bs, cap, seeds, xcaps)
+        fmts, xcaps = self._pair_fmts(as_, bs, xcaps)
         outs, stats = B.hybrid_join_many(
             self.spmd, as_, bs, seeds=seeds, out_cap=cap, heavy=xcaps.heavy,
             c_out=(xcaps.lhs.c_out, xcaps.rhs.c_out),
             cap_recv=(xcaps.lhs.cap_recv, xcaps.rhs.cap_recv),
             swap=xcaps.swap_spread,
-            backend=self.local_backend,
+            fmts=fmts, backend=self.local_backend,
         )
         return outs, stats, 1
 
@@ -509,7 +606,8 @@ class GridEngine(Engine):
         return Engine.measure_spec(self, kind, lhs, rhs, seeds)
 
     def semijoin_many(self, ss, rs, cap, seeds, xcaps=None):
-        kw = {}
+        fmts, xcaps = self._pair_fmts(ss, rs, xcaps, rhs_keys_only=True)
+        kw = {"fmts": fmts}
         if xcaps is not None:
             kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
             kw["cap_recv"] = (xcaps.lhs.cap_recv, xcaps.rhs.cap_recv)
@@ -520,7 +618,8 @@ class GridEngine(Engine):
         return outs, stats, 2
 
     def join_many(self, as_, bs, cap, seeds, xcaps=None):
-        kw = {}
+        fmts, xcaps = self._pair_fmts(as_, bs, xcaps)
+        kw = {"fmts": fmts}
         if xcaps is not None:
             kw["c_out"] = (xcaps.lhs.c_out, xcaps.rhs.c_out)
             kw["cap_recv"] = (xcaps.lhs.cap_recv, xcaps.rhs.cap_recv)
@@ -800,9 +899,13 @@ class PhysicalExecutor:
         skew_threshold: Optional[float] = None,
         caps_cache: bool = True,
         prefetch: bool = True,
+        wire_policy: Optional[WirePolicy] = None,
     ):
         self.spmd = spmd
-        self.engine = get_engine(strategy, spmd, local_backend, skew_threshold)
+        self.engine = get_engine(
+            strategy, spmd, local_backend, skew_threshold,
+            wire_policy=wire_policy,
+        )
         self.local_backend = local_backend
         self.capman = capman
         self.seed = seed
@@ -835,6 +938,7 @@ class PhysicalExecutor:
         skew_threshold: Optional[float] = None,
         caps_cache: bool = True,
         prefetch: bool = True,
+        wire_policy: Optional[WirePolicy] = None,
     ) -> "PhysicalExecutor":
         """Build an executor straight from an advisor ``Plan``: engine
         strategy, round fusion, and local backend all come from the plan
@@ -853,6 +957,7 @@ class PhysicalExecutor:
             skew_threshold=skew_threshold,
             caps_cache=caps_cache,
             prefetch=prefetch,
+            wire_policy=wire_policy,
         )
 
     def _next_seed(self) -> int:
@@ -889,15 +994,17 @@ class PhysicalExecutor:
         flight, matched by signature AND seeds), one fresh combined
         ``RoundCounts`` over the remaining groups.  Kinds with no
         ``MeasureSpec`` fall back to the legacy per-group
-        ``measure_group``.  Returns (measures, keys, orphan_padded) —
-        the last being wire cells of prefetched count slices no group
-        consumed (schedule drift), still charged to the round."""
+        ``measure_group``.  Returns (measures, keys, orphan_padded,
+        orphan_bytes) — the last two being wire cells (and their
+        byte-true size) of prefetched count slices no group consumed
+        (schedule drift), still charged to the round."""
         n = len(groups)
         if not self.calibrate:
-            return [None] * n, [None] * n, 0
+            return [None] * n, [None] * n, 0, 0
         keys = [self._signature(g[0], resolve) for g in groups]
         measures: List[Optional[GroupMeasure]] = [None] * n
         orphan_pad = 0
+        orphan_bytes = 0
         todo: List[int] = []
         for gi in range(n):
             m = (
@@ -929,11 +1036,17 @@ class PhysicalExecutor:
                     for si, s in enumerate(counts.specs)
                     if si not in used
                 )
+                orphan_bytes += sum(
+                    s.count_bytes
+                    for si, s in enumerate(counts.specs)
+                    if si not in used
+                )
             else:
                 # nothing matched (schedule drifted since the prefetch):
                 # the whole in-flight dispatch is orphaned — charge its
                 # wire cells, never fetch it to the host
                 orphan_pad += counts.count_padded
+                orphan_bytes += counts.count_bytes
 
         def operands(gi):
             g = groups[gi]
@@ -984,11 +1097,16 @@ class PhysicalExecutor:
         ]
         if join_gis:
             items = []
+            fmts = []
             for gi in join_gis:
                 _, lhs, rhs, seeds = operands(gi)
                 items.append((lhs, rhs, seeds, measures[gi]))
+                fmts.append(self.engine._fmt_for([
+                    tuple(x for x in a.schema if x in set(b.schema))
+                    for a, b in zip(lhs, rhs)
+                ]) if self.engine.wire_policy is not None else None)
             needs = B.join_need_many(
-                self.spmd, items, backend=self.local_backend
+                self.spmd, items, fmts=fmts, backend=self.local_backend
             )
             for gi, m in zip(join_gis, needs):
                 measures[gi] = m
@@ -1003,14 +1121,14 @@ class PhysicalExecutor:
                 self.capman.heavy_hint = max(
                     self.capman.heavy_hint, m.n_heavy
                 )
-        return measures, keys, orphan_pad
+        return measures, keys, orphan_pad, orphan_bytes
 
     def _dispatch_group(self, ops_g: List[PhysOp], resolve, xcaps):
         """Phase B: the group's payload dispatch at the capacities
         ``_measure_stage`` resolved.  Returns (outputs, per-instance
-        stats, claimed rounds, measure_padded) — the last being the wire
-        cells the group's count slices shipped, charged to the round
-        alongside the payload."""
+        stats, claimed rounds, measure_padded, measure_bytes) — the last
+        two being the wire cells (and byte-true size) the group's count
+        slices shipped, charged to the round alongside the payload."""
         seeds = [op.seed for op in ops_g]
         lhs = [resolve(op.a) for op in ops_g]
         kind = ops_g[0].kind
@@ -1023,15 +1141,22 @@ class PhysicalExecutor:
                 for op in ops_g:
                     self.capman.floor(op.cap_nodes, need)
         mpad = xcaps.padded if xcaps is not None else 0
+        mbytes = xcaps.wire_bytes if xcaps is not None else 0
         cap = self.capman.cap_for(ops_g[0].cap_nodes)
         if kind == "dedup":
-            return (*self.engine.dedup_many(lhs, cap, seeds, xcaps), mpad)
+            return (*self.engine.dedup_many(lhs, cap, seeds, xcaps), mpad, mbytes)
         if kind == "semijoin":
-            return (*self.engine.semijoin_many(lhs, rhs, cap, seeds, xcaps), mpad)
+            return (
+                *self.engine.semijoin_many(lhs, rhs, cap, seeds, xcaps),
+                mpad, mbytes,
+            )
         if kind == "join":
-            return (*self.engine.join_many(lhs, rhs, cap, seeds, xcaps), mpad)
+            return (*self.engine.join_many(lhs, rhs, cap, seeds, xcaps), mpad, mbytes)
         if kind == "intersect":
-            return (*self.engine.intersect_many(lhs, rhs, cap, seeds, xcaps), mpad)
+            return (
+                *self.engine.intersect_many(lhs, rhs, cap, seeds, xcaps),
+                mpad, mbytes,
+            )
         raise ValueError(f"unknown physical op kind {kind}")
 
     # -- one schedule round ------------------------------------------------
@@ -1042,12 +1167,16 @@ class PhysicalExecutor:
         acc: Dict[int, DTable],
         ledger: Ledger,
     ) -> Tuple[
-        Dict[int, DTable], Dict[int, DTable], int, int, int, int, int, int
+        Dict[int, DTable], Dict[int, DTable],
+        int, int, int, int, int, int, int, int,
     ]:
         """Run one logical round (with abort-retry).  Returns
         (new_tables, new_acc, comm, padded, heavy, claimed_rounds,
-        dispatches, measure_dispatches) — the last two including any
-        prefetched measure dispatch launched on this round's behalf."""
+        dispatches, measure_dispatches, payload_bytes, useful_bytes) —
+        dispatches including any prefetched measure dispatch launched on
+        this round's behalf, and the byte pair being what the wire
+        actually shipped (dense or packed, pre-pass included) vs the
+        dense-int32 bytes of the useful tuples inside it."""
         stages, writes = lower_round(rnd)
         # slot liveness: tmp slots die after their last reading stage (the
         # written results live on); dropping them frees the device buffers
@@ -1072,6 +1201,8 @@ class PhysicalExecutor:
         comm_total = 0
         padded_total = 0
         heavy_total = 0
+        bytes_total = 0
+        ubytes_total = 0
         while True:
             attempt += 1
             assert attempt <= self.max_retries, f"round {rnd.phase}: too many retries"
@@ -1089,6 +1220,8 @@ class PhysicalExecutor:
             comm = 0
             padded = 0
             heavy = 0
+            wireb = 0
+            ub = 0
             claimed = 0
             dropped_by_logical: Dict[int, int] = {}
             blown_joins: List[Tuple[PhysOp, DTable, DTable]] = []
@@ -1105,15 +1238,17 @@ class PhysicalExecutor:
                 # the prefetched counts can only match attempt 1's stage 0
                 # (later stages read tmp slots; retries reseed)
                 use_pending = pending if (i == 0 and attempt == 1) else None
-                measures, keys, orphan_pad = self._measure_stage(
+                measures, keys, orphan_pad, orphan_b = self._measure_stage(
                     groups, resolve, use_pending
                 )
                 padded += orphan_pad
+                wireb += orphan_b
                 for ops_g, xcaps, key in zip(groups, measures, keys):
-                    outs, stats, rounds, mpad = self._dispatch_group(
+                    outs, stats, rounds, mpad, mbytes = self._dispatch_group(
                         ops_g, resolve, xcaps
                     )
                     padded += mpad
+                    wireb += mbytes
                     stage_claimed = max(stage_claimed, rounds)
                     g_sent, g_drop = 0, False
                     for op, out, st in zip(ops_g, outs, stats):
@@ -1121,6 +1256,8 @@ class PhysicalExecutor:
                         comm += st["sent"]
                         padded += st.get("padded", 0)
                         heavy += st.get("heavy", 0)
+                        wireb += st.get("wire_bytes", 0)
+                        ub += st.get("ubytes", 0)
                         g_sent = max(g_sent, st["sent"])
                         if st["dropped"]:
                             g_drop = True
@@ -1141,6 +1278,8 @@ class PhysicalExecutor:
                 comm_total += comm
                 padded_total += padded
                 heavy_total += heavy
+                bytes_total += wireb
+                ubytes_total += ub
             if not dropped_by_logical:
                 if self.caps_cache is not None:
                     for key, (s, dr) in fills.items():
@@ -1170,6 +1309,7 @@ class PhysicalExecutor:
             max(1, claimed),
             self.spmd.dispatch_count - d0 + pend_disp,
             self.spmd.measure_dispatch_count - md0 + pend_meas,
+            bytes_total, ubytes_total,
         )
 
     # -- measure prefetch (overlap) ----------------------------------------
@@ -1250,16 +1390,18 @@ class PhysicalExecutor:
         base: Dict[str, DTable],
         node_schema: Dict[int, Tuple[str, ...]],
         ledger: Ledger,
-    ) -> Tuple[Dict[int, DTable], int, int, int, int, int, int]:
+    ) -> Tuple[Dict[int, DTable], int, int, int, int, int, int, int, int]:
         """Compute IDB_v per tree vertex (one grid round or a hash-join
         cascade), with the centralized retry loop.  Returns
         (tables, comm, padded, heavy, claimed_rounds, dispatches,
-        measure_dispatches)."""
+        measure_dispatches, payload_bytes, useful_bytes)."""
         d0 = self.spmd.dispatch_count
         md0 = self.spmd.measure_dispatch_count
         comm = 0
         padded = 0
         heavy = 0
+        wireb = 0
+        ubytes = 0
         dropped_any = True
         attempt = 0
         max_engine_rounds = 0
@@ -1272,6 +1414,8 @@ class PhysicalExecutor:
             comm_try = 0
             padded_try = 0
             heavy_try = 0
+            bytes_try = 0
+            ubytes_try = 0
             tables = {}
             max_engine_rounds = 0
             # phase A (as in execute_round): project every vertex's parts,
@@ -1313,8 +1457,11 @@ class PhysicalExecutor:
                 )
                 sent, drop = st["sent"], st["dropped"]
                 pad = st.get("padded", 0)
+                wb = st.get("wire_bytes", 0)
+                ubytes_try += st.get("ubytes", 0)
                 if vcal is not None:
                     pad += vcal[1]  # the combined pre-pass's count cells
+                    wb += vcal[2]  # ... and their byte-true size
                 heavy_try += st.get("heavy", 0)
                 if need_dedup:
                     seeds = [self._next_seed()]
@@ -1335,6 +1482,7 @@ class PhysicalExecutor:
                                 self.caps_cache.store(dkey, dx)
                     if dx is not None:
                         pad += dx.padded
+                        wb += dx.wire_bytes
                         if dx.out_recv and dx.out_recv > cap:
                             self.capman.ensure(v, dx.out_recv)
                             cap = self.capman.cap_for((v,))
@@ -1345,6 +1493,8 @@ class PhysicalExecutor:
                     sent += dstats[0]["sent"]
                     drop += dstats[0]["dropped"]
                     pad += dstats[0].get("padded", 0)
+                    wb += dstats[0].get("wire_bytes", 0)
+                    ubytes_try += dstats[0].get("ubytes", 0)
                     er += r2
                     if self.caps_cache is not None:
                         self.caps_cache.observe(
@@ -1355,6 +1505,7 @@ class PhysicalExecutor:
                     self.capman.grow_node(v)
                 comm_try += sent
                 padded_try += pad
+                bytes_try += wb
                 # canonicalize column order to node schema
                 tables[v], _ = R.dist_project(self.spmd, out, node_schema[v])
                 max_engine_rounds = max(max_engine_rounds, er)
@@ -1362,6 +1513,8 @@ class PhysicalExecutor:
                 comm += comm_try
                 padded += padded_try
                 heavy += heavy_try
+                wireb += bytes_try
+                ubytes += ubytes_try
             if dropped_any:
                 ledger.retries += 1
         for v in tables:
@@ -1370,4 +1523,5 @@ class PhysicalExecutor:
             tables, comm, padded, heavy, max(1, max_engine_rounds),
             self.spmd.dispatch_count - d0,
             self.spmd.measure_dispatch_count - md0,
+            wireb, ubytes,
         )

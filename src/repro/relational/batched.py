@@ -68,9 +68,13 @@ from .shuffle import (
     bucket_counts,
     exchange,
     exchange_counts,
+    exchange_finish,
     exchange_multi,
+    exchange_multi_start,
+    exchange_start,
     padded_slots,
     pow2,
+    ship_segments,
 )
 from .skew import (
     DEFAULT_SKEW_THRESHOLD,
@@ -80,6 +84,29 @@ from .skew import (
 )
 from .spmd import AXIS, SPMD
 from .table import DTable, schema_join
+from .wire import (
+    WireFormat,
+    count_wire_bytes,
+    dense_wire_bytes,
+    packed_wire_bytes,
+)
+
+
+def _xbytes(p: int, c_out: int, arity: int, fmt: Optional[WireFormat]) -> int:
+    """Bytes ONE exchange of this shape ships end-to-end: dense cells +
+    valid plane when ``fmt`` is None, the packed bit stream otherwise."""
+    if fmt is None:
+        return dense_wire_bytes(p, c_out, arity)
+    return packed_wire_bytes(p, c_out, fmt)
+
+
+# Width of the packed join pre-count's key hash when the actual key
+# projection is wider (see ``join_pair_measure_spec``).  Narrow enough to
+# beat the packed keys on any multi-attribute schema, wide enough that
+# extra collisions (which only OVER-count the join output) stay deep in
+# the pow2 rounding noise of the derived ``out_need``.
+JOIN_HASH_BITS = 16
+_JOIN_HASH_FMT = WireFormat((JOIN_HASH_BITS,))
 
 
 # ------------------------------------------------------------ stack helpers
@@ -111,7 +138,8 @@ def _seed_array(seeds: Sequence[int], p: int) -> jax.Array:
 
 
 def _per_op_stats(
-    sent, dropped, padded: int = 0, heavy=None
+    sent, dropped, padded: int = 0, heavy=None, wire_bytes: int = 0,
+    ubytes=None,
 ) -> List[Dict[str, int]]:
     """(p, k) shard stats -> one {'sent','dropped','padded'} dict per
     instance; ``padded`` (dense slots the wire shipped, a static of the
@@ -119,16 +147,26 @@ def _per_op_stats(
     hybrid ops' per-shard count of tuple-sends routed through the
     heavy-hitter path) adds a ``'heavy'`` key when given — hash/grid ops
     omit the key so their stats stay byte-identical to the sequential
-    operators'."""
+    operators'.  ``wire_bytes`` (byte-true shipped size, static like
+    ``padded``) and ``ubytes`` ((p, k) useful dense-int32 bytes actually
+    occupied, traced like ``sent``) feed the ledger's byte accounting."""
     s = np.asarray(sent).sum(axis=0)
     d = np.asarray(dropped).sum(axis=0)
     out = [
-        {"sent": int(a), "dropped": int(b), "padded": int(padded)}
+        {
+            "sent": int(a),
+            "dropped": int(b),
+            "padded": int(padded),
+            "wire_bytes": int(wire_bytes),
+        }
         for a, b in zip(s, d)
     ]
     if heavy is not None:
         for st, h in zip(out, np.asarray(heavy).sum(axis=0)):
             st["heavy"] = int(h)
+    if ubytes is not None:
+        for st, u in zip(out, np.asarray(ubytes).sum(axis=0)):
+            st["ubytes"] = int(u)
     return out
 
 
@@ -142,6 +180,10 @@ class SideCaps:
 
     c_out: int
     cap_recv: int
+    # packed wire format of this side's exchange (None = dense).  Recorded
+    # by the engine when a WirePolicy is active so the payload dispatch,
+    # the caps cache, and snapshots all agree on the encoding.
+    fmt: Optional[WireFormat] = None
 
     @staticmethod
     def from_counts(out_counts, recv_tot) -> "SideCaps":
@@ -184,6 +226,10 @@ class GroupMeasure:
     out_recv: Optional[int] = None
     out_need: Optional[int] = None
     padded: int = 0
+    # byte-true size of the pre-pass's OWN traffic (count vectors +
+    # keys-only join-count exchanges) — the ``padded`` slot charge's
+    # byte sibling, accumulated into the ledger's payload_bytes
+    wire_bytes: int = 0
     heavy: Optional[np.ndarray] = None
     n_heavy: int = 0
     lhs_heavy_rows: int = 0
@@ -227,19 +273,53 @@ def _measure_pair_shard_b(ad, av, bd, bv, seed, ak, bk, *, p, dedup_b, backend):
     return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk)
 
 
+def _measure_keys(akeys, bkeys, ak, bk, seed, fmt):
+    """Shared key-source policy of the fused and fallback join counts:
+    dense ships a single 32-bit hashed-key column; packed ships the
+    actual key projection when it bit-packs narrower than a hashed
+    column (exact count), else a ``JOIN_HASH_BITS``-bit hash (equal keys
+    keep equal hashes, so the count only OVER-counts — sound).  Returns
+    (sa, sb, key column ids, wire format to ship with)."""
+    if fmt is not None and fmt.row_bits <= _JOIN_HASH_FMT.row_bits:
+        return akeys, bkeys, tuple(range(ak.shape[0])), fmt
+    if fmt is not None:
+        mask = jnp.uint32((1 << JOIN_HASH_BITS) - 1)
+        sa = jax.lax.bitcast_convert_type(
+            hash_columns(akeys, tuple(range(ak.shape[0])), seed) & mask,
+            jnp.int32,
+        )[:, None]
+        sb = jax.lax.bitcast_convert_type(
+            hash_columns(bkeys, tuple(range(bk.shape[0])), seed) & mask,
+            jnp.int32,
+        )[:, None]
+        return sa, sb, (0,), _JOIN_HASH_FMT
+    return akeys, bkeys, tuple(range(ak.shape[0])), None
+
+
 def _join_count_one(ad, av, bd, bv, seed, ak, bk, *,
-                    p, c_out_a, c_out_b, cap_a, cap_b, backend):
+                    p, c_out_a, c_out_b, cap_a, cap_b, fmt=None, backend):
     """Keys-only exchange at the ALREADY-CALIBRATED tight capacities,
     then the exact per-shard join output count — the ``dist_join_count``
     retry floor, moved BEFORE the payload at calibrated (not worst-case)
     wire cost."""
     akeys = _take(ad, ak)
     da = _dests(akeys, av, p, seed, backend)
-    a2, a2v, *_ = exchange(akeys, av, da, p=p, c_out=c_out_a, cap_recv=cap_a)
     bkeys = _take(bd, bk)
     db = _dests(bkeys, bv, p, seed, backend)
-    b2, b2v, *_ = exchange(bkeys, bv, db, p=p, c_out=c_out_b, cap_recv=cap_b)
-    kc = tuple(range(ak.shape[0]))
+    sa, sb, kc, sfmt = _measure_keys(akeys, bkeys, ak, bk, seed, fmt)
+    if sfmt is not None:
+        aw, _sa, _dsa = exchange_start(sa, av, da, p=p, c_out=c_out_a, fmt=sfmt)
+        bw, _sb, _dsb = exchange_start(sb, bv, db, p=p, c_out=c_out_b, fmt=sfmt)
+        aw2, bw2 = ship_segments([aw, bw])
+        a2, a2v, _ = exchange_finish(
+            aw2, p=p, c_out=c_out_a, cap_recv=cap_a, fmt=sfmt
+        )
+        b2, b2v, _ = exchange_finish(
+            bw2, p=p, c_out=c_out_b, cap_recv=cap_b, fmt=sfmt
+        )
+    else:
+        a2, a2v, *_ = exchange(sa, av, da, p=p, c_out=c_out_a, cap_recv=cap_a)
+        b2, b2v, *_ = exchange(sb, bv, db, p=p, c_out=c_out_b, cap_recv=cap_b)
     return local_join_count(a2, a2v, b2, b2v, kc, kc, backend)
 
 
@@ -260,7 +340,8 @@ def _heavy_array(heavy: np.ndarray, p: int) -> jax.Array:
     return jnp.broadcast_to(h, (p,) + h.shape)
 
 
-def _hybrid_exchange(data, valid, dest, hw, *, p, c_out, cap_recv, spread):
+def _hybrid_exchange(data, valid, dest, hw, *, p, c_out, cap_recv, spread,
+                     fmt=None):
     """One side of a hybrid exchange: ``spread=True`` deals the heavy rows
     positionally (single-dest ``exchange``), ``spread=False`` broadcasts
     them to every reducer (``exchange_multi``).  Returns
@@ -268,12 +349,12 @@ def _hybrid_exchange(data, valid, dest, hw, *, p, c_out, cap_recv, spread):
     if spread:
         d2, hvy = split_dests(dest, hw, p)
         rd, rv, sent, ds, dr = exchange(
-            data, valid, d2, p=p, c_out=c_out, cap_recv=cap_recv
+            data, valid, d2, p=p, c_out=c_out, cap_recv=cap_recv, fmt=fmt
         )
         return rd, rv, sent, ds + dr, hvy.sum()
     d2, hvy = bcast_dests(dest, hw, p)
     rd, rv, sent, ds, dr = exchange_multi(
-        data, valid, d2, p=p, c_out=c_out, cap_recv=cap_recv
+        data, valid, d2, p=p, c_out=c_out, cap_recv=cap_recv, fmt=fmt
     )
     return rd, rv, sent, ds + dr, p * hvy.sum()
 
@@ -333,21 +414,24 @@ def _hybrid_pair_counts(
 
 
 def _hybrid_join_count_one(ad, av, bd, bv, seed, ak, bk, hw, *,
-                           p, c_out_a, c_out_b, cap_a, cap_b, swap, backend):
+                           p, c_out_a, c_out_b, cap_a, cap_b, swap, fmt=None,
+                           backend):
     """Keys-only exchange at the hybrid-calibrated capacities, then the
     exact per-shard join output count UNDER HYBRID PLACEMENT — the spread
     join's true requirement, not the hash join's one-reducer pile-up."""
     akeys = _take(ad, ak)
     da = _dests(akeys, av, p, seed, backend)
-    a2, a2v, *_ = _hybrid_exchange(
-        akeys, av, da, hw, p=p, c_out=c_out_a, cap_recv=cap_a, spread=not swap
-    )
     bkeys = _take(bd, bk)
     db = _dests(bkeys, bv, p, seed, backend)
-    b2, b2v, *_ = _hybrid_exchange(
-        bkeys, bv, db, hw, p=p, c_out=c_out_b, cap_recv=cap_b, spread=swap
+    sa, sb, kc, sfmt = _measure_keys(akeys, bkeys, ak, bk, seed, fmt)
+    a2, a2v, *_ = _hybrid_exchange(
+        sa, av, da, hw, p=p, c_out=c_out_a, cap_recv=cap_a, spread=not swap,
+        fmt=sfmt,
     )
-    kc = tuple(range(ak.shape[0]))
+    b2, b2v, *_ = _hybrid_exchange(
+        sb, bv, db, hw, p=p, c_out=c_out_b, cap_recv=cap_b, spread=swap,
+        fmt=sfmt,
+    )
     return local_join_count(a2, a2v, b2, b2v, kc, kc, backend)
 
 
@@ -369,6 +453,7 @@ def _finalize_pair_counts(
     *,
     p: int,
     count_padded: int,
+    count_bytes: int = 0,
     skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
 ) -> GroupMeasure:
     """Host-side tail shared by the per-group pair measure and the
@@ -386,6 +471,7 @@ def _finalize_pair_counts(
         rhs=SideCaps.from_counts(ob_np, rb),
         out_recv=None,
         padded=count_padded,
+        wire_bytes=count_bytes,
         heavy=heavy,
         n_heavy=int(heavy.sum()),
         lhs_heavy_rows=int(arrivals_a[heavy].sum()),
@@ -420,6 +506,7 @@ def _measure_pair_many(
         np.asarray(oa), ra, np.asarray(ob), rb,
         p=p,
         count_padded=2 * len(as_) * p * p,  # two (p,)-int count vectors each
+        count_bytes=count_wire_bytes(p, 2 * len(as_)),
         skew_threshold=skew_threshold,
     )
 
@@ -469,7 +556,9 @@ def finish_semijoin_measure(
         )
         return dataclasses.replace(
             m, lhs=lhs, rhs=rhs, out_recv=lhs.cap_recv,
-            padded=m.padded + 2 * len(ss) * p * p, hybrid_routed=True,
+            padded=m.padded + 2 * len(ss) * p * p,
+            wire_bytes=m.wire_bytes + count_wire_bytes(p, 2 * len(ss)),
+            hybrid_routed=True,
         )
     return dataclasses.replace(m, out_recv=m.lhs.cap_recv)
 
@@ -503,6 +592,7 @@ def hybridize_join_measure(
     return dataclasses.replace(
         m, lhs=lhs, rhs=rhs, out_need=None,
         padded=m.padded + 2 * len(as_) * p * p,
+        wire_bytes=m.wire_bytes + count_wire_bytes(p, 2 * len(as_)),
         hybrid_routed=True, swap_spread=swap,
     )
 
@@ -564,6 +654,12 @@ def measure_join_many(
         + k * (
             padded_slots(p, m.lhs.c_out, nk) + padded_slots(p, m.rhs.c_out, nk)
         ),
+        # the keys-only exchanges ride the dense path; charge them dense
+        wire_bytes=m.wire_bytes
+        + k * (
+            dense_wire_bytes(p, m.lhs.c_out, nk)
+            + dense_wire_bytes(p, m.rhs.c_out, nk)
+        ),
     )
 
 
@@ -601,7 +697,8 @@ def measure_dedup_many(
     )
     caps = SideCaps.from_counts(o, r)
     return GroupMeasure(
-        lhs=caps, out_recv=caps.cap_recv, padded=len(ts) * p * p
+        lhs=caps, out_recv=caps.cap_recv, padded=len(ts) * p * p,
+        wire_bytes=count_wire_bytes(p, len(ts)),
     )
 
 
@@ -688,6 +785,7 @@ def measure_grid_join_many(
         lhs=SideCaps.from_counts(oa, ra),
         rhs=SideCaps.from_counts(ob, rb),
         padded=2 * len(as_) * p * p,
+        wire_bytes=count_wire_bytes(p, 2 * len(as_)),
     )
 
 
@@ -713,6 +811,7 @@ def measure_grid_semijoin_many(
         lhs=SideCaps.from_counts(oa, ra),
         rhs=SideCaps.from_counts(ob, rb),
         padded=2 * len(ss) * p * p,
+        wire_bytes=count_wire_bytes(p, 2 * len(ss)),
     )
 
 
@@ -738,6 +837,7 @@ class MeasureSpec:
     k: int
     rows: int
     count_padded: int  # int32 cells this spec's count vectors ship
+    count_bytes: int = 0  # byte-true size of the same pre-pass traffic
     skew_threshold: float = DEFAULT_SKEW_THRESHOLD
     join_rows: int = 0  # rows this spec owns in the fused join-count block
 
@@ -759,6 +859,7 @@ def pair_measure_spec(
             _key_array(a_keys, p), _key_array(b_keys, p),
         ),
         k=k, rows=2 * k, count_padded=2 * k * p * p,
+        count_bytes=count_wire_bytes(p, 2 * k),
         skew_threshold=skew_threshold,
     )
 
@@ -766,10 +867,11 @@ def pair_measure_spec(
 def join_pair_measure_spec(
     spmd: SPMD, as_, bs, a_keys, b_keys, seeds, *,
     g_a: int, g_b: int, skew_threshold: float = DEFAULT_SKEW_THRESHOLD,
+    fmt: Optional[WireFormat] = None,
 ) -> MeasureSpec:
     """Hash join pre-pass with the output count FUSED into the same
     dispatch: besides both sides' exchange counts, the program ships a
-    single hashed-key column per side at the STATIC guess capacities
+    keys-only exchange per side at the STATIC guess capacities
     ``g_a``/``g_b`` and counts the join output exactly per destination.
 
     The guesses break the circular dependency (a tight keys-only
@@ -778,23 +880,53 @@ def join_pair_measure_spec(
     (max per-destination send <= g); ``_finalize_spec`` only trusts the
     fused output count when it did, so an undershot guess costs one
     fallback ``join_need_many`` dispatch, never an undercounted
-    capacity.  Matching on the 32-bit key hash can only OVER-count
-    (colliding keys land on one destination and count as matches), so
-    the derived ``out_need`` stays a sound capacity."""
+    capacity.
+
+    Dense (``fmt=None``) ships a single hashed-key column per side:
+    matching on the 32-bit key hash can only OVER-count (colliding keys
+    land on one destination and count as matches), so the derived
+    ``out_need`` stays a sound capacity at width-1 wire cost.  Packed
+    (``fmt`` = the group's shared-key ``WireFormat``) ships the actual
+    key projections bit-packed when they fit in fewer bits than a
+    hashed column — then the count is exact, which can only tighten
+    ``out_need`` — and otherwise (wide multi-attribute keys) a
+    bit-packed ``JOIN_HASH_BITS``-bit key hash, which keeps the
+    overcount soundness at the narrowest wire cost of all."""
     p = spmd.p
     ad, av = _stack(as_)
     bd, bv = _stack(bs)
     k = len(as_)
+    keyed = False
+    sfmt = fmt
+    if fmt is not None:
+        # the SHIPPED format after the _measure_keys policy (the entry
+        # keeps the original so the shard body resolves identically)
+        keyed = fmt.row_bits <= _JOIN_HASH_FMT.row_bits
+        if not keyed:
+            sfmt = _JOIN_HASH_FMT
+    if fmt is None:
+        # count vectors + the two hashed-key (width 1) dense exchanges
+        pad = 2 * k * p * p + k * p * p * (g_a + g_b)
+        byt = count_wire_bytes(p, 2 * k) + k * (
+            dense_wire_bytes(p, g_a, 1) + dense_wire_bytes(p, g_b, 1)
+        )
+    else:
+        # count vectors + the two packed keys-only exchanges (the slot
+        # metric stays width-weighted: one cell per shipped column)
+        pad = 2 * k * p * p + k * p * p * (g_a + g_b) * sfmt.arity
+        byt = count_wire_bytes(p, 2 * k) + k * (
+            packed_wire_bytes(p, g_a, sfmt) + packed_wire_bytes(p, g_b, sfmt)
+        )
     return MeasureSpec(
         tag="join_pair",
-        entry=("join_pair", k, g_a, g_b),
+        entry=("join_pair", k, g_a, g_b, fmt, keyed),
         arrays=(
             ad, av, bd, bv, _seed_array(seeds, p),
             _key_array(a_keys, p), _key_array(b_keys, p),
         ),
         k=k, rows=2 * k,
-        # count vectors + the two hashed-key (width 1) exchanges
-        count_padded=2 * k * p * p + k * p * p * (g_a + g_b),
+        count_padded=pad,
+        count_bytes=byt,
         skew_threshold=skew_threshold,
         join_rows=k,
     )
@@ -811,6 +943,7 @@ def single_measure_spec(spmd: SPMD, ts, seeds) -> MeasureSpec:
         entry=("single", k),
         arrays=(d, v, _seed_array(seeds, p), cols),
         k=k, rows=k, count_padded=k * p * p,
+        count_bytes=count_wire_bytes(p, k),
     )
 
 
@@ -826,6 +959,7 @@ def grid_pair_measure_spec(spmd: SPMD, as_, bs) -> MeasureSpec:
         entry=("grid_pair", k, plan),
         arrays=(_stack_valid(as_), _stack_valid(bs)),
         k=k, rows=2 * k, count_padded=2 * k * p * p,
+        count_bytes=count_wire_bytes(p, 2 * k),
     )
 
 
@@ -845,6 +979,7 @@ def grid_rkeys_measure_spec(spmd: SPMD, ss, rs) -> MeasureSpec:
         entry=("grid_rkeys", k, plan),
         arrays=(_stack_valid(ss), rd, rv, rk),
         k=k, rows=2 * k, count_padded=2 * k * p * p,
+        count_bytes=count_wire_bytes(p, 2 * k),
     )
 
 
@@ -885,34 +1020,58 @@ def _measure_round_shard(*arrays, entries, p, backend):
             oa, ob = jax.vmap(pair_one)(ad, av, bd, bv, seed, ak, bk)
             blocks += [oa, ob]
         elif tag == "join_pair":
-            _, k, g_a, g_b = e
+            _, k, g_a, g_b, jfmt, keyed = e
             ad, av, bd, bv, seed, ak, bk = arrays[i : i + 7]
             i += 7
 
-            def jp_one(ad, av, bd, bv, seed, ak, bk, _ga=g_a, _gb=g_b):
+            def jp_one(ad, av, bd, bv, seed, ak, bk,
+                       _ga=g_a, _gb=g_b, _fmt=jfmt, _keyed=keyed):
                 akeys = _take(ad, ak)
                 da = _dests(akeys, av, p, seed, backend)
                 bkeys = _take(bd, bk)
                 db = _dests(bkeys, bv, p, seed, backend)
-                # a single hashed-key column stands in for the nk-wide
-                # projection: equal keys keep equal hashes (and equal
-                # destinations), so the exchanged count can only over-
-                # count — a sound out_need at width-1 wire cost
-                ha = jax.lax.bitcast_convert_type(
-                    hash_columns(akeys, tuple(range(ak.shape[0])), seed),
-                    jnp.int32,
-                )[:, None]
-                hb = jax.lax.bitcast_convert_type(
-                    hash_columns(bkeys, tuple(range(bk.shape[0])), seed),
-                    jnp.int32,
-                )[:, None]
-                a2, a2v, *_ = exchange(
-                    ha, av, da, p=p, c_out=_ga, cap_recv=p * _ga
-                )
-                b2, b2v, *_ = exchange(
-                    hb, bv, db, p=p, c_out=_gb, cap_recv=p * _gb
-                )
-                jc = local_join_count(a2, a2v, b2, b2v, (0,), (0,), backend)
+                if _fmt is not None:
+                    # packed: _measure_keys picks the actual bit-packed
+                    # key projection (narrow keys, exact count) or a
+                    # JOIN_HASH_BITS-bit hash (wide keys, sound
+                    # over-count); one segmented collective either way
+                    sa, sb, kc, sfmt = _measure_keys(
+                        akeys, bkeys, ak, bk, seed, _fmt
+                    )
+                    aw, _sa, _dsa = exchange_start(
+                        sa, av, da, p=p, c_out=_ga, fmt=sfmt
+                    )
+                    bw, _sb, _dsb = exchange_start(
+                        sb, bv, db, p=p, c_out=_gb, fmt=sfmt
+                    )
+                    aw2, bw2 = ship_segments([aw, bw])
+                    a2, a2v, _ = exchange_finish(
+                        aw2, p=p, c_out=_ga, cap_recv=p * _ga, fmt=sfmt
+                    )
+                    b2, b2v, _ = exchange_finish(
+                        bw2, p=p, c_out=_gb, cap_recv=p * _gb, fmt=sfmt
+                    )
+                else:
+                    # dense: a single hashed-key column stands in for the
+                    # nk-wide projection: equal keys keep equal hashes
+                    # (and equal destinations), so the exchanged count can
+                    # only over-count — a sound out_need at width-1 cost
+                    sa = jax.lax.bitcast_convert_type(
+                        hash_columns(akeys, tuple(range(ak.shape[0])), seed),
+                        jnp.int32,
+                    )[:, None]
+                    sb = jax.lax.bitcast_convert_type(
+                        hash_columns(bkeys, tuple(range(bk.shape[0])), seed),
+                        jnp.int32,
+                    )[:, None]
+                    kc = (0,)
+                    a2, a2v, *_ = exchange(
+                        sa, av, da, p=p, c_out=_ga, cap_recv=p * _ga
+                    )
+                    b2, b2v, *_ = exchange(
+                        sb, bv, db, p=p, c_out=_gb, cap_recv=p * _gb
+                    )
+                jc = local_join_count(a2, a2v, b2, b2v, kc, kc, backend)
                 return bucket_counts(da, p), bucket_counts(db, p), jc
 
             oa, ob, jc = jax.vmap(jp_one)(ad, av, bd, bv, seed, ak, bk)
@@ -976,7 +1135,8 @@ def _finalize_spec(
         o, r = cnts[:, off : off + k, :], recv[:, off : off + k]
         caps = SideCaps.from_counts(o, r)
         return GroupMeasure(
-            lhs=caps, out_recv=caps.cap_recv, padded=spec.count_padded
+            lhs=caps, out_recv=caps.cap_recv, padded=spec.count_padded,
+            wire_bytes=spec.count_bytes,
         )
     oa, ra = cnts[:, off : off + k, :], recv[:, off : off + k]
     ob, rb = cnts[:, off + k : off + 2 * k, :], recv[:, off + k : off + 2 * k]
@@ -984,6 +1144,7 @@ def _finalize_spec(
         m = _finalize_pair_counts(
             oa, ra, ob, rb, p=p,
             count_padded=spec.count_padded,
+            count_bytes=spec.count_bytes,
             skew_threshold=spec.skew_threshold,
         )
         if spec.tag == "join_pair":
@@ -991,7 +1152,7 @@ def _finalize_spec(
             # the hashed-key exchanges held every send (guess capacity
             # not exceeded) — otherwise out_need stays None and the
             # executor falls back to the exact join_need_many dispatch
-            _, _, g_a, g_b = spec.entry
+            _, _, g_a, g_b, _jfmt, _keyed = spec.entry
             if int(oa.max()) <= g_a and int(ob.max()) <= g_b:
                 jc = jcnt[:, joff : joff + spec.join_rows]
                 m = dataclasses.replace(
@@ -1003,6 +1164,7 @@ def _finalize_spec(
         lhs=SideCaps.from_counts(oa, ra),
         rhs=SideCaps.from_counts(ob, rb),
         padded=spec.count_padded,
+        wire_bytes=spec.count_bytes,
     )
 
 
@@ -1041,6 +1203,10 @@ class RoundCounts:
     def count_padded(self) -> int:
         return sum(s.count_padded for s in self.specs)
 
+    @property
+    def count_bytes(self) -> int:
+        return sum(s.count_bytes for s in self.specs)
+
     def fetch(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         if self._host is None:
             self._host = jax.device_get(
@@ -1071,21 +1237,21 @@ def _join_need_round_shard(*arrays, entries, p, backend):
     i = 0
     for e in entries:
         if e[0] == "hash":
-            _, k, coa, cob, ca, cb = e
+            _, k, coa, cob, ca, cb, fmt = e
             ad, av, bd, bv, seed, ak, bk = arrays[i : i + 7]
             i += 7
             one = functools.partial(
                 _join_count_one, p=p, c_out_a=coa, c_out_b=cob,
-                cap_a=ca, cap_b=cb, backend=backend,
+                cap_a=ca, cap_b=cb, fmt=fmt, backend=backend,
             )
             outs.append(jax.vmap(one)(ad, av, bd, bv, seed, ak, bk))
         else:  # hybrid placement
-            _, k, coa, cob, ca, cb, swap = e
+            _, k, coa, cob, ca, cb, swap, fmt = e
             ad, av, bd, bv, seed, ak, bk, hw = arrays[i : i + 8]
             i += 8
             one = functools.partial(
                 _hybrid_join_count_one, p=p, c_out_a=coa, c_out_b=cob,
-                cap_a=ca, cap_b=cb, swap=swap, backend=backend,
+                cap_a=ca, cap_b=cb, swap=swap, fmt=fmt, backend=backend,
             )
             outs.append(jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, hw))
     return jnp.concatenate(outs, axis=0)  # (sum_k,) per shard
@@ -1095,17 +1261,24 @@ def join_need_many(
     spmd: SPMD,
     items: Sequence[Tuple[Sequence[DTable], Sequence[DTable], Sequence[int], GroupMeasure]],
     *,
+    fmts: Optional[Sequence[Optional[WireFormat]]] = None,
     backend: str = "jnp",
 ) -> List[GroupMeasure]:
     """ONE dispatch computing the exact join-output requirement for EVERY
     join group of a round stage; each returned measure carries
     ``out_need`` with the keys-only exchange priced into ``padded`` —
-    identical numbers to ``measure_join_many``'s per-group tail."""
+    identical numbers to ``measure_join_many``'s per-group tail.
+
+    ``fmts`` (one shared-key ``WireFormat`` or None per item) packs the
+    keys-only exchanges with the ``_measure_keys`` policy — the same
+    wire the fused pre-count would have used."""
     p = spmd.p
+    if fmts is None:
+        fmts = [None] * len(items)
     arrays: List[jax.Array] = []
     entries = []
     nks = []
-    for as_, bs, seeds, m in items:
+    for (as_, bs, seeds, m), fmt in zip(items, fmts):
         shareds = [
             [x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)
         ]
@@ -1121,13 +1294,13 @@ def join_need_many(
         if m.hybrid_routed:
             entries.append((
                 "hybrid", len(as_), m.lhs.c_out, m.rhs.c_out,
-                m.lhs.cap_recv, m.rhs.cap_recv, m.swap_spread,
+                m.lhs.cap_recv, m.rhs.cap_recv, m.swap_spread, fmt,
             ))
             arrays.extend(base + (_heavy_array(m.heavy, p),))
         else:
             entries.append((
                 "hash", len(as_), m.lhs.c_out, m.rhs.c_out,
-                m.lhs.cap_recv, m.rhs.cap_recv,
+                m.lhs.cap_recv, m.rhs.cap_recv, fmt,
             ))
             arrays.extend(base)
     cnt = np.asarray(spmd.run(
@@ -1138,50 +1311,92 @@ def join_need_many(
     ))  # (p, sum_k)
     out = []
     off = 0
-    for (as_, bs, seeds, m), e, nk in zip(items, entries, nks):
+    for (as_, bs, seeds, m), e, nk, fmt in zip(items, entries, nks, fmts):
         k = e[1]
         c = cnt[:, off : off + k]
         off += k
+        if fmt is not None:
+            # the shipped format after the _measure_keys policy: actual
+            # keys when narrow enough, the JOIN_HASH_BITS hash otherwise
+            sfmt = (
+                fmt if fmt.row_bits <= _JOIN_HASH_FMT.row_bits
+                else _JOIN_HASH_FMT
+            )
+            pad_x = k * (
+                padded_slots(p, m.lhs.c_out, sfmt.arity)
+                + padded_slots(p, m.rhs.c_out, sfmt.arity)
+            )
+            byt_x = k * (
+                packed_wire_bytes(p, m.lhs.c_out, sfmt)
+                + packed_wire_bytes(p, m.rhs.c_out, sfmt)
+            )
+        else:
+            pad_x = k * (
+                padded_slots(p, m.lhs.c_out, nk)
+                + padded_slots(p, m.rhs.c_out, nk)
+            )
+            byt_x = k * (
+                dense_wire_bytes(p, m.lhs.c_out, nk)
+                + dense_wire_bytes(p, m.rhs.c_out, nk)
+            )
         out.append(dataclasses.replace(
             m,
             out_need=pow2(max(1, int(c.max()))),
-            padded=m.padded
-            + k * (
-                padded_slots(p, m.lhs.c_out, nk)
-                + padded_slots(p, m.rhs.c_out, nk)
-            ),
+            padded=m.padded + pad_x,
+            wire_bytes=m.wire_bytes + byt_x,
         ))
     return out
 
 
 # ------------------------------------------------------------ hash semijoin
 def _semijoin_one(sd, sv, rd, rv, seed, sk, rk, *,
-                  p, c_out_s, c_out_r, cap_s, cap_r, backend):
+                  p, c_out_s, c_out_r, cap_s, cap_r,
+                  fmt_s=None, fmt_r=None, backend):
     nk = rk.shape[0]
     kcols = tuple(range(nk))
     # ship only the deduplicated key projection of R (as in ops._semijoin_shard)
     rkeys = _take(rd, rk)
     rkv = local_dedup_mask(rkeys, rv, kcols)
     rkeys = jnp.where(rkv[:, None], rkeys, 0)
-    rk2, rkv2, sent_r, dsr, drr = exchange(
-        rkeys, rkv, _dests(rkeys, rkv, p, seed, backend),
-        p=p, c_out=c_out_r, cap_recv=cap_r,
-    )
+    rdest = _dests(rkeys, rkv, p, seed, backend)
+    sdest = _dests(_take(sd, sk), sv, p, seed, backend)
+    if fmt_s is not None and fmt_r is not None:
+        # packed: both sides encode, concatenate into ONE segmented
+        # buffer, ship a single all_to_all, then decode per side.  Under
+        # the group vmap this collective fuses across the k instances.
+        rwire, sent_r, dsr = exchange_start(
+            rkeys, rkv, rdest, p=p, c_out=c_out_r, fmt=fmt_r
+        )
+        swire, sent_s, dss = exchange_start(
+            sd, sv, sdest, p=p, c_out=c_out_s, fmt=fmt_s
+        )
+        rw2, sw2 = ship_segments([rwire, swire])
+        rk2, rkv2, drr = exchange_finish(
+            rw2, p=p, c_out=c_out_r, cap_recv=cap_r, fmt=fmt_r
+        )
+        s2, s2v, drs = exchange_finish(
+            sw2, p=p, c_out=c_out_s, cap_recv=cap_s, fmt=fmt_s
+        )
+    else:
+        rk2, rkv2, sent_r, dsr, drr = exchange(
+            rkeys, rkv, rdest, p=p, c_out=c_out_r, cap_recv=cap_r
+        )
+        s2, s2v, sent_s, dss, drs = exchange(
+            sd, sv, sdest, p=p, c_out=c_out_s, cap_recv=cap_s
+        )
     rkv2 = local_dedup_mask(rk2, rkv2, kcols)
-    s2, s2v, sent_s, dss, drs = exchange(
-        sd, sv, _dests(_take(sd, sk), sv, p, seed, backend),
-        p=p, c_out=c_out_s, cap_recv=cap_s,
-    )
     mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, rk2, rkv2, kcols, backend)
     s2 = jnp.where(mask[:, None], s2, 0)
-    return s2, mask, sent_r + sent_s, dsr + drr + dss + drs
+    ub = 4 * (nk * sent_r + sd.shape[1] * sent_s)  # dense int32 bytes occupied
+    return s2, mask, sent_r + sent_s, dsr + drr + dss + drs, ub
 
 
 def _semijoin_shard_b(sd, sv, rd, rv, seed, sk, rk, *,
-                      p, c_out_s, c_out_r, cap_s, cap_r, backend):
+                      p, c_out_s, c_out_r, cap_s, cap_r,
+                      fmt_s=None, fmt_r=None, backend):
     one = functools.partial(
         _semijoin_one, p=p, c_out_s=c_out_s, c_out_r=c_out_r,
-        cap_s=cap_s, cap_r=cap_r, backend=backend,
+        cap_s=cap_s, cap_r=cap_r, fmt_s=fmt_s, fmt_r=fmt_r, backend=backend,
     )
     return jax.vmap(one)(sd, sv, rd, rv, seed, sk, rk)
 
@@ -1194,6 +1409,7 @@ def dist_semijoin_many(
     seeds: Sequence[int],
     cap_recv: Tuple[int, int],
     c_out: Optional[Tuple[int, int]] = None,
+    fmts: Optional[Tuple] = None,  # (fmt_s, fmt_r) or None = dense
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold S_i |>< R_i in ONE dispatch; semantics of ``dist_semijoin``."""
@@ -1201,15 +1417,17 @@ def dist_semijoin_many(
     shareds = [[x for x in s.schema if x in r.schema] for s, r in zip(ss, rs)]
     assert all(shareds), "semijoin with no shared attrs in batch"
     c_out = c_out or (ss[0].cap, rs[0].cap)
+    fmt_s, fmt_r = fmts if fmts is not None else (None, None)
     sd, sv = _stack(ss)
     rd, rv = _stack(rs)
     sk = _key_array([s.cols(sh) for s, sh in zip(ss, shareds)], p)
     rk = _key_array([r.cols(sh) for r, sh in zip(rs, shareds)], p)
-    od, ov, sent, dropped = spmd.run(
+    od, ov, sent, dropped, ub = spmd.run(
         _semijoin_shard_b,
         sd, sv, rd, rv, _seed_array(seeds, p), sk, rk,
         p=p, c_out_s=c_out[0], c_out_r=c_out[1],
-        cap_s=cap_recv[0], cap_r=cap_recv[1], backend=backend,
+        cap_s=cap_recv[0], cap_r=cap_recv[1],
+        fmt_s=fmt_s, fmt_r=fmt_r, backend=backend,
         donate=(0, 1, 2, 3),
     )
     return _unstack(od, ov, [s.schema for s in ss]), _per_op_stats(
@@ -1217,34 +1435,56 @@ def dist_semijoin_many(
         # S ships full rows; R ships its deduplicated key projection
         padded_slots(p, c_out[0], ss[0].arity)
         + padded_slots(p, c_out[1], len(shareds[0])),
+        wire_bytes=_xbytes(p, c_out[0], ss[0].arity, fmt_s)
+        + _xbytes(p, c_out[1], len(shareds[0]), fmt_r),
+        ubytes=ub,
     )
 
 
 # ---------------------------------------------------------------- hash join
 def _join_one(ad, av, bd, bv, seed, ak, bk, bkeep, *,
-              p, c_out_a, c_out_b, cap_a, cap_b, out_cap, backend):
+              p, c_out_a, c_out_b, cap_a, cap_b, out_cap,
+              fmt_a=None, fmt_b=None, backend):
     nk = ak.shape[0]
     kcols = tuple(range(nk))
-    a2, a2v, sent_a, dsa, dra = exchange(
-        ad, av, _dests(_take(ad, ak), av, p, seed, backend),
-        p=p, c_out=c_out_a, cap_recv=cap_a,
-    )
-    b2, b2v, sent_b, dsb, drb = exchange(
-        bd, bv, _dests(_take(bd, bk), bv, p, seed, backend),
-        p=p, c_out=c_out_b, cap_recv=cap_b,
-    )
+    adest = _dests(_take(ad, ak), av, p, seed, backend)
+    bdest = _dests(_take(bd, bk), bv, p, seed, backend)
+    if fmt_a is not None and fmt_b is not None:
+        awire, sent_a, dsa = exchange_start(
+            ad, av, adest, p=p, c_out=c_out_a, fmt=fmt_a
+        )
+        bwire, sent_b, dsb = exchange_start(
+            bd, bv, bdest, p=p, c_out=c_out_b, fmt=fmt_b
+        )
+        aw2, bw2 = ship_segments([awire, bwire])
+        a2, a2v, dra = exchange_finish(
+            aw2, p=p, c_out=c_out_a, cap_recv=cap_a, fmt=fmt_a
+        )
+        b2, b2v, drb = exchange_finish(
+            bw2, p=p, c_out=c_out_b, cap_recv=cap_b, fmt=fmt_b
+        )
+    else:
+        a2, a2v, sent_a, dsa, dra = exchange(
+            ad, av, adest, p=p, c_out=c_out_a, cap_recv=cap_a
+        )
+        b2, b2v, sent_b, dsb, drb = exchange(
+            bd, bv, bdest, p=p, c_out=c_out_b, cap_recv=cap_b
+        )
     ra, rb = dense_ranks(_take(a2, ak), a2v, kcols, _take(b2, bk), b2v, kcols)
     out, out_v, over = local_join_ranked(
         a2, a2v, ra, b2, b2v, rb, bkeep, out_cap, backend
     )
-    return out, out_v, sent_a + sent_b, dsa + dra + dsb + drb + over
+    ub = 4 * (ad.shape[1] * sent_a + bd.shape[1] * sent_b)
+    return out, out_v, sent_a + sent_b, dsa + dra + dsb + drb + over, ub
 
 
 def _join_shard_b(ad, av, bd, bv, seed, ak, bk, bkeep, *,
-                  p, c_out_a, c_out_b, cap_a, cap_b, out_cap, backend):
+                  p, c_out_a, c_out_b, cap_a, cap_b, out_cap,
+                  fmt_a=None, fmt_b=None, backend):
     one = functools.partial(
         _join_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b,
-        cap_a=cap_a, cap_b=cap_b, out_cap=out_cap, backend=backend,
+        cap_a=cap_a, cap_b=cap_b, out_cap=out_cap,
+        fmt_a=fmt_a, fmt_b=fmt_b, backend=backend,
     )
     return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, bkeep)
 
@@ -1258,6 +1498,7 @@ def dist_join_many(
     out_cap: int,
     c_out: Optional[Tuple[int, int]] = None,
     cap_recv: Optional[Tuple[int, int]] = None,
+    fmts: Optional[Tuple] = None,  # (fmt_a, fmt_b) or None = dense
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold A_i |><| B_i in ONE dispatch; semantics of ``dist_join``."""
@@ -1275,28 +1516,34 @@ def dist_join_many(
     schemas = [schema_join(a.schema, b.schema) for a, b in zip(as_, bs)]
     c_out = c_out or (as_[0].cap, bs[0].cap)
     cap_recv = cap_recv or (p * as_[0].cap, p * bs[0].cap)
+    fmt_a, fmt_b = fmts if fmts is not None else (None, None)
     ad, av = _stack(as_)
     bd, bv = _stack(bs)
     ak = _key_array([a.cols(sh) for a, sh in zip(as_, shareds)], p)
     bk = _key_array([b.cols(sh) for b, sh in zip(bs, shareds)], p)
     bkeep = _key_array(keeps, p)
-    od, ov, sent, dropped = spmd.run(
+    od, ov, sent, dropped, ub = spmd.run(
         _join_shard_b,
         ad, av, bd, bv, _seed_array(seeds, p), ak, bk, bkeep,
         p=p, c_out_a=c_out[0], c_out_b=c_out[1],
-        cap_a=cap_recv[0], cap_b=cap_recv[1], out_cap=out_cap, backend=backend,
+        cap_a=cap_recv[0], cap_b=cap_recv[1], out_cap=out_cap,
+        fmt_a=fmt_a, fmt_b=fmt_b, backend=backend,
         donate=(0, 1, 2, 3),
     )
     return _unstack(od, ov, schemas), _per_op_stats(
         sent, dropped,
         padded_slots(p, c_out[0], as_[0].arity)
         + padded_slots(p, c_out[1], bs[0].arity),
+        wire_bytes=_xbytes(p, c_out[0], as_[0].arity, fmt_a)
+        + _xbytes(p, c_out[1], bs[0].arity, fmt_b),
+        ubytes=ub,
     )
 
 
 # ------------------------------------------- hybrid (heavy-hitter) semijoin
 def _hybrid_semijoin_one(sd, sv, rd, rv, seed, sk, rk, hw, *,
-                         p, c_out_s, c_out_r, cap_s, cap_r, backend):
+                         p, c_out_s, c_out_r, cap_s, cap_r,
+                         fmt_s=None, fmt_r=None, backend):
     """``_semijoin_one`` with hybrid routing: S (the output side) spread,
     R's deduplicated key projection broadcast for heavy keys.  An S row
     lands on exactly one reducer either way, and every R key it can match
@@ -1310,23 +1557,25 @@ def _hybrid_semijoin_one(sd, sv, rd, rv, seed, sk, rk, hw, *,
     rkeys = jnp.where(rkv[:, None], rkeys, 0)
     rk2, rkv2, sent_r, dr_r, hvy_r = _hybrid_exchange(
         rkeys, rkv, _dests(rkeys, rkv, p, seed, backend), hw,
-        p=p, c_out=c_out_r, cap_recv=cap_r, spread=False,
+        p=p, c_out=c_out_r, cap_recv=cap_r, spread=False, fmt=fmt_r,
     )
     rkv2 = local_dedup_mask(rk2, rkv2, kcols)
     s2, s2v, sent_s, dr_s, hvy_s = _hybrid_exchange(
         sd, sv, _dests(_take(sd, sk), sv, p, seed, backend), hw,
-        p=p, c_out=c_out_s, cap_recv=cap_s, spread=True,
+        p=p, c_out=c_out_s, cap_recv=cap_s, spread=True, fmt=fmt_s,
     )
     mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, rk2, rkv2, kcols, backend)
     s2 = jnp.where(mask[:, None], s2, 0)
-    return s2, mask, sent_r + sent_s, dr_r + dr_s, hvy_s + hvy_r
+    ub = 4 * (nk * sent_r + sd.shape[1] * sent_s)
+    return s2, mask, sent_r + sent_s, dr_r + dr_s, hvy_s + hvy_r, ub
 
 
 def _hybrid_semijoin_shard_b(sd, sv, rd, rv, seed, sk, rk, hw, *,
-                             p, c_out_s, c_out_r, cap_s, cap_r, backend):
+                             p, c_out_s, c_out_r, cap_s, cap_r,
+                             fmt_s=None, fmt_r=None, backend):
     one = functools.partial(
         _hybrid_semijoin_one, p=p, c_out_s=c_out_s, c_out_r=c_out_r,
-        cap_s=cap_s, cap_r=cap_r, backend=backend,
+        cap_s=cap_s, cap_r=cap_r, fmt_s=fmt_s, fmt_r=fmt_r, backend=backend,
     )
     return jax.vmap(one)(sd, sv, rd, rv, seed, sk, rk, hw)
 
@@ -1340,6 +1589,7 @@ def hybrid_semijoin_many(
     heavy: np.ndarray,  # (k, p) per-instance heavy-destination flags
     cap_recv: Tuple[int, int],
     c_out: Optional[Tuple[int, int]] = None,
+    fmts: Optional[Tuple] = None,  # (fmt_s, fmt_r) or None = dense
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold skew-resilient S_i |>< R_i in ONE dispatch: light keys hash,
@@ -1352,15 +1602,17 @@ def hybrid_semijoin_many(
     # a row reaches each destination at most once, so the worst-case send
     # bucket is the shard cap even for the broadcast side
     c_out = c_out or (ss[0].cap, rs[0].cap)
+    fmt_s, fmt_r = fmts if fmts is not None else (None, None)
     sd, sv = _stack(ss)
     rd, rv = _stack(rs)
     sk = _key_array([s.cols(sh) for s, sh in zip(ss, shareds)], p)
     rk = _key_array([r.cols(sh) for r, sh in zip(rs, shareds)], p)
-    od, ov, sent, dropped, hvy = spmd.run(
+    od, ov, sent, dropped, hvy, ub = spmd.run(
         _hybrid_semijoin_shard_b,
         sd, sv, rd, rv, _seed_array(seeds, p), sk, rk, _heavy_array(heavy, p),
         p=p, c_out_s=c_out[0], c_out_r=c_out[1],
-        cap_s=cap_recv[0], cap_r=cap_recv[1], backend=backend,
+        cap_s=cap_recv[0], cap_r=cap_recv[1],
+        fmt_s=fmt_s, fmt_r=fmt_r, backend=backend,
         donate=(0, 1, 2, 3),
     )
     return _unstack(od, ov, [s.schema for s in ss]), _per_op_stats(
@@ -1368,13 +1620,16 @@ def hybrid_semijoin_many(
         padded_slots(p, c_out[0], ss[0].arity)
         + padded_slots(p, c_out[1], len(shareds[0])),
         heavy=hvy,
+        wire_bytes=_xbytes(p, c_out[0], ss[0].arity, fmt_s)
+        + _xbytes(p, c_out[1], len(shareds[0]), fmt_r),
+        ubytes=ub,
     )
 
 
 # ----------------------------------------------- hybrid (heavy-hitter) join
 def _hybrid_join_one(ad, av, bd, bv, seed, ak, bk, bkeep, hw, *,
                      p, c_out_a, c_out_b, cap_a, cap_b, out_cap, swap,
-                     backend):
+                     fmt_a=None, fmt_b=None, backend):
     """``_join_one`` with hybrid routing: one side spread, the other
     broadcast for heavy keys (``swap`` picks which — the measure spreads
     the heavier side).  A heavy pair (a, b) meets exactly once — at the
@@ -1385,26 +1640,27 @@ def _hybrid_join_one(ad, av, bd, bv, seed, ak, bk, bkeep, hw, *,
     kcols = tuple(range(ak.shape[0]))
     a2, a2v, sent_a, dr_a, hvy_a = _hybrid_exchange(
         ad, av, _dests(_take(ad, ak), av, p, seed, backend), hw,
-        p=p, c_out=c_out_a, cap_recv=cap_a, spread=not swap,
+        p=p, c_out=c_out_a, cap_recv=cap_a, spread=not swap, fmt=fmt_a,
     )
     b2, b2v, sent_b, dr_b, hvy_b = _hybrid_exchange(
         bd, bv, _dests(_take(bd, bk), bv, p, seed, backend), hw,
-        p=p, c_out=c_out_b, cap_recv=cap_b, spread=swap,
+        p=p, c_out=c_out_b, cap_recv=cap_b, spread=swap, fmt=fmt_b,
     )
     ra, rb = dense_ranks(_take(a2, ak), a2v, kcols, _take(b2, bk), b2v, kcols)
     out, out_v, over = local_join_ranked(
         a2, a2v, ra, b2, b2v, rb, bkeep, out_cap, backend
     )
-    return out, out_v, sent_a + sent_b, dr_a + dr_b + over, hvy_a + hvy_b
+    ub = 4 * (ad.shape[1] * sent_a + bd.shape[1] * sent_b)
+    return out, out_v, sent_a + sent_b, dr_a + dr_b + over, hvy_a + hvy_b, ub
 
 
 def _hybrid_join_shard_b(ad, av, bd, bv, seed, ak, bk, bkeep, hw, *,
                          p, c_out_a, c_out_b, cap_a, cap_b, out_cap, swap,
-                         backend):
+                         fmt_a=None, fmt_b=None, backend):
     one = functools.partial(
         _hybrid_join_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b,
         cap_a=cap_a, cap_b=cap_b, out_cap=out_cap, swap=swap,
-        backend=backend,
+        fmt_a=fmt_a, fmt_b=fmt_b, backend=backend,
     )
     return jax.vmap(one)(ad, av, bd, bv, seed, ak, bk, bkeep, hw)
 
@@ -1420,6 +1676,7 @@ def hybrid_join_many(
     c_out: Optional[Tuple[int, int]] = None,
     cap_recv: Optional[Tuple[int, int]] = None,
     swap: bool = False,  # True: spread B / broadcast A (GroupMeasure.swap_spread)
+    fmts: Optional[Tuple] = None,  # (fmt_a, fmt_b) or None = dense
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold skew-resilient A_i |><| B_i in ONE dispatch; same row sets
@@ -1434,18 +1691,19 @@ def hybrid_join_many(
     schemas = [schema_join(a.schema, b.schema) for a, b in zip(as_, bs)]
     c_out = c_out or (as_[0].cap, bs[0].cap)
     cap_recv = cap_recv or (p * as_[0].cap, p * bs[0].cap)
+    fmt_a, fmt_b = fmts if fmts is not None else (None, None)
     ad, av = _stack(as_)
     bd, bv = _stack(bs)
     ak = _key_array([a.cols(sh) for a, sh in zip(as_, shareds)], p)
     bk = _key_array([b.cols(sh) for b, sh in zip(bs, shareds)], p)
     bkeep = _key_array(keeps, p)
-    od, ov, sent, dropped, hvy = spmd.run(
+    od, ov, sent, dropped, hvy, ub = spmd.run(
         _hybrid_join_shard_b,
         ad, av, bd, bv, _seed_array(seeds, p), ak, bk, bkeep,
         _heavy_array(heavy, p),
         p=p, c_out_a=c_out[0], c_out_b=c_out[1],
         cap_a=cap_recv[0], cap_b=cap_recv[1], out_cap=out_cap, swap=swap,
-        backend=backend,
+        fmt_a=fmt_a, fmt_b=fmt_b, backend=backend,
         donate=(0, 1, 2, 3),
     )
     return _unstack(od, ov, schemas), _per_op_stats(
@@ -1453,30 +1711,52 @@ def hybrid_join_many(
         padded_slots(p, c_out[0], as_[0].arity)
         + padded_slots(p, c_out[1], bs[0].arity),
         heavy=hvy,
+        wire_bytes=_xbytes(p, c_out[0], as_[0].arity, fmt_a)
+        + _xbytes(p, c_out[1], bs[0].arity, fmt_b),
+        ubytes=ub,
     )
 
 
 # ----------------------------------------------------------- hash intersect
 def _intersect_one(ad, av, bd, bv, seed, bcols, *,
-                   p, c_out_a, c_out_b, cap_a, cap_b, backend):
+                   p, c_out_a, c_out_b, cap_a, cap_b,
+                   fmt_a=None, fmt_b=None, backend):
     acols = tuple(range(ad.shape[1]))
-    a2, a2v, sent_a, dsa, dra = exchange(
-        ad, av, _dests(ad, av, p, seed, backend), p=p, c_out=c_out_a, cap_recv=cap_a
-    )
-    b2, b2v, sent_b, dsb, drb = exchange(
-        bd, bv, _dests(_take(bd, bcols), bv, p, seed, backend),
-        p=p, c_out=c_out_b, cap_recv=cap_b,
-    )
+    adest = _dests(ad, av, p, seed, backend)
+    bdest = _dests(_take(bd, bcols), bv, p, seed, backend)
+    if fmt_a is not None and fmt_b is not None:
+        awire, sent_a, dsa = exchange_start(
+            ad, av, adest, p=p, c_out=c_out_a, fmt=fmt_a
+        )
+        bwire, sent_b, dsb = exchange_start(
+            bd, bv, bdest, p=p, c_out=c_out_b, fmt=fmt_b
+        )
+        aw2, bw2 = ship_segments([awire, bwire])
+        a2, a2v, dra = exchange_finish(
+            aw2, p=p, c_out=c_out_a, cap_recv=cap_a, fmt=fmt_a
+        )
+        b2, b2v, drb = exchange_finish(
+            bw2, p=p, c_out=c_out_b, cap_recv=cap_b, fmt=fmt_b
+        )
+    else:
+        a2, a2v, sent_a, dsa, dra = exchange(
+            ad, av, adest, p=p, c_out=c_out_a, cap_recv=cap_a
+        )
+        b2, b2v, sent_b, dsb, drb = exchange(
+            bd, bv, bdest, p=p, c_out=c_out_b, cap_recv=cap_b
+        )
     mask = local_semijoin_mask(a2, a2v, acols, _take(b2, bcols), b2v, acols, backend)
     a2 = jnp.where(mask[:, None], a2, 0)
-    return a2, mask, sent_a + sent_b, dsa + dra + dsb + drb
+    ub = 4 * (ad.shape[1] * sent_a + bd.shape[1] * sent_b)
+    return a2, mask, sent_a + sent_b, dsa + dra + dsb + drb, ub
 
 
 def _intersect_shard_b(ad, av, bd, bv, seed, bcols, *,
-                       p, c_out_a, c_out_b, cap_a, cap_b, backend):
+                       p, c_out_a, c_out_b, cap_a, cap_b,
+                       fmt_a=None, fmt_b=None, backend):
     one = functools.partial(
         _intersect_one, p=p, c_out_a=c_out_a, c_out_b=c_out_b,
-        cap_a=cap_a, cap_b=cap_b, backend=backend,
+        cap_a=cap_a, cap_b=cap_b, fmt_a=fmt_a, fmt_b=fmt_b, backend=backend,
     )
     return jax.vmap(one)(ad, av, bd, bv, seed, bcols)
 
@@ -1489,6 +1769,7 @@ def dist_intersect_many(
     seeds: Sequence[int],
     cap_recv: Tuple[int, int],
     c_out: Optional[Tuple[int, int]] = None,
+    fmts: Optional[Tuple] = None,  # (fmt_a, fmt_b) or None = dense
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold A_i ^ B_i (same attr sets) in ONE dispatch."""
@@ -1496,36 +1777,43 @@ def dist_intersect_many(
     for a, b in zip(as_, bs):
         assert set(a.schema) == set(b.schema), (a.schema, b.schema)
     c_out = c_out or (as_[0].cap, bs[0].cap)
+    fmt_a, fmt_b = fmts if fmts is not None else (None, None)
     ad, av = _stack(as_)
     bd, bv = _stack(bs)
     bcols = _key_array([b.cols(a.schema) for a, b in zip(as_, bs)], p)
-    od, ov, sent, dropped = spmd.run(
+    od, ov, sent, dropped, ub = spmd.run(
         _intersect_shard_b,
         ad, av, bd, bv, _seed_array(seeds, p), bcols,
         p=p, c_out_a=c_out[0], c_out_b=c_out[1],
-        cap_a=cap_recv[0], cap_b=cap_recv[1], backend=backend,
+        cap_a=cap_recv[0], cap_b=cap_recv[1],
+        fmt_a=fmt_a, fmt_b=fmt_b, backend=backend,
         donate=(0, 1, 2, 3),
     )
     return _unstack(od, ov, [a.schema for a in as_]), _per_op_stats(
         sent, dropped,
         padded_slots(p, c_out[0], as_[0].arity)
         + padded_slots(p, c_out[1], bs[0].arity),
+        wire_bytes=_xbytes(p, c_out[0], as_[0].arity, fmt_a)
+        + _xbytes(p, c_out[1], bs[0].arity, fmt_b),
+        ubytes=ub,
     )
 
 
 # --------------------------------------------------------------- hash dedup
-def _dedup_one(d, v, seed, *, p, c_out, cap_recv, backend):
+def _dedup_one(d, v, seed, *, p, c_out, cap_recv, fmt=None, backend):
     d2, v2, sent, ds, dr = exchange(
-        d, v, _dests(d, v, p, seed, backend), p=p, c_out=c_out, cap_recv=cap_recv
+        d, v, _dests(d, v, p, seed, backend),
+        p=p, c_out=c_out, cap_recv=cap_recv, fmt=fmt,
     )
     mask = local_dedup_mask(d2, v2, tuple(range(d.shape[1])))
     d2 = jnp.where(mask[:, None], d2, 0)
     return d2, mask, sent, ds + dr
 
 
-def _dedup_shard_b(d, v, seed, *, p, c_out, cap_recv, backend):
+def _dedup_shard_b(d, v, seed, *, p, c_out, cap_recv, fmt=None, backend):
     one = functools.partial(
-        _dedup_one, p=p, c_out=c_out, cap_recv=cap_recv, backend=backend
+        _dedup_one, p=p, c_out=c_out, cap_recv=cap_recv, fmt=fmt,
+        backend=backend,
     )
     return jax.vmap(one)(d, v, seed)
 
@@ -1537,6 +1825,7 @@ def dist_dedup_many(
     seeds: Sequence[int],
     cap_recv: int,
     c_out: Optional[int] = None,
+    fmt: Optional[WireFormat] = None,
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     p = spmd.p
@@ -1544,18 +1833,21 @@ def dist_dedup_many(
     d, v = _stack(ts)
     od, ov, sent, dropped = spmd.run(
         _dedup_shard_b, d, v, _seed_array(seeds, p),
-        p=p, c_out=c_out, cap_recv=cap_recv, backend=backend,
+        p=p, c_out=c_out, cap_recv=cap_recv, fmt=fmt, backend=backend,
         donate=(0, 1),
     )
     return _unstack(od, ov, [t.schema for t in ts]), _per_op_stats(
-        sent, dropped, padded_slots(p, c_out, ts[0].arity)
+        sent, dropped, padded_slots(p, c_out, ts[0].arity),
+        wire_bytes=_xbytes(p, c_out, ts[0].arity, fmt),
+        # single exchange: useful bytes are 4 * arity * sent, host-side
+        ubytes=4 * ts[0].arity * np.asarray(sent),
     )
 
 
 # ---------------------------------------------- grid semijoin (Lemma 10)
 def _grid_semijoin_mark_one(sd, sv, rd, rv, sk, rk, *,
                             g_s, g_r, s_cap, r_cap, p, c_out_s, c_out_r,
-                            cap_s, cap_r, backend):
+                            cap_s, cap_r, fmt_s=None, fmt_r=None, backend):
     nk = rk.shape[0]
     kcols = tuple(range(nk))
     grp_s = _position_groups(sv, g_s, s_cap, p)
@@ -1564,7 +1856,7 @@ def _grid_semijoin_mark_one(sd, sv, rd, rv, sk, rk, *,
         (grp_s < g_s)[:, None], grp_s[:, None] * g_r + offs_s[None, :], p
     ).astype(jnp.int32)
     s2, s2v, sent_s, dss, drs = exchange_multi(
-        sd, sv, dest_s, p=p, c_out=c_out_s, cap_recv=cap_s
+        sd, sv, dest_s, p=p, c_out=c_out_s, cap_recv=cap_s, fmt=fmt_s
     )
     rkeys = _take(rd, rk)
     rkv = local_dedup_mask(rkeys, rv, kcols)
@@ -1575,21 +1867,22 @@ def _grid_semijoin_mark_one(sd, sv, rd, rv, sk, rk, *,
         (grp_r < g_r)[:, None], grp_r[:, None] + offs_r[None, :], p
     ).astype(jnp.int32)
     r2, r2v, sent_r, dsr, drr = exchange_multi(
-        rkeys, rkv, dest_r, p=p, c_out=c_out_r, cap_recv=cap_r
+        rkeys, rkv, dest_r, p=p, c_out=c_out_r, cap_recv=cap_r, fmt=fmt_r
     )
     mask = local_semijoin_mask(_take(s2, sk), s2v, kcols, r2, r2v, kcols, backend)
     s2 = jnp.where(mask[:, None], s2, 0)
-    return s2, mask, sent_s + sent_r, dss + drs + dsr + drr
+    ub = 4 * (sd.shape[1] * sent_s + nk * sent_r)
+    return s2, mask, sent_s + sent_r, dss + drs + dsr + drr, ub
 
 
 def _grid_semijoin_mark_b(sd, sv, rd, rv, sk, rk, *,
                           g_s, g_r, s_cap, r_cap, p, c_out_s, c_out_r,
-                          cap_s, cap_r, backend):
+                          cap_s, cap_r, fmt_s=None, fmt_r=None, backend):
     one = functools.partial(
         _grid_semijoin_mark_one,
         g_s=g_s, g_r=g_r, s_cap=s_cap, r_cap=r_cap, p=p,
         c_out_s=c_out_s, c_out_r=c_out_r, cap_s=cap_s, cap_r=cap_r,
-        backend=backend,
+        fmt_s=fmt_s, fmt_r=fmt_r, backend=backend,
     )
     return jax.vmap(one)(sd, sv, rd, rv, sk, rk)
 
@@ -1603,6 +1896,7 @@ def grid_semijoin_many(
     out_cap: int,
     c_out: Optional[Tuple[int, int]] = None,
     cap_recv: Optional[Tuple[int, int]] = None,
+    fmts: Optional[Tuple] = None,  # (fmt_s, fmt_rkeys) or None = dense
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold Lemma-10 grid semijoin: one MARK dispatch for the whole group
@@ -1618,16 +1912,18 @@ def grid_semijoin_many(
     g_s, g_r = _grid_shares([sz_s, sz_r], p)
     c_out = c_out or (s0.cap * g_r, r0.cap * g_s)
     cap_recv = cap_recv or (-(-sz_s // g_s), -(-sz_r // g_r))
+    fmt_s, fmt_r = fmts if fmts is not None else (None, None)
     sd, sv = _stack(ss)
     rd, rv = _stack(rs)
     sk = _key_array([s.cols(sh) for s, sh in zip(ss, shareds)], p)
     rk = _key_array([r.cols(sh) for r, sh in zip(rs, shareds)], p)
-    md, mv, sent, dropped = spmd.run(
+    md, mv, sent, dropped, ub = spmd.run(
         _grid_semijoin_mark_b,
         sd, sv, rd, rv, sk, rk,
         g_s=g_s, g_r=g_r, s_cap=s0.cap, r_cap=r0.cap, p=p,
         c_out_s=c_out[0], c_out_r=c_out[1],
-        cap_s=cap_recv[0], cap_r=cap_recv[1], backend=backend,
+        cap_s=cap_recv[0], cap_r=cap_recv[1],
+        fmt_s=fmt_s, fmt_r=fmt_r, backend=backend,
         donate=(0, 1, 2, 3),
     )
     marked = _unstack(md, mv, [s.schema for s in ss])
@@ -1635,16 +1931,21 @@ def grid_semijoin_many(
         sent, dropped,
         padded_slots(p, c_out[0], s0.arity)
         + padded_slots(p, c_out[1], len(shareds[0])),
+        wire_bytes=_xbytes(p, c_out[0], s0.arity, fmt_s)
+        + _xbytes(p, c_out[1], len(shareds[0]), fmt_r),
+        ubytes=ub,
     )
     ded, ded_stats = dist_dedup_many(
         spmd, marked, seeds=[s + 7 for s in seeds],
-        c_out=marked[0].cap, cap_recv=out_cap, backend=backend,
+        c_out=marked[0].cap, cap_recv=out_cap, fmt=fmt_s, backend=backend,
     )
     stats = [
         {
             "sent": m["sent"] + d["sent"],
             "dropped": m["dropped"] + d["dropped"],
             "padded": m["padded"] + d["padded"],
+            "wire_bytes": m["wire_bytes"] + d["wire_bytes"],
+            "ubytes": m.get("ubytes", 0) + d.get("ubytes", 0),
         }
         for m, d in zip(mark_stats, ded_stats)
     ]
@@ -1652,10 +1953,11 @@ def grid_semijoin_many(
 
 
 # -------------------------------------------------- grid join (Lemma 8, w=2)
-def _grid_send_shard_b(data, valid, *, g_self, stride, offsets, p, cap, c_out, cap_recv):
+def _grid_send_shard_b(data, valid, *, g_self, stride, offsets, p, cap, c_out,
+                       cap_recv, fmt=None):
     one = functools.partial(
         _grid_send_one, g_self=g_self, stride=stride, offsets=offsets,
-        p=p, cap=cap, c_out=c_out, cap_recv=cap_recv,
+        p=p, cap=cap, c_out=c_out, cap_recv=cap_recv, fmt=fmt,
     )
     return jax.vmap(one)(data, valid)
 
@@ -1683,6 +1985,7 @@ def grid_join_many(
     out_cap: int,
     c_out: Optional[Tuple[int, int]] = None,
     cap_recv: Optional[Tuple[int, int]] = None,
+    fmts: Optional[Tuple] = None,  # (fmt_a, fmt_b) or None = dense
     backend: str = "jnp",
 ) -> Tuple[List[DTable], List[Dict]]:
     """k-fold Lemma-8 grid join (w=2): two batched position-group send
@@ -1707,16 +2010,19 @@ def grid_join_many(
         d, v = _stack(tables)
         co = c_out[i] if c_out else t0.cap * (g[0] * g[1] // g_self)
         cr = cap_recv[i] if cap_recv else -(-(t0.p * t0.cap) // g_self)
+        fmt = fmts[i] if fmts is not None else None
         rd, rv, stats = spmd.run(
             _grid_send_shard_b, d, v,
             g_self=g_self, stride=stride, offsets=offs, p=p, cap=t0.cap,
-            c_out=co, cap_recv=cr,
+            c_out=co, cap_recv=cr, fmt=fmt,
             donate=(0, 1),
         )
         parts.append((rd, rv))
         send_stats.append(
             _per_op_stats(
-                stats["sent"], stats["dropped"], padded_slots(p, co, t0.arity)
+                stats["sent"], stats["dropped"], padded_slots(p, co, t0.arity),
+                wire_bytes=_xbytes(p, co, t0.arity, fmt),
+                ubytes=stats["ubytes"],
             )
         )
     shareds = [[x for x in a.schema if x in b.schema] for a, b in zip(as_, bs)]
@@ -1740,6 +2046,8 @@ def grid_join_many(
             "sent": sa["sent"] + sb["sent"] + sj["sent"],
             "dropped": sa["dropped"] + sb["dropped"] + sj["dropped"],
             "padded": sa["padded"] + sb["padded"],
+            "wire_bytes": sa["wire_bytes"] + sb["wire_bytes"],
+            "ubytes": sa.get("ubytes", 0) + sb.get("ubytes", 0),
         }
         for sa, sb, sj in zip(send_stats[0], send_stats[1], join_stats)
     ]

@@ -21,6 +21,7 @@ from .ops import agg_stats, _stats
 from .shuffle import exchange, exchange_counts, exchange_multi, padded_slots, pow2
 from .spmd import AXIS, SPMD
 from .table import DTable, schema_join
+from .wire import count_wire_bytes, dense_wire_bytes, packed_wire_bytes
 
 
 def _position_groups(valid: jax.Array, g: int, cap: int, p: int) -> jax.Array:
@@ -101,16 +102,17 @@ def _grid_geometry(
 
 def grid_multiway_count(
     spmd: SPMD, table_groups: List[List[DTable]]
-) -> Tuple[List[List[Tuple[int, int]]], List[int]]:
+) -> Tuple[List[List[Tuple[int, int]]], List[int], List[int]]:
     """ONE combined count dispatch for the position-group sends of
     SEVERAL multiway joins (one per GHD vertex at materialization) —
     the cross-vertex fused form of ``grid_multiway_join``'s internal
     pre-pass, so a query with many multi-atom bags still pays a single
     measure dispatch for the whole materialization stage.
 
-    Returns (cals, count_pads): per group, the (c_out, cap_recv) pow2
-    pair for each relation (feed to ``grid_multiway_join(cals=...)``)
-    and the count wire cells to charge ((p,)-ints per relation)."""
+    Returns (cals, count_pads, count_bytes): per group, the (c_out,
+    cap_recv) pow2 pair for each relation (feed to
+    ``grid_multiway_join(cals=...)``), the count wire cells to charge
+    ((p,)-ints per relation), and their byte-true sibling."""
     entries: List[Tuple[int, int, Tuple[int, ...], int]] = []
     valids = []
     slices: List[Tuple[int, int]] = []
@@ -141,7 +143,8 @@ def grid_multiway_count(
         for a, b in slices
     ]
     pads = [(b - a) * spmd.p * spmd.p for a, b in slices]
-    return cals, pads
+    byts = [count_wire_bytes(spmd.p, b - a) for a, b in slices]
+    return cals, pads, byts
 
 
 def grid_multiway_join(
@@ -154,6 +157,7 @@ def grid_multiway_join(
     sizes: Optional[Sequence[int]] = None,
     calibrate: bool = False,
     cals: Optional[List[Tuple[int, int]]] = None,
+    fmts: Optional[List] = None,
     backend: str = "jnp",
 ) -> Tuple[DTable, Dict]:
     """Lemma 8: join w relations in ONE round on a grid of prod(g_i) <= p
@@ -174,12 +178,15 @@ def grid_multiway_join(
     assert w >= 1
     p = spmd.p
     if w == 1:
-        return tables[0], {"sent": 0, "dropped": 0, "padded": 0}
+        return tables[0], {
+            "sent": 0, "dropped": 0, "padded": 0, "wire_bytes": 0, "ubytes": 0,
+        }
     sizes = list(sizes) if sizes is not None else [t.cap * t.p for t in tables]
     g, strides, all_offs = _grid_geometry(sizes, p)
     acc = math.prod(g)
 
     count_pad = 0
+    count_b = 0
     if cals is None and calibrate and c_out is None and cap_recv is None:
         # ONE combined count dispatch for every relation's position-group
         # send (and one host sync), instead of one per relation
@@ -202,9 +209,12 @@ def grid_multiway_join(
             for i in range(w)
         ]
         count_pad = p * p  # one (p,)-int count vector per relation
+        count_b = count_wire_bytes(p, 1)
 
     parts: List[DTable] = []
-    stats_total = {"sent": 0, "dropped": 0, "padded": 0}
+    stats_total = {
+        "sent": 0, "dropped": 0, "padded": 0, "wire_bytes": 0, "ubytes": 0,
+    }
     for i, t in enumerate(tables):
         n_other = acc // g[i]
         if cals is not None:
@@ -212,6 +222,7 @@ def grid_multiway_join(
         else:
             co = c_out if c_out is not None else t.cap * n_other
             cr = cap_recv if cap_recv is not None else -(-(t.p * t.cap) // g[i])
+        fmt = fmts[i] if fmts is not None else None
         rd, rv, stats = spmd.run(
             _grid_send_one,
             t.data,
@@ -223,12 +234,24 @@ def grid_multiway_join(
             cap=t.cap,
             c_out=co,
             cap_recv=cr,
+            fmt=fmt,
         )
         parts.append(DTable(rd, rv, t.schema))
-        s = agg_stats(stats, padded_slots(p, co, t.arity) + count_pad)
+        xb = (
+            packed_wire_bytes(p, co, fmt)
+            if fmt is not None
+            else dense_wire_bytes(p, co, t.arity)
+        )
+        s = agg_stats(
+            stats,
+            padded_slots(p, co, t.arity) + count_pad,
+            wire_bytes=xb + count_b,
+        )
         stats_total["sent"] += s["sent"]
         stats_total["dropped"] += s["dropped"]
         stats_total["padded"] += s["padded"]
+        stats_total["wire_bytes"] += s["wire_bytes"]
+        stats_total["ubytes"] += s["ubytes"]
 
     # local multiway join at each grid cell (one reduce stage, no comm)
     from .ops import local_multiway_join
@@ -267,16 +290,18 @@ def _grid_send_count_round(*valids, entries, p):
     return jnp.stack(outs), jnp.stack(recvs)
 
 
-def _grid_send_one(data, valid, *, g_self, stride, offsets, p, cap, c_out, cap_recv):
+def _grid_send_one(
+    data, valid, *, g_self, stride, offsets, p, cap, c_out, cap_recv, fmt=None
+):
     grp = _position_groups(valid, g_self, cap, p)
     offs = jnp.asarray(offsets, jnp.int32)
     dests = jnp.where(
         (grp < g_self)[:, None], grp[:, None] * stride + offs[None, :], p
     ).astype(jnp.int32)
     rd, rv, sent, ds, dr = exchange_multi(
-        data, valid, dests, p=p, c_out=c_out, cap_recv=cap_recv
+        data, valid, dests, p=p, c_out=c_out, cap_recv=cap_recv, fmt=fmt
     )
-    return rd, rv, _stats(sent, ds + dr)
+    return rd, rv, _stats(sent, ds + dr, ubytes=4 * data.shape[1] * sent)
 
 
 def grid_join(
@@ -315,7 +340,8 @@ def _grid_semijoin_mark(
     kcols = tuple(range(len(r_key)))
     mask = local_semijoin_mask(s2, s2v, s_key, r2, r2v, kcols, backend)
     s2 = jnp.where(mask[:, None], s2, 0)
-    return s2, mask, _stats(sent_s + sent_r, dss + drs + dsr + drr)
+    ub = 4 * (s_data.shape[1] * sent_s + rk.shape[1] * sent_r)
+    return s2, mask, _stats(sent_s + sent_r, dss + drs + dsr + drr, ubytes=ub)
 
 
 def grid_semijoin(
@@ -351,6 +377,8 @@ def grid_semijoin(
         stats,
         padded_slots(p, s.cap * g_r, s.arity)
         + padded_slots(p, r.cap * g_s, len(shared)),
+        wire_bytes=dense_wire_bytes(p, s.cap * g_r, s.arity)
+        + dense_wire_bytes(p, r.cap * g_s, len(shared)),
     )
     # Round 2: dedup the marked copies (<= g_r per tuple) by full-row hash.
     from .ops import dist_dedup
@@ -363,6 +391,8 @@ def grid_semijoin(
         "sent": st["sent"] + dstats["sent"],
         "dropped": st["dropped"] + dstats["dropped"],
         "padded": st["padded"] + dstats["padded"],
+        "wire_bytes": st["wire_bytes"] + dstats["wire_bytes"],
+        "ubytes": st["ubytes"] + dstats["ubytes"],
     }
     return ded, st2, 2
 
@@ -379,7 +409,7 @@ def _tree_dedup_shard(data, valid, seed, *, cols, block, p, c_out, cap_recv):
     rd, rv, sent, ds, dr = exchange(data, valid, dest, p=p, c_out=c_out, cap_recv=cap_recv)
     mask = local_dedup_mask(rd, rv, cols)
     rd = jnp.where(mask[:, None], rd, 0)
-    return rd, mask, _stats(sent, ds + dr)
+    return rd, mask, _stats(sent, ds + dr, ubytes=4 * data.shape[1] * sent)
 
 
 def tree_dedup(
@@ -401,7 +431,7 @@ def tree_dedup(
     cols = tuple(range(len(t.schema)))
     cap_recv = cap_recv or t.cap * fan
     cur = t
-    total = {"sent": 0, "dropped": 0, "padded": 0}
+    total = {"sent": 0, "dropped": 0, "padded": 0, "wire_bytes": 0, "ubytes": 0}
     rounds = 0
     block = fan
     while True:
@@ -414,10 +444,16 @@ def tree_dedup(
             c_out=co, cap_recv=cap_recv,
         )
         cur = DTable(d, v, t.schema)
-        s = agg_stats(stats, padded_slots(p, co, t.arity))
+        s = agg_stats(
+            stats,
+            padded_slots(p, co, t.arity),
+            wire_bytes=dense_wire_bytes(p, co, t.arity),
+        )
         total["sent"] += s["sent"]
         total["dropped"] += s["dropped"]
         total["padded"] += s["padded"]
+        total["wire_bytes"] += s["wire_bytes"]
+        total["ubytes"] += s["ubytes"]
         rounds += 1
         if block_eff >= p:
             break

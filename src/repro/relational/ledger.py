@@ -32,6 +32,14 @@ class RoundRecord:
     # the subset of ``dispatches`` that were count-only measure pre-passes.
     # Defaulted so pre-split snapshots (``RoundRecord(**r)``) keep loading.
     measure_dispatches: int = 0
+    # byte-true wire accounting: ``payload_bytes`` is what the exchange
+    # buffers actually occupied on the wire this round (packed bit-stream
+    # bytes under the packed format, dense int32 cells + valid flags
+    # otherwise — including count pre-pass vectors and keys-only
+    # exchanges), ``useful_bytes`` the dense-int32 bytes of the useful
+    # tuples inside them.  Defaulted so pre-wire snapshots keep loading.
+    payload_bytes: int = 0
+    useful_bytes: int = 0
 
 
 class Ledger:
@@ -108,6 +116,34 @@ class Ledger:
         return self.shuffle_tuples - self.heavy_tuples
 
     @property
+    def payload_bytes(self) -> int:
+        """Bytes the wire actually shipped across all exchanges — the
+        byte-true sibling of ``padded_slots``.  Unlike the slot metric
+        (which prices every exchange at dense int32 width regardless of
+        encoding), this reflects the configured wire format: packed
+        exchanges charge their bit-stream byte size, dense exchanges
+        charge ``4*arity + 1`` bytes per slot, and the count pre-pass's
+        vectors charge their 4 bytes per counter."""
+        return sum(r.payload_bytes for r in self.records)
+
+    @property
+    def useful_bytes(self) -> int:
+        """Dense-int32 bytes of the useful tuples inside the shipped
+        exchange buffers (4 bytes per cell of every occupied slot) —
+        identical across wire formats, so ``payload_efficiency_bytes``
+        ratios are comparable packed-vs-dense on the same query."""
+        return sum(r.useful_bytes for r in self.records)
+
+    @property
+    def payload_efficiency_bytes(self) -> float:
+        """useful_bytes per shipped wire byte (1.0 when nothing was
+        shipped) — the byte-true quality of the exchange encoding.  Can
+        exceed 1.0 under the packed format: a 6-bit column ships fewer
+        wire bits than its 32-bit useful-payload accounting."""
+        pb = self.payload_bytes
+        return self.useful_bytes / pb if pb else 1.0
+
+    @property
     def payload_efficiency(self) -> float:
         """useful_tuples per shipped cell — the measured quality of the
         shipped exchange buffers (1.0 when nothing was shuffled).  A
@@ -127,12 +163,15 @@ class Ledger:
         padded: int = 0,
         heavy: int = 0,
         measure_dispatches: int = 0,
+        payload_bytes: int = 0,
+        useful_bytes: int = 0,
     ) -> None:
         self.records.append(
             RoundRecord(
                 len(self.records), phase, list(ops), int(comm), note, n_rounds,
                 int(dispatches), int(padded), int(heavy),
-                int(measure_dispatches),
+                int(measure_dispatches), int(payload_bytes),
+                int(useful_bytes),
             )
         )
 
@@ -172,6 +211,9 @@ class Ledger:
             "measured_padded": int(self.padded_slots),
             "measured_heavy": int(self.heavy_tuples),
             "payload_efficiency": float(self.payload_efficiency),
+            "payload_bytes": int(self.payload_bytes),
+            "useful_bytes": int(self.useful_bytes),
+            "payload_efficiency_bytes": float(self.payload_efficiency_bytes),
             "output_tuples": int(self.output_tuples),
             "retries": int(self.retries),
         }
@@ -188,6 +230,8 @@ class Ledger:
                     "measure_dispatches": 0,
                     "padded": 0,
                     "heavy": 0,
+                    "payload_bytes": 0,
+                    "useful_bytes": 0,
                 },
             )
             ph["rounds"] += r.n_rounds
@@ -196,6 +240,8 @@ class Ledger:
             ph["measure_dispatches"] += r.measure_dispatches
             ph["padded"] += r.padded_slots
             ph["heavy"] += r.heavy_tuples
+            ph["payload_bytes"] += r.payload_bytes
+            ph["useful_bytes"] += r.useful_bytes
         return {
             "rounds": self.rounds,
             "measured_dispatches": self.measured_dispatches,
@@ -207,6 +253,9 @@ class Ledger:
             "heavy_tuples": self.heavy_tuples,
             "light_tuples": self.light_tuples,
             "payload_efficiency": round(self.payload_efficiency, 4),
+            "payload_bytes": self.payload_bytes,
+            "useful_bytes": self.useful_bytes,
+            "payload_efficiency_bytes": round(self.payload_efficiency_bytes, 4),
             "output_tuples": self.output_tuples,
             "retries": self.retries,
             "phases": phases,
@@ -219,6 +268,8 @@ class Ledger:
             f"Ledger(rounds={s['rounds']}, dispatches={s['measured_dispatches']}, "
             f"comm={s['comm_tuples']}, out={s['output_tuples']}, "
             f"padded={s['padded_slots']}, eff={s['payload_efficiency']}, "
+            f"bytes={s['payload_bytes']}, "
+            f"eff_bytes={s['payload_efficiency_bytes']}, "
             f"retries={s['retries']}{heavy})"
         ]
         for ph, v in s["phases"].items():

@@ -36,6 +36,7 @@ from .localops import (
     local_semijoin_mask,
 )
 from .shuffle import exchange, exchange_counts, exchange_multi, padded_slots, pow2
+from .wire import count_wire_bytes, dense_wire_bytes
 from .skew import DEFAULT_SKEW_THRESHOLD
 from .spmd import SPMD
 from .table import DTable, schema_join
@@ -45,13 +46,19 @@ class Overflow(Exception):
     """A reducer exceeded its capacity — the paper's 'abort'."""
 
 
-def _stats(sent, dropped):
-    return {"sent": sent, "dropped": dropped}
+def _stats(sent, dropped, ubytes=None):
+    out = {"sent": sent, "dropped": dropped}
+    if ubytes is not None:
+        # useful dense-int32 bytes the exchange occupied (traced, like sent)
+        out["ubytes"] = ubytes
+    return out
 
 
-def agg_stats(stats, padded: int = 0) -> Dict[str, int]:
+def agg_stats(stats, padded: int = 0, wire_bytes: int = 0) -> Dict[str, int]:
     out = {k: int(np.asarray(v).sum()) for k, v in stats.items()}
     out.setdefault("padded", int(padded))
+    out.setdefault("wire_bytes", int(wire_bytes))
+    out.setdefault("ubytes", 0)
     return out
 
 
@@ -59,7 +66,7 @@ def agg_stats(stats, padded: int = 0) -> Dict[str, int]:
 def _repart_shard(data, valid, seed, *, cols, p, c_out, cap_recv, backend):
     dest = get_local_backend(backend).dests(data, valid, cols, p, seed)
     rd, rv, sent, ds, dr = exchange(data, valid, dest, p=p, c_out=c_out, cap_recv=cap_recv)
-    return rd, rv, _stats(sent, ds + dr)
+    return rd, rv, _stats(sent, ds + dr, ubytes=4 * data.shape[1] * sent)
 
 
 def repartition(
@@ -78,7 +85,9 @@ def repartition(
         backend=backend,
     )
     return DTable(rd, rv, t.schema), agg_stats(
-        stats, padded_slots(spmd.p, c_out, t.arity)
+        stats,
+        padded_slots(spmd.p, c_out, t.arity),
+        wire_bytes=dense_wire_bytes(spmd.p, c_out, t.arity),
     )
 
 
@@ -245,7 +254,8 @@ def _join_shard(
     b2, b2v, sent_b, dsb, drb = exchange(b_data, b_valid, db, p=p, c_out=c_out_b, cap_recv=cap_b)
     # key columns are unchanged by the shuffle: join on a_key/b_key directly
     out, out_v, over = local_join(a2, a2v, b2, b2v, a_key, b_key, b_keep, out_cap, backend)
-    return out, out_v, _stats(sent_a + sent_b, dsa + dra + dsb + drb + over)
+    ub = 4 * (a_data.shape[1] * sent_a + b_data.shape[1] * sent_b)
+    return out, out_v, _stats(sent_a + sent_b, dsa + dra + dsb + drb + over, ubytes=ub)
 
 
 def _cross_join_shard(
@@ -262,7 +272,9 @@ def _cross_join_shard(
     out, out_v, over = local_join(
         a_data, a_valid, b2, b2v, (), (), b_keep, out_cap, backend
     )
-    return out, out_v, _stats(sent_b, dsb + drb + over)
+    return out, out_v, _stats(
+        sent_b, dsb + drb + over, ubytes=4 * b_data.shape[1] * sent_b
+    )
 
 
 def dist_join(
@@ -292,12 +304,14 @@ def dist_join(
     out_schema = schema_join(a.schema, b.schema)
     p = spmd.p
     count_pad = 0
+    count_bytes = 0
     if calibrate and shared and c_out is None and cap_recv is None:
         # one fused count dispatch for both sides (one host sync)
         c_out, cap_recv = measure_exchange_pair(
             spmd, a, b, shared, shared, seed=seed, backend=backend
         )
         count_pad = 2 * p * p  # the two (p,)-int count vectors
+        count_bytes = count_wire_bytes(p, 2)
     c_out = c_out or (a.cap, b.cap)           # safe: one shard sends all
     cap_recv = cap_recv or (p * a.cap, p * b.cap)  # safe: one shard gets all
     if not shared:
@@ -309,7 +323,9 @@ def dist_join(
             out_cap=out_cap, backend=backend,
         )
         return DTable(od, ov, out_schema), agg_stats(
-            stats, padded_slots(p, c_out[1], b.arity)
+            stats,
+            padded_slots(p, c_out[1], b.arity),
+            wire_bytes=dense_wire_bytes(p, c_out[1], b.arity),
         )
     od, ov, stats = spmd.run(
         _join_shard,
@@ -325,6 +341,9 @@ def dist_join(
         padded_slots(p, c_out[0], a.arity)
         + padded_slots(p, c_out[1], b.arity)
         + count_pad,
+        wire_bytes=dense_wire_bytes(p, c_out[0], a.arity)
+        + dense_wire_bytes(p, c_out[1], b.arity)
+        + count_bytes,
     )
 
 
@@ -376,6 +395,7 @@ def dist_join_hybrid(
         outs, stats = B.dist_join_many(spmd, [a], [b], **kw)
     st = dict(stats[0])
     st["padded"] = st.get("padded", 0) + m.padded
+    st["wire_bytes"] = st.get("wire_bytes", 0) + m.wire_bytes
     st.setdefault("heavy", 0)
     return outs[0], st
 
@@ -416,6 +436,7 @@ def dist_semijoin_hybrid(
         outs, stats = B.dist_semijoin_many(spmd, [s], [r], **kw)
     st = dict(stats[0])
     st["padded"] = st.get("padded", 0) + m.padded
+    st["wire_bytes"] = st.get("wire_bytes", 0) + m.wire_bytes
     st.setdefault("heavy", 0)
     return outs[0], st
 
@@ -437,7 +458,8 @@ def _semijoin_shard(
     s2, s2v, sent_s, dss, drs = exchange(s_data, s_valid, ds_dest, p=p, c_out=c_out_s, cap_recv=cap_s)
     mask = local_semijoin_mask(s2, s2v, s_key, rk2, rkv2, kcols, backend)
     s2 = jnp.where(mask[:, None], s2, 0)
-    return s2, mask, _stats(sent_r + sent_s, dsr + drr + dss + drs)
+    ub = 4 * (rk.shape[1] * sent_r + s_data.shape[1] * sent_s)
+    return s2, mask, _stats(sent_r + sent_s, dsr + drr + dss + drs, ubytes=ub)
 
 
 def dist_semijoin(
@@ -470,6 +492,8 @@ def dist_semijoin(
         # S ships full rows; R ships only its deduplicated key projection
         padded_slots(p, c_out[0], s.arity)
         + padded_slots(p, c_out[1], len(shared)),
+        wire_bytes=dense_wire_bytes(p, c_out[0], s.arity)
+        + dense_wire_bytes(p, c_out[1], len(shared)),
     )
 
 
@@ -485,7 +509,8 @@ def _intersect_shard(
     b2, b2v, sent_b, dsb, drb = exchange(b_data, b_valid, db, p=p, c_out=c_out_b, cap_recv=cap_b)
     mask = local_intersect_mask(a2, a2v, b2, b2v, a_cols, b_cols, backend)
     a2 = jnp.where(mask[:, None], a2, 0)
-    return a2, mask, _stats(sent_a + sent_b, dsa + dra + dsb + drb)
+    ub = 4 * (a_data.shape[1] * sent_a + b_data.shape[1] * sent_b)
+    return a2, mask, _stats(sent_a + sent_b, dsa + dra + dsb + drb, ubytes=ub)
 
 
 def dist_intersect(
@@ -512,6 +537,8 @@ def dist_intersect(
     return DTable(ad, av, a.schema), agg_stats(
         stats,
         padded_slots(p, c_out[0], a.arity) + padded_slots(p, c_out[1], b.arity),
+        wire_bytes=dense_wire_bytes(p, c_out[0], a.arity)
+        + dense_wire_bytes(p, c_out[1], b.arity),
     )
 
 
@@ -521,7 +548,7 @@ def _dedup_shard(data, valid, seed, *, cols, p, c_out, cap_recv, backend):
     d2, v2, sent, ds, dr = exchange(data, valid, dest, p=p, c_out=c_out, cap_recv=cap_recv)
     mask = local_dedup_mask(d2, v2, cols)
     d2 = jnp.where(mask[:, None], d2, 0)
-    return d2, mask, _stats(sent, ds + dr)
+    return d2, mask, _stats(sent, ds + dr, ubytes=4 * data.shape[1] * sent)
 
 
 def dist_dedup(
@@ -538,7 +565,9 @@ def dist_dedup(
         cols=cols, p=p, c_out=c_out, cap_recv=cap_recv, backend=backend,
     )
     return DTable(d, v, t.schema), agg_stats(
-        stats, padded_slots(p, c_out, t.arity)
+        stats,
+        padded_slots(p, c_out, t.arity),
+        wire_bytes=dense_wire_bytes(p, c_out, t.arity),
     )
 
 
@@ -559,7 +588,7 @@ def _hypercube_send_shard(data, valid, seed, *, dest_plan, p, c_out, cap_recv):
     rd, rv, sent, ds, dr = exchange_multi(
         data, valid, dests, p=p, c_out=c_out, cap_recv=cap_recv
     )
-    return rd, rv, _stats(sent, ds + dr)
+    return rd, rv, _stats(sent, ds + dr, ubytes=4 * data.shape[1] * sent)
 
 
 def hypercube_partition(
@@ -599,7 +628,9 @@ def hypercube_partition(
         p=spmd.p, c_out=c_out, cap_recv=cap_recv,
     )
     return DTable(rd, rv, t.schema), agg_stats(
-        stats, padded_slots(spmd.p, c_out, t.arity)
+        stats,
+        padded_slots(spmd.p, c_out, t.arity),
+        wire_bytes=dense_wire_bytes(spmd.p, c_out, t.arity),
     )
 
 
@@ -630,7 +661,9 @@ def local_multiway_join(
     their co-located buckets, the reduce stage of Lemma 8)."""
     assert len(tables) >= 1
     if len(tables) == 1:
-        return tables[0], {"sent": 0, "dropped": 0, "padded": 0}
+        return tables[0], {
+            "sent": 0, "dropped": 0, "padded": 0, "wire_bytes": 0, "ubytes": 0,
+        }
     plan = []
     schema = tables[0].schema
     for nxt in tables[1:]:
@@ -701,7 +734,9 @@ def dist_project(
     """Shard-local projection (no communication).  Returns (table, stats)
     like every other operator; stats are identically zero."""
     d, v = spmd.run(_project_shard, t.data, t.valid, cols=t.cols(attrs), dedup=dedup)
-    return DTable(d, v, tuple(attrs)), {"sent": 0, "dropped": 0, "padded": 0}
+    return DTable(d, v, tuple(attrs)), {
+        "sent": 0, "dropped": 0, "padded": 0, "wire_bytes": 0, "ubytes": 0,
+    }
 
 
 def check_no_drop(

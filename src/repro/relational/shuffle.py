@@ -15,7 +15,12 @@ axis only, so wrapping the calling shard function in an inner (anonymous)
 
 Capacity calibration: the wire ships the dense ``(p, c_out)`` slot buffer,
 so every ``all_to_all`` pays ``p * c_out`` slots per shard regardless of
-occupancy.  ``exchange_counts`` is the count-only pre-pass behind the
+occupancy.  Passing a ``wire.WireFormat`` (``fmt=``) replaces the dense
+int32 cells + bool valid pair with ONE bit-packed uint8 buffer per
+exchange (same rows out, exact round-trip); ``exchange_start`` /
+``exchange_finish`` split an exchange around its collective so a fused
+group can concatenate many encoded exchanges into a single segmented
+``all_to_all`` (``ship_segments``).  ``exchange_counts`` is the count-only pre-pass behind the
 engine's occupancy-adaptive shuffle: a tiny ``(p,)``-int ``all_to_all`` of
 per-destination bucket counts, from which the capacity manager picks tight
 ``c_out``/``cap_recv`` *before* the payload moves (Hu & Yi's per-instance
@@ -26,13 +31,21 @@ different occupancies instead of recompiled per capacity.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .localops import compact
 from .spmd import AXIS
+from .wire import (
+    WireFormat,
+    get_codec,
+    pack_segments,
+    split_segments,
+    wire_decode,
+    wire_encode,
+)
 
 
 def pow2(x: int) -> int:
@@ -92,6 +105,22 @@ def _bucketize(
     return buf, buf_valid, sent, dropped
 
 
+def _wire_ship(
+    buf: jax.Array, buf_valid: jax.Array, fmt: WireFormat, c_out: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Packed collective: encode the dense buckets + valid plane into one
+    bit-packed uint8 buffer, run ONE ``all_to_all`` (instead of the dense
+    path's data + valid pair), decode back.  The optional codec hook
+    wraps the bytes around the collective."""
+    wire = wire_encode(buf, buf_valid, fmt)
+    enc, dec = get_codec(fmt.codec)
+    payload, aux = enc(wire)
+    rpayload = jax.lax.all_to_all(
+        payload, AXIS, split_axis=0, concat_axis=0, tiled=False
+    )
+    return wire_decode(dec(rpayload, aux), fmt, c_out)
+
+
 # ------------------------------------------------------ count-only pre-pass
 def bucket_counts(dest: jax.Array, p: int) -> jax.Array:
     """Per-destination outgoing bucket counts: (n,) or (n, g) destinations
@@ -133,16 +162,24 @@ def exchange(
     p: int,
     c_out: int,
     cap_recv: int,
+    fmt: Optional[WireFormat] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Repartition rows to ``dest`` shards.
+
+    ``fmt=None`` ships the dense int32 buckets + bool valid plane (two
+    collectives); a ``WireFormat`` ships one bit-packed uint8 buffer.
+    Rows out are bit-identical either way.
 
     Returns (rdata (cap_recv, ar), rvalid, sent, dropped_send, dropped_recv).
     """
     buf, buf_valid, sent, dropped_send = _bucketize(
         data, jnp.where(valid, dest, p), p, c_out
     )
-    rbuf = jax.lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0, tiled=False)
-    rvalid = jax.lax.all_to_all(buf_valid, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    if fmt is None:
+        rbuf = jax.lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0, tiled=False)
+        rvalid = jax.lax.all_to_all(buf_valid, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    else:
+        rbuf, rvalid = _wire_ship(buf, buf_valid, fmt, c_out)
     flat = rbuf.reshape(p * c_out, -1)
     flatv = rvalid.reshape(p * c_out)
     rdata, rv, dropped_recv = compact(flat, flatv, cap_recv)
@@ -157,6 +194,7 @@ def exchange_multi(
     p: int,
     c_out: int,
     cap_recv: int,
+    fmt: Optional[WireFormat] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Replicated send: each row goes to up to g destinations.
 
@@ -169,7 +207,24 @@ def exchange_multi(
     a product of distinct coordinates, hybrid broadcast is ``arange``),
     so this is defense-in-depth; the regression tests pin both the
     construction-site distinctness and this dedupe."""
-    n, ar = data.shape
+    tiled_rows, flat_dest = _multi_flatten(data, valid, dests, p)
+    buf, buf_valid, sent, dropped_send = _bucketize(tiled_rows, flat_dest, p, c_out)
+    if fmt is None:
+        rbuf = jax.lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0, tiled=False)
+        rvalid = jax.lax.all_to_all(buf_valid, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    else:
+        rbuf, rvalid = _wire_ship(buf, buf_valid, fmt, c_out)
+    flat = rbuf.reshape(p * c_out, -1)
+    flatv = rvalid.reshape(p * c_out)
+    rdata, rv, dropped_recv = compact(flat, flatv, cap_recv)
+    return rdata, rv, sent, dropped_send, dropped_recv
+
+
+def _multi_flatten(
+    data: jax.Array, valid: jax.Array, dests: jax.Array, p: int
+) -> Tuple[jax.Array, jax.Array]:
+    """The map-side row tiling of ``exchange_multi``: dedupe each row's
+    destination list to the skip slot, then flatten to one (n*g,) send."""
     g = dests.shape[1]
     if g > 1:
         eq = dests[:, :, None] == dests[:, None, :]  # (n, g, g)
@@ -177,13 +232,63 @@ def exchange_multi(
         dup = (eq & earlier[None]).any(-1)
         dests = jnp.where(dup, p, dests)
     tiled_rows = jnp.repeat(data, g, axis=0)  # (n*g, ar)
-    flat_dest = jnp.where(
-        jnp.repeat(valid, g, axis=0), dests.reshape(-1), p
+    flat_dest = jnp.where(jnp.repeat(valid, g, axis=0), dests.reshape(-1), p)
+    return tiled_rows, flat_dest
+
+
+# ------------------------------------------- segmented (fused-group) exchange
+# An exchange split around its collective: ``*_start`` buckets + encodes
+# one op's send into a (p, nbytes) segment, ``ship_segments`` runs ONE
+# ``all_to_all`` over every segment of a fused op group concatenated
+# (mixed schemas/arities each keep their own format — arity-aware
+# segmentation instead of padding every op to the widest schema), and
+# ``exchange_finish`` decodes + compacts each op's received segment.
+def exchange_start(
+    data: jax.Array,
+    valid: jax.Array,
+    dest: jax.Array,
+    *,
+    p: int,
+    c_out: int,
+    fmt: WireFormat,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Map stage of a packed exchange: returns (wire segment (p, nbytes),
+    sent, dropped_send)."""
+    buf, buf_valid, sent, dropped_send = _bucketize(
+        data, jnp.where(valid, dest, p), p, c_out
     )
+    return wire_encode(buf, buf_valid, fmt), sent, dropped_send
+
+
+def exchange_multi_start(
+    data: jax.Array,
+    valid: jax.Array,
+    dests: jax.Array,
+    *,
+    p: int,
+    c_out: int,
+    fmt: WireFormat,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Map stage of a packed replicated send (``exchange_multi``)."""
+    tiled_rows, flat_dest = _multi_flatten(data, valid, dests, p)
     buf, buf_valid, sent, dropped_send = _bucketize(tiled_rows, flat_dest, p, c_out)
-    rbuf = jax.lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0, tiled=False)
-    rvalid = jax.lax.all_to_all(buf_valid, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    return wire_encode(buf, buf_valid, fmt), sent, dropped_send
+
+
+def ship_segments(wires: Sequence[jax.Array]) -> List[jax.Array]:
+    """ONE ``all_to_all`` for a whole fused group: concatenate each
+    exchange's (p, nbytes_i) segment, ship, split back."""
+    seg = pack_segments(wires)
+    rseg = jax.lax.all_to_all(seg, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    return split_segments(rseg, [w.shape[-1] for w in wires])
+
+
+def exchange_finish(
+    rwire: jax.Array, *, p: int, c_out: int, cap_recv: int, fmt: WireFormat
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Reduce stage of a packed exchange: decode the received segment and
+    compact.  Returns (rdata, rvalid, dropped_recv)."""
+    rbuf, rvalid = wire_decode(rwire, fmt, c_out)
     flat = rbuf.reshape(p * c_out, -1)
     flatv = rvalid.reshape(p * c_out)
-    rdata, rv, dropped_recv = compact(flat, flatv, cap_recv)
-    return rdata, rv, sent, dropped_send, dropped_recv
+    return compact(flat, flatv, cap_recv)

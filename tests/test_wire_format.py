@@ -1,0 +1,373 @@
+"""Packed wire format: the codec must be an exact inverse pair for any
+values that fit their column widths (round-trip identity, pinned by a
+hypothesis property over random schemas/widths/occupancies and a golden
+byte fixture of one S_8 exchange buffer), and a packed end-to-end run
+must be bit-identical to dense (rows, comm_tuples, retries) while
+shipping strictly fewer payload bytes — across engines, fusion, and
+calibration, and across a snapshot/resume boundary."""
+from __future__ import annotations
+
+import os
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gym import GymConfig, GymDriver, gym
+from repro.core.queries import (
+    chain_ghd,
+    chain_query,
+    star_ghd,
+    star_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+from repro.data.synthetic import chain_data_sparse, star_data_sparse, tc_data_sparse
+from repro.relational.spmd import SPMD
+from repro.relational.wire import (
+    WireFormat,
+    WirePolicy,
+    codec_roundtrip,
+    count_wire_bytes,
+    dense_wire_bytes,
+    get_codec,
+    pack_segments,
+    packed_wire_bytes,
+    split_segments,
+    value_bits,
+    wire_decode,
+    wire_encode,
+    wire_overflow,
+)
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+# ------------------------------------------------------------- width policy
+def test_value_bits_boundaries():
+    assert value_bits(0, 0) == 1
+    assert value_bits(0, 1) == 1
+    assert value_bits(0, 2) == 2
+    assert value_bits(0, 63) == 6
+    assert value_bits(0, 64) == 7
+    assert value_bits(0, 2**31 - 1) == 31
+    # negatives fall back to the full bitcast width
+    assert value_bits(-1, 5) == 32
+
+
+def test_format_shapes_and_bucket_bytes():
+    fmt = WireFormat((6, 6))
+    assert fmt.arity == 2
+    assert fmt.row_bits == 13  # 1 valid bit + 2 x 6
+    # one group of 8 slots packs to exactly row_bits bytes
+    assert fmt.bucket_bytes(8) == 13
+    assert fmt.bucket_bytes(9) == 26  # padded up to two groups
+    assert fmt.bucket_bytes(0) == 0
+    # the dense sibling of the same bucket: 8 slots x (2*4B + 1B valid)
+    assert dense_wire_bytes(1, 8, 2) == 8 * 9
+    assert packed_wire_bytes(4, 8, fmt) == 16 * 13
+    assert count_wire_bytes(4, n=3) == 3 * 16 * 4
+
+
+def test_union_is_widest_per_column():
+    u = WireFormat.union([WireFormat((3, 9)), WireFormat((5, 2))])
+    assert u.col_bits == (5, 9)
+    with pytest.raises(AssertionError):
+        WireFormat.union([WireFormat((3,)), WireFormat((3, 3))])
+
+
+def test_policy_covers_every_base_column_of_an_attribute():
+    pol = WirePolicy.from_columns(
+        [
+            (("A", "B"), np.asarray([[3, 200], [1, 5]], np.int32)),
+            (("B", "C"), np.asarray([[7, 1]], np.int32)),
+            (("D",), np.zeros((0, 1), np.int32)),  # empty: packs to 1 bit
+        ]
+    )
+    assert pol.bits_for("A") == 2
+    assert pol.bits_for("B") == 8  # covers 200 from the FIRST relation
+    assert pol.bits_for("C") == 1
+    assert pol.bits_for("D") == 1
+    assert pol.bits_for("Z") == 32  # unknown attrs stay at full width
+    assert pol.format_for(("B", "A")).col_bits == (8, 2)
+
+
+# ------------------------------------------------------------------- codec
+def _roundtrip(buf, valid, fmt):
+    wire = wire_encode(jnp.asarray(buf), jnp.asarray(valid), fmt)
+    assert wire.dtype == jnp.uint8
+    assert wire.shape[-1] == fmt.bucket_bytes(valid.shape[-1])
+    got_buf, got_valid = wire_decode(wire, fmt, valid.shape[-1])
+    assert np.array_equal(np.asarray(got_buf), buf)
+    assert np.array_equal(np.asarray(got_valid), valid)
+    return np.asarray(wire)
+
+
+def test_roundtrip_exact_deterministic():
+    fmt = WireFormat((6, 6))
+    rng = np.random.default_rng(0)
+    for c in (1, 7, 8, 16, 33):  # non-multiples of 8 exercise the padding
+        buf = rng.integers(0, 64, (c, 2)).astype(np.int32)
+        valid = rng.integers(0, 2, (c,)).astype(bool)
+        _roundtrip(buf, valid, fmt)
+
+
+def test_roundtrip_leading_batch_dims():
+    # the exchange encodes (p, c_out, arity) buckets in one call
+    fmt = WireFormat((4, 9, 1))
+    rng = np.random.default_rng(1)
+    buf = np.stack(
+        [rng.integers(0, 2**b, (4, 16)) for b in fmt.col_bits], axis=-1
+    ).astype(np.int32)
+    valid = rng.integers(0, 2, (4, 16)).astype(bool)
+    _roundtrip(buf, valid, fmt)
+
+
+def test_roundtrip_32bit_column_carries_negatives():
+    fmt = WireFormat((32,))
+    buf = np.asarray([[-1], [-(2**31)], [2**31 - 1], [0]], np.int32)
+    valid = np.asarray([True, True, True, False])
+    _roundtrip(buf, valid, fmt)
+
+
+def test_roundtrip_arity_zero_and_empty_full_shards():
+    fmt = WireFormat(())
+    assert fmt.row_bits == 1
+    for valid in (np.zeros(12, bool), np.ones(12, bool)):
+        buf = np.zeros((12, 0), np.int32)
+        _roundtrip(buf, valid, fmt)
+
+
+def test_wire_overflow_flags_valid_rows_only():
+    fmt = WireFormat((3, 32))
+    buf = np.asarray([[7, -5], [8, 0], [9, 1]], np.int32)
+    valid = np.asarray([True, True, False])
+    bad = np.asarray(wire_overflow(jnp.asarray(buf), jnp.asarray(valid), fmt))
+    # row 0 fits (32-bit col takes any int32); row 1 overflows its 3-bit
+    # column; row 2 would overflow but is invalid
+    assert bad.tolist() == [False, True, False]
+
+
+def test_pack_split_segments_roundtrip():
+    rng = np.random.default_rng(2)
+    parts = [jnp.asarray(rng.integers(0, 256, (4, n)), jnp.uint8) for n in (3, 1, 8)]
+    seg = pack_segments(parts)
+    assert seg.shape == (4, 12)
+    back = split_segments(seg, [3, 1, 8])
+    for a, b in zip(parts, back):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(AssertionError):
+        split_segments(seg, [3, 1])  # sizes must cover the buffer
+
+
+def test_codec_registry_raw_is_identity():
+    buf = jnp.asarray(np.arange(24, dtype=np.uint8).reshape(2, 12))
+    assert np.array_equal(np.asarray(codec_roundtrip(buf, "raw")), np.asarray(buf))
+    enc, dec = get_codec("raw")
+    payload, aux = enc(buf)
+    assert payload is buf
+    with pytest.raises(KeyError):
+        get_codec("no-such-codec")
+
+
+# ------------------------------------------------- property: random schemas
+def test_roundtrip_property_random_schemas():
+    """Round-trip identity over random schemas, widths, occupancies and
+    value ranges — including empty and full shards, bucket sizes that are
+    not a multiple of 8, arity 0, and full-width negative columns."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        col_bits=st.lists(st.integers(1, 32), min_size=0, max_size=4),
+        c=st.integers(1, 40),
+        occupancy=st.sampled_from(["empty", "full", "random"]),
+    )
+    def prop(seed, col_bits, c, occupancy):
+        fmt = WireFormat(tuple(col_bits))
+        rng = np.random.default_rng(seed)
+        cols = []
+        for nb in col_bits:
+            if nb == 32:  # full width: any int32, sign bit included
+                col = rng.integers(-(2**31), 2**31, (c,), dtype=np.int64)
+            else:
+                col = rng.integers(0, 2**nb, (c,), dtype=np.int64)
+            cols.append(col.astype(np.int32))
+        buf = (
+            np.stack(cols, axis=-1)
+            if cols
+            else np.zeros((c, 0), np.int32)
+        )
+        if occupancy == "empty":
+            valid = np.zeros(c, bool)
+        elif occupancy == "full":
+            valid = np.ones(c, bool)
+        else:
+            valid = rng.integers(0, 2, (c,)).astype(bool)
+        assert not np.asarray(
+            wire_overflow(jnp.asarray(buf), jnp.asarray(valid), fmt)
+        ).any()
+        _roundtrip(buf, valid, fmt)
+
+    prop()
+
+
+# -------------------------------------------------------- golden fixture
+def test_golden_fixture_pins_s8_packed_bytes():
+    """Byte-level snapshot of one S_8 packed exchange buffer: the hub
+    relation of the bench dataset, bucketized deterministically at p=8,
+    encoded with the policy-derived format.  Any change to the bit
+    layout (bit order, valid-bit position, group transpose, padding)
+    shows up here as a byte diff — regenerate ONLY with an explicit
+    format-version bump (scripts in the fixture header)."""
+    q = star_query(8)
+    data = star_data_sparse(8, domain=64, hub_rows=256, spoke_extra=64, seed=21)
+    pol = WirePolicy.from_columns(
+        [(a.attrs, data[a.rel]) for a in q.atoms]
+    )
+    hub = next(a for a in q.atoms if len(a.attrs) > 2)
+    fmt = pol.format_for(hub.attrs)
+    # the policy covers every base column of an attribute: the spokes
+    # carry hub attrs at full domain width, so 6 bits each
+    assert fmt.col_bits == (6,) * 7
+
+    # deterministic bucketization: row i of the (deduped) hub lands in
+    # bucket i % 8, slot i // 8, c_out=32; the tail slots stay invalid
+    rows = np.unique(data[hub.rel], axis=0)[:200]
+    p, c_out = 8, 32
+    buf = np.zeros((p, c_out, rows.shape[1]), np.int32)
+    valid = np.zeros((p, c_out), bool)
+    for i, r in enumerate(rows):
+        buf[i % p, i // p] = r
+        valid[i % p, i // p] = True
+    wire = _roundtrip(buf, valid, fmt)
+    assert wire.shape == (p, fmt.bucket_bytes(c_out))
+
+    path = os.path.join(FIXTURES, "wire_s8_packed.npz")
+    assert os.path.exists(path), (
+        f"golden fixture missing: {path} — regenerate with "
+        "scripts/make_wire_fixture.py"
+    )
+    z = np.load(path)
+    assert tuple(z["col_bits"].tolist()) == fmt.col_bits
+    assert np.array_equal(z["wire"], wire), (
+        "packed bit layout drifted from the golden fixture"
+    )
+    # and the fixture bytes decode back to the exact buckets
+    got_buf, got_valid = wire_decode(jnp.asarray(z["wire"]), fmt, c_out)
+    assert np.array_equal(np.asarray(got_buf), buf)
+    assert np.array_equal(np.asarray(got_valid), valid)
+
+
+# ---------------------------------------------- differential: packed = dense
+CASES = {
+    "chain": lambda: (chain_query(4), chain_ghd(4), chain_data_sparse(4, seed=7)),
+    "star": lambda: (star_query(5), star_ghd(5), star_data_sparse(5, seed=9)),
+    "tc": lambda: (
+        triangle_chain_query(2),
+        triangle_chain_ghd(2),
+        tc_data_sparse(2, seed=8),
+    ),
+}
+
+
+def _run(qname, strategy, fused, calibrate, wire_format):
+    q, g, data = CASES[qname]()
+    rows, _, led = gym(
+        q, data, ghd=g, p=4,
+        config=GymConfig(
+            strategy=strategy, seed=3, fused=fused,
+            calibrate_shuffle=calibrate, wire_format=wire_format,
+        ),
+    )
+    return sorted(map(tuple, rows)), led
+
+
+def _assert_parity(packed, dense, key):
+    rows_p, led_p = packed
+    rows_d, led_d = dense
+    assert rows_p == rows_d, key
+    assert led_p.comm_tuples == led_d.comm_tuples, key
+    assert led_p.shuffle_tuples == led_d.shuffle_tuples, key
+    assert led_p.retries == led_d.retries == 0, key
+    assert led_p.rounds == led_d.rounds, key
+    # the useful payload is mode-independent by construction; the wire
+    # bytes are what packing shrinks.  (padded_slots is NOT compared:
+    # the packed join pre-count ships multi-column key slots where dense
+    # ships a width-1 hashed column.)
+    assert led_p.useful_bytes == led_d.useful_bytes, key
+    assert led_p.payload_bytes < led_d.payload_bytes, key
+    assert led_p.payload_efficiency_bytes > led_d.payload_efficiency_bytes, key
+
+
+def test_packed_vs_dense_parity_fast():
+    """Fast-lane pin of the differential property: packed moves the SAME
+    rows/comm/retries as dense while shipping strictly fewer bytes."""
+    _assert_parity(
+        _run("chain", "hash", True, True, "packed"),
+        _run("chain", "hash", True, True, "dense"),
+        ("chain", "hash"),
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["hash", "grid", "hybrid"])
+@pytest.mark.parametrize("fused", [True, False])
+@pytest.mark.parametrize("qname", sorted(CASES))
+def test_packed_vs_dense_parity_calibrated(strategy, fused, qname):
+    """The full matrix at calibrated capacities: three engines x
+    fused/sequential x three query shapes."""
+    key = (qname, strategy, fused)
+    _assert_parity(
+        _run(qname, strategy, fused, True, "packed"),
+        _run(qname, strategy, fused, True, "dense"),
+        key,
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["hash", "grid", "hybrid"])
+def test_packed_vs_dense_parity_fixed_caps(strategy):
+    """Packing is orthogonal to calibration: parity must also hold at
+    fixed worst-case capacities."""
+    _assert_parity(
+        _run("chain", strategy, True, False, "packed"),
+        _run("chain", strategy, True, False, "dense"),
+        ("chain", strategy, "fixed"),
+    )
+
+
+# ------------------------------------------------------- snapshot / resume
+@pytest.mark.slow
+def test_snapshot_roundtrips_wire_format(tmp_path):
+    """A packed run snapshotted mid-query must resume PACKED even when
+    the resuming driver was constructed dense — the snapshot's config
+    wins — and still produce the dense run's exact rows."""
+    q, g, data = CASES["chain"]()
+    spmd = SPMD(4)
+    cfg_p = GymConfig(
+        strategy="hash", seed=3, calibrate_shuffle=True, wire_format="packed"
+    )
+    want, _, _ = gym(q, data, ghd=g, p=4, config=dataclasses_replace_dense(cfg_p))
+
+    drv = GymDriver(q, g, data, spmd, cfg_p)
+    drv.step()
+    snap = str(tmp_path / "wire_snapshot.npz")
+    drv.save(snap)
+
+    cfg_d = dataclasses_replace_dense(cfg_p)
+    drv2 = GymDriver(q, g, data, SPMD(4), cfg_d)
+    drv2.load(snap)
+    assert drv2.config.wire_format == "packed"  # the snapshot's config wins
+    assert drv2.executor.engine.wire_policy is not None
+    out = sorted(map(tuple, drv2.run().to_numpy()))
+    assert out == sorted(map(tuple, np.asarray(want)))
+
+
+def dataclasses_replace_dense(cfg):
+    import dataclasses
+
+    return dataclasses.replace(cfg, wire_format="dense")
