@@ -1,0 +1,33 @@
+"""Shared bench I/O: atomic JSON trajectory writes.
+
+The ``BENCH_*.json`` trajectories at the repo root are committed
+baselines future PRs regress against; the ``BENCH_*.partial.json``
+siblings are per-run smoke artifacts.  Either way a plain ``open(path,
+"w")`` that dies mid-``json.dump`` (Ctrl-C, OOM, CI timeout) leaves a
+truncated file — which for the committed baselines means a corrupted
+regression reference.  Write to a tempfile in the destination directory
+and ``os.replace`` (atomic on POSIX): readers see the old content or the
+new, never a torn write."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+
+def write_json_atomic(path: str, obj: Any) -> None:
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, path)  # atomic publish
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise

@@ -1,0 +1,230 @@
+"""Multi-tenant join serving: batched cross-request fusion vs a
+sequential ``gym()`` loop, on a zipf arrival mix over the Table-1
+families (S_8 / C_8 / TC_9, hash engine, p=8).
+
+The acceptance bar this bench enforces:
+
+- every served query's rows and ``comm_tuples`` are bit-identical to a
+  standalone ``gym()`` run of the same (query, data, config) — and zero
+  abort-retries on both paths, so the comparison is well-defined;
+- per-tenant ledger comm sums exactly to the server aggregate (the
+  ``ServerLedger`` keeps the Lemma-2 audit per request);
+- the batched server issues FEWER payload dispatches than the sequential
+  loop (``dispatches_saved > 0`` — cross-request fusion happened);
+- throughput: batched queries/sec must beat the sequential loop
+  (smoke mode: must not lose).
+
+The batched path amortizes across requests two ways: compatible op
+groups (equal ``cross_request_key`` incl. the measured pow2 caps) merge
+into shared fused dispatches, and one shared ``CapsCache`` lets the
+zipf head's repeat queries skip their measure pre-pass host syncs.
+
+Timing methodology (as in ``bench_shuffle``): one warmup pass per mode
+compiles every XLA program — including the merged-k program shapes,
+which exist only on the batched path — then each mode runs three times
+on the shared warm ``SPMD`` and the BEST wall time is compared (min-of-N,
+the noise-robust steady-state estimator).  Scheduling inside the server
+is tick-based and deterministic, so the warmup pass compiles exactly
+the shapes the timed pass reuses.
+
+Per-query latency: submission-to-completion wall time within a pass
+(sequential queries queue behind each other's service; batched queries
+share capacity and finish in waves) — reported as p50/p99, not asserted.
+
+``BENCH_SERVE_SMOKE=1`` (the CI lane) shrinks to p=4 and a 2-query mix;
+smoke runs write ``BENCH_serve.partial.json`` so they never clobber the
+committed full baseline.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks._io import write_json_atomic
+from repro.core.caps_cache import CapsCache
+from repro.core.gym import GymConfig, GymDriver, gym
+from repro.core.queries import (
+    chain_ghd,
+    chain_query,
+    star_ghd,
+    star_query,
+    triangle_chain_ghd,
+    triangle_chain_query,
+)
+from repro.data.synthetic import chain_data_sparse, star_data_sparse, tc_data_sparse
+from repro.relational.spmd import SPMD
+from repro.serve.join_server import JoinServer
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+PARTIAL_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_serve.partial.json"
+)
+
+# the Table-1 matching-database shapes at p=8 scale (same as bench_shuffle)
+FAMILIES = {
+    "S_8": lambda: (
+        star_query(8),
+        star_ghd(8),
+        star_data_sparse(8, domain=64, hub_rows=256, spoke_extra=64, seed=21),
+    ),
+    "C_8": lambda: (
+        chain_query(8),
+        chain_ghd(8),
+        chain_data_sparse(8, domain=256, ident=64, extra=192, seed=24),
+    ),
+    "TC_9": lambda: (
+        triangle_chain_query(3),
+        triangle_chain_ghd(3),
+        tc_data_sparse(3, domain=128, ident=32, extra=96, seed=22),
+    ),
+}
+
+# admit the whole mix: the throughput story is riders-per-fused-dispatch,
+# and every queued-but-unadmitted query is a merge opportunity lost (the
+# admission-control *policy* itself is pinned by tests/test_join_server.py)
+MAX_IN_FLIGHT = 8
+
+
+def zipf_mix(names, n, *, s: float = 1.5, seed: int = 0):
+    """Deterministic zipf-weighted arrival mix: rank r of ``names`` gets
+    probability ~ 1/r^s (the skewed popular-query-dominates workload a
+    serving layer actually sees)."""
+    w = np.array([1.0 / (r + 1) ** s for r in range(len(names))])
+    rng = np.random.default_rng(seed)
+    return [names[i] for i in rng.choice(len(names), size=n, p=w / w.sum())]
+
+
+def _cfg() -> GymConfig:
+    return GymConfig(strategy="hash", seed=23)
+
+
+def _sequential_pass(spmd, cases, mix):
+    """One pass of the baseline: a fresh driver per query, run to
+    completion back to back.  Per-query latency includes the queueing
+    behind earlier queries' service (arrivals are simultaneous)."""
+    t0 = time.time()
+    lats, rows_by = [], []
+    for name in mix:
+        q, g, data = cases[name]
+        drv = GymDriver(q, g, data, spmd, _cfg())
+        rows_by.append((drv.run().to_numpy(), drv.ledger))
+        lats.append(time.time() - t0)
+    return time.time() - t0, lats, rows_by
+
+
+def _batched_pass(spmd, cases, mix):
+    """One pass of the server: submit the whole mix at tick 0, drain.
+    Latency per ticket = wall time when its finishing tick completed.
+
+    The server gets a shared ``CapsCache`` (fresh per pass, so passes
+    stay identical): tenants with equal group signatures warm each
+    other, so the zipf head's repeat queries skip their measure
+    pre-pass host syncs entirely — the second half of the serving
+    layer's amortization story, next to cross-request fused dispatch.
+    The sequential baseline deliberately does NOT share one (it is the
+    standalone ``gym()``-loop a user writes today)."""
+    srv = JoinServer(
+        spmd, max_in_flight=MAX_IN_FLIGHT, caps_cache=CapsCache()
+    )
+    tickets = []
+    for i, name in enumerate(mix):
+        q, g, data = cases[name]
+        tickets.append(srv.submit(f"tenant-{i}:{name}", q, g, data, _cfg()))
+    t0 = time.time()
+    tick_done_at = {srv.tick: 0.0}
+    while srv.step():
+        tick_done_at[srv.tick] = time.time() - t0
+    tick_done_at[srv.tick] = time.time() - t0
+    secs = time.time() - t0
+    lats = [tick_done_at[t.finish_tick] for t in tickets]
+    return secs, lats, tickets, srv.ledger
+
+
+def run() -> list:
+    smoke = bool(os.environ.get("BENCH_SERVE_SMOKE"))
+    p = 4 if smoke else 8
+    names = list(FAMILIES)
+    mix = ["S_8", "S_8"] if smoke else zipf_mix(names, 8)
+    cases = {name: FAMILIES[name]() for name in set(mix)}
+    spmd = SPMD(p)
+
+    # standalone references: the parity oracle (and the solo-shape warmup)
+    ref = {}
+    for name in set(mix):
+        q, g, data = cases[name]
+        rows, _, led = gym(q, data, ghd=g, spmd=spmd, config=_cfg())
+        ref[name] = ({tuple(r) for r in rows}, led)
+
+    # warmup passes compile both modes' program shapes (incl. merged-k)
+    _sequential_pass(spmd, cases, mix)
+    _batched_pass(spmd, cases, mix)
+
+    # steady state, best-of-N per mode (min = the noise-robust estimator)
+    reps = 2 if smoke else 3
+    seq_secs, seq_lats, seq_results = None, None, None
+    for _ in range(reps):
+        s, l, r = _sequential_pass(spmd, cases, mix)
+        if seq_secs is None or s < seq_secs:
+            seq_secs, seq_lats, seq_results = s, l, r
+    bat_secs, bat_lats, tickets, served = None, None, None, None
+    for _ in range(reps):
+        s, l, t, led = _batched_pass(spmd, cases, mix)
+        if bat_secs is None or s < bat_secs:
+            bat_secs, bat_lats, tickets, served = s, l, t, led
+
+    # acceptance: parity — every served query is bit-identical to its
+    # standalone run (rows AND comm), with zero retries on either path
+    for name, tkt, (rows_seq, led_seq) in zip(mix, tickets, seq_results):
+        want_rows, want_led = ref[name]
+        assert {tuple(r) for r in tkt.rows()} == want_rows, name
+        assert {tuple(r) for r in rows_seq} == want_rows, name
+        assert tkt.ledger.comm_tuples == want_led.comm_tuples, (
+            name, tkt.ledger.comm_tuples, want_led.comm_tuples,
+        )
+        assert led_seq.comm_tuples == want_led.comm_tuples, name
+        assert tkt.ledger.retries == 0 and led_seq.retries == 0, name
+    # acceptance: the per-tenant ledgers reconcile with the aggregate
+    tenant_leds = [l for ls in served.tenants.values() for l in ls]
+    assert served.queries == len(mix)
+    assert served.comm_tuples == sum(l.comm_tuples for l in tenant_leds)
+    # acceptance: cross-request fusion actually shared dispatches
+    assert served.dispatches_saved > 0, served.summary()
+    # acceptance: batched throughput beats (smoke: doesn't lose to) the
+    # sequential loop
+    if smoke:
+        assert bat_secs <= seq_secs, (bat_secs, seq_secs)
+    else:
+        assert bat_secs < seq_secs, (bat_secs, seq_secs)
+
+    n = len(mix)
+    rec = dict(
+        bench="serve",
+        p=p,
+        engine="hash",
+        mix=mix,
+        max_in_flight=MAX_IN_FLIGHT,
+        queries=n,
+        seq_secs=round(seq_secs, 3),
+        batched_secs=round(bat_secs, 3),
+        seq_qps=round(n / seq_secs, 3),
+        batched_qps=round(n / bat_secs, 3),
+        speedup=round(seq_secs / bat_secs, 3),
+        seq_p50_latency=round(float(np.percentile(seq_lats, 50)), 3),
+        seq_p99_latency=round(float(np.percentile(seq_lats, 99)), 3),
+        batched_p50_latency=round(float(np.percentile(bat_lats, 50)), 3),
+        batched_p99_latency=round(float(np.percentile(bat_lats, 99)), 3),
+        fused_dispatches=served.fused_dispatches,
+        fused_riders=served.fused_riders,
+        dispatches_saved=served.dispatches_saved,
+        server_dispatches=served.measured_dispatches,
+        seq_dispatches=sum(l.measured_dispatches for _, l in seq_results),
+        comm_tuples=served.comm_tuples,
+        retries=served.retries,
+    )
+    write_json_atomic(
+        OUT_PATH if not smoke else PARTIAL_PATH,
+        {"bench": "serve", "p": p, "families": names, "results": [rec]},
+    )
+    return [rec]

@@ -37,10 +37,10 @@ clobber the committed full baseline (the CI smoke step runs just S_8).
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
+from benchmarks._io import write_json_atomic
 from repro.core.gym import GymConfig, GymDriver, gym
 from repro.relational.spmd import SPMD
 from repro.core.queries import (
@@ -202,17 +202,14 @@ def run() -> list:
             name, secs_by["packed"], secs_by["calibrated"],
         )
     path = OUT_PATH if not only else PARTIAL_PATH
-    with open(path, "w") as f:
-        json.dump(
-            {
-                "bench": "shuffle",
-                "p": 8,
-                "engine": "hash",
-                "families": names,
-                "results": trajectory,
-            },
-            f,
-            indent=2,
-        )
-        f.write("\n")
+    write_json_atomic(
+        path,
+        {
+            "bench": "shuffle",
+            "p": 8,
+            "engine": "hash",
+            "families": names,
+            "results": trajectory,
+        },
+    )
     return out

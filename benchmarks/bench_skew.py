@@ -20,10 +20,10 @@ they never clobber the committed full baseline (CI smoke runs just
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
+from benchmarks._io import write_json_atomic
 from repro.core.gym import GymConfig, gym
 from repro.core.queries import chain_ghd, chain_query, star_ghd, star_query
 from repro.data.synthetic import (
@@ -136,17 +136,14 @@ def run() -> list:
             )
             assert res["hybrid"][1].heavy_tuples > 0, name
     path = OUT_PATH if not only else PARTIAL_PATH
-    with open(path, "w") as f:
-        json.dump(
-            {
-                "bench": "skew",
-                "p": P,
-                "engines": list(ENGINES),
-                "families": names,
-                "results": trajectory,
-            },
-            f,
-            indent=2,
-        )
-        f.write("\n")
+    write_json_atomic(
+        path,
+        {
+            "bench": "skew",
+            "p": P,
+            "engines": list(ENGINES),
+            "families": names,
+            "results": trajectory,
+        },
+    )
     return out

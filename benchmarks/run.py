@@ -21,6 +21,7 @@ from . import (
     bench_lemmas,
     bench_lm,
     bench_optimizer,
+    bench_serve,
     bench_shuffle,
     bench_skew,
     bench_table1,
@@ -40,6 +41,7 @@ ALL = {
     "kernels": bench_kernels,
     "optimizer": bench_optimizer,
     "shuffle": bench_shuffle,
+    "serve": bench_serve,
     "skew": bench_skew,
     "lm": bench_lm,
 }

@@ -205,8 +205,13 @@ class CapsCache:
             for k, e in sorted(self._entries.items(), key=lambda kv: repr(kv[0]))
         ]
 
-    def load_json(self, data: List[List[Any]]) -> None:
-        self._entries = {
+    def load_json(self, data: List[List[Any]], merge: bool = False) -> None:
+        """Restore snapshot entries.  ``merge=True`` (the serving layer,
+        restoring one tenant into a cache SHARED by others) keeps any
+        live entry that already covers a restored signature — a restore
+        must never clobber what co-tenants have since measured and
+        confirmed; fresh signatures load as usual."""
+        loaded = {
             tuple(k): CacheEntry(
                 lhs=tuple(v["lhs"]),
                 rhs=tuple(v["rhs"]) if v["rhs"] is not None else None,
@@ -217,6 +222,11 @@ class CapsCache:
             )
             for k, v in data
         }
+        if not merge:
+            self._entries = loaded
+            return
+        for k, e in loaded.items():
+            self._entries.setdefault(k, e)
 
     def stats(self) -> Dict[str, int]:
         return {

@@ -90,6 +90,29 @@ class GymConfig:
     # mid-query.
     plan: str = "manual"
 
+    def __post_init__(self):
+        # registry-backed knobs fail HERE, naming the valid options —
+        # not rounds deep inside the executor with a KeyError
+        from ..relational.localops import LOCAL_BACKENDS
+        from .physical import ENGINES
+
+        if self.strategy not in ENGINES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; registered engines: "
+                f"{sorted(ENGINES)} (register_engine adds more)"
+            )
+        if self.wire_format not in ("dense", "packed"):
+            raise ValueError(
+                f"unknown wire_format {self.wire_format!r}; "
+                "valid: ['dense', 'packed']"
+            )
+        if self.local_backend not in LOCAL_BACKENDS:
+            raise ValueError(
+                f"unknown local_backend {self.local_backend!r}; registered "
+                f"backends: {sorted(LOCAL_BACKENDS)} "
+                "(register_local_backend adds more)"
+            )
+
 
 class GymDriver:
     """Resumable GYM execution: materialization + DYM on one SPMD backend."""
@@ -102,10 +125,15 @@ class GymDriver:
         spmd: SPMD,
         config: Optional[GymConfig] = None,
         plan=None,  # Optional[optimizer.Plan]: execute this plan directly
+        caps_cache=None,  # Optional[CapsCache]: SHARED across drivers
     ):
         self.query = query
         self.config = config or GymConfig()
         self.spmd = spmd
+        # a caller-owned CapsCache instance (the serving layer passes one
+        # cache to every tenant, so equal group signatures warm each
+        # other); None keeps the executor's own per-query cache
+        self._shared_caps_cache = caps_cache
         # dedup base relations once (relations are sets); the distinct row
         # counts double as the advisor's table statistics
         dedup_rows: Dict[str, np.ndarray] = {}
@@ -235,6 +263,13 @@ class GymDriver:
     def _make_executor(self) -> PhysicalExecutor:
         cfg = self.config
         wp = self._wire_policy if cfg.wire_format == "packed" else None
+        # a shared cache instance wins over the boolean knob (but an
+        # explicitly disabled cache stays disabled)
+        cc = (
+            self._shared_caps_cache
+            if self._shared_caps_cache is not None and cfg.caps_cache
+            else cfg.caps_cache
+        )
         if self.plan is not None:
             # config mirrors the plan by construction (to_config in
             # __init__); load() clears self.plan before rebuilding, so a
@@ -248,7 +283,7 @@ class GymDriver:
                 count_retries_comm=cfg.count_retries_comm,
                 calibrate=cfg.calibrate_shuffle,
                 skew_threshold=cfg.skew_threshold,
-                caps_cache=cfg.caps_cache,
+                caps_cache=cc,
                 prefetch=cfg.prefetch_measures,
                 wire_policy=wp,
             )
@@ -263,7 +298,7 @@ class GymDriver:
             calibrate=cfg.calibrate_shuffle,
             local_backend=cfg.local_backend,
             skew_threshold=cfg.skew_threshold,
-            caps_cache=cfg.caps_cache,
+            caps_cache=cc,
             prefetch=cfg.prefetch_measures,
             wire_policy=wp,
         )
@@ -353,6 +388,72 @@ class GymDriver:
             return False
         return True
 
+    def step_gen(self):
+        """Reentrant variant of ``step()`` for the serving layer
+        (``serve.join_server``): a generator that YIELDS each stage's
+        prepared ``GroupWork`` list and RECEIVES the matching
+        ``GroupResult`` list via ``send`` — the caller owns the dispatch,
+        so compatible groups from MANY drivers can run as one merged
+        dispatch.  Returns (``StopIteration.value``) True if more rounds
+        remain, mirroring ``step()``.
+
+        The materialization round runs inline (no yields): it is one-time
+        per query and engine-heterogeneous (grid multiway / hash cascade
+        paths), so there is nothing recurring to merge across requests —
+        a driver's FIRST ``step_gen`` drive may therefore finish without
+        yielding at all.  Everything data-dependent (seeds, retries,
+        capacity growth) stays inside, so an interleaved drive is
+        bit-identical to ``step()``."""
+        if self.done:
+            return False
+        if self.cursor < 0 or self.cursor >= len(self.schedule):
+            return self.step()
+        rnd = self.schedule[self.cursor]
+        gen = self.executor.round_steps(rnd, self.tables, self.acc, self.ledger)
+        try:
+            works = next(gen)
+            while True:
+                self._pending_works = works
+                results = yield works
+                self._pending_works = []
+                works = gen.send(results)
+        except StopIteration as stop:
+            self._pending_works = []
+            (
+                new_tab, new_acc, comm, padded, heavy, claimed, dispatches,
+                measure_dispatches, wire_bytes, useful_bytes,
+            ) = stop.value
+        self.tables = {**self.tables, **new_tab}
+        self.acc = {**self.acc, **new_acc}
+        nxt = self.cursor + 1
+        self.executor.prefetch_round(
+            self.schedule[nxt] if nxt < len(self.schedule) else None,
+            self.tables,
+            self.acc,
+        )
+        self.ledger.add_round(
+            rnd.phase,
+            [repr(o) for o in rnd.ops],
+            comm,
+            n_rounds=claimed,
+            dispatches=dispatches,
+            padded=padded,
+            heavy=heavy,
+            measure_dispatches=measure_dispatches,
+            payload_bytes=wire_bytes,
+            useful_bytes=useful_bytes,
+        )
+        self.cursor += 1
+        if self.cursor >= len(self.schedule):
+            self._finish()
+            return False
+        return True
+
+    def pending_groups(self):
+        """The ``GroupWork`` list an in-flight ``step_gen`` is currently
+        suspended on (empty when none) — what the server's bucketing sees."""
+        return list(getattr(self, "_pending_works", []) or [])
+
     def _finish(self) -> None:
         root = self.ghd.root
         out = self.tables[root]
@@ -439,7 +540,12 @@ class GymDriver:
         # timeline; the restored state must start clean
         self.executor._pending = None
         if "caps_cache" in meta and self.executor.caps_cache is not None:
-            self.executor.caps_cache.load_json(meta["caps_cache"])
+            # restoring into a SHARED cache (serving layer) must not wipe
+            # co-tenants' confirmed entries: merge, don't replace
+            self.executor.caps_cache.load_json(
+                meta["caps_cache"],
+                merge=self.executor.caps_cache is self._shared_caps_cache,
+            )
         self.caps = {int(k): v for k, v in meta["caps"].items()}
         led = Ledger()
         from ..relational.ledger import RoundRecord

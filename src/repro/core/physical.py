@@ -854,6 +854,124 @@ def lower_round(rnd: Round) -> Tuple[List[List[PhysOp]], List[Tuple[str, int, st
 
 
 # --------------------------------------------------------------------------
+# prepared group work: the executor <-> dispatcher interface
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class GroupWork:
+    """ONE prepared op group, ready to dispatch: operand tables resolved,
+    managed capacities pre-floored, calibration attached.  This is the
+    unit the round generator (``PhysicalExecutor.round_steps``) yields and
+    the unit the serving layer merges across requests — ``merge_key``
+    (``relational.batched.cross_request_key``) is the cross-request
+    bucketing key, None when the group must dispatch solo.
+
+    ``mpad``/``mbytes``: wire cells (and byte-true size) the group's count
+    pre-pass slices shipped — the owner charges them to its own round
+    alongside the payload stats (they are never merged; see
+    ``merge_measures``)."""
+
+    kind: str
+    ops: List[PhysOp]
+    lhs: List[DTable]
+    rhs: Optional[List[DTable]]
+    seeds: List[int]
+    cap: int
+    xcaps: Optional[GroupMeasure]
+    key: Optional[Tuple]  # caps-cache signature (None when not calibrating)
+    engine: Engine
+    mpad: int
+    mbytes: int
+    merge_key: Optional[Tuple]
+
+
+@dataclasses.dataclass
+class GroupResult:
+    """What dispatching one ``GroupWork`` produced: per-instance outputs
+    and stats (in the work's op order), the claimed BSP rounds, and the
+    SPMD dispatch deltas measured around the payload — incremental, so
+    accounting survives many executors interleaving on one ``SPMD``.
+    For a merged dispatch the shared deltas are charged to the FIRST
+    rider (the others ride free; the server ledger records the saving)."""
+
+    outs: List[DTable]
+    stats: List[Dict]
+    rounds: int
+    dispatches: int
+    measure_dispatches: int
+
+
+def _engine_payload(eng: Engine, kind, lhs, rhs, cap, seeds, xcaps):
+    if kind == "dedup":
+        return eng.dedup_many(lhs, cap, seeds, xcaps)
+    if kind == "semijoin":
+        return eng.semijoin_many(lhs, rhs, cap, seeds, xcaps)
+    if kind == "join":
+        return eng.join_many(lhs, rhs, cap, seeds, xcaps)
+    if kind == "intersect":
+        return eng.intersect_many(lhs, rhs, cap, seeds, xcaps)
+    raise ValueError(f"unknown physical op kind {kind}")
+
+
+def dispatch_work(w: GroupWork) -> GroupResult:
+    """Phase B for ONE group: the payload dispatch at the capacities its
+    measure resolved."""
+    spmd = w.engine.spmd
+    d0, md0 = spmd.dispatch_count, spmd.measure_dispatch_count
+    outs, stats, rounds = _engine_payload(
+        w.engine, w.kind, w.lhs, w.rhs, w.cap, w.seeds, w.xcaps
+    )
+    return GroupResult(
+        outs, stats, rounds,
+        spmd.dispatch_count - d0, spmd.measure_dispatch_count - md0,
+    )
+
+
+def dispatch_merged(works: Sequence[GroupWork]) -> List[GroupResult]:
+    """ONE fused payload dispatch for several same-``merge_key`` groups
+    (typically from different requests): operand lists concatenate on the
+    k axis of the ``dist_*_many`` operators, calibrations merge by
+    elementwise max (``merge_measures``), and the per-instance outputs /
+    stats de-interleave back to one ``GroupResult`` per rider.  Each
+    instance's rows depend only on its own data, seed, and the (equal by
+    key) statics, so every rider's outputs are bit-identical to a solo
+    dispatch of its group."""
+    if len(works) == 1:
+        return [dispatch_work(works[0])]
+    mk = works[0].merge_key
+    assert mk is not None and all(w.merge_key == mk for w in works), (
+        "dispatch_merged: all works must share a non-None merge_key"
+    )
+    eng = works[0].engine
+    spmd = eng.spmd
+    lhs = [t for w in works for t in w.lhs]
+    rhs = (
+        None
+        if works[0].rhs is None
+        else [t for w in works for t in w.rhs]
+    )
+    seeds = [s for w in works for s in w.seeds]
+    xcaps = B.merge_measures([w.xcaps for w in works])
+    d0, md0 = spmd.dispatch_count, spmd.measure_dispatch_count
+    outs, stats, rounds = _engine_payload(
+        eng, works[0].kind, lhs, rhs, works[0].cap, seeds, xcaps
+    )
+    dd = spmd.dispatch_count - d0
+    md = spmd.measure_dispatch_count - md0
+    results: List[GroupResult] = []
+    off = 0
+    for j, w in enumerate(works):
+        k = len(w.ops)
+        results.append(
+            GroupResult(
+                outs[off:off + k], stats[off:off + k], rounds,
+                dd if j == 0 else 0, md if j == 0 else 0,
+            )
+        )
+        off += k
+    return results
+
+
+# --------------------------------------------------------------------------
 # executor
 # --------------------------------------------------------------------------
 class PhysicalExecutor:
@@ -897,7 +1015,7 @@ class PhysicalExecutor:
         calibrate: bool = True,
         local_backend: str = "jnp",
         skew_threshold: Optional[float] = None,
-        caps_cache: bool = True,
+        caps_cache: "bool | CapsCache" = True,
         prefetch: bool = True,
         wire_policy: Optional[WirePolicy] = None,
     ):
@@ -919,8 +1037,17 @@ class PhysicalExecutor:
         # amortized calibration: cross-round capacity cache + the pending
         # prefetched measure of the next round (a ``B.RoundCounts`` whose
         # device futures were launched behind the previous round's
-        # payloads, consumed by the next ``execute_round``)
-        self.caps_cache = CapsCache() if (caps_cache and self.calibrate) else None
+        # payloads, consumed by the next ``execute_round``).  ``caps_cache``
+        # also accepts a CapsCache INSTANCE — the serving layer passes one
+        # shared cache across executors so tenants with equal group
+        # signatures warm each other (signature-keyed: different shapes
+        # can never cross-contaminate).
+        if isinstance(caps_cache, CapsCache):
+            self.caps_cache = caps_cache if self.calibrate else None
+        else:
+            self.caps_cache = (
+                CapsCache() if (caps_cache and self.calibrate) else None
+            )
         self.prefetch = bool(prefetch) and self.calibrate
         self._pending: Optional[Dict] = None
 
@@ -936,7 +1063,7 @@ class PhysicalExecutor:
         count_retries_comm: bool = True,
         calibrate: bool = True,
         skew_threshold: Optional[float] = None,
-        caps_cache: bool = True,
+        caps_cache: "bool | CapsCache" = True,
         prefetch: bool = True,
         wire_policy: Optional[WirePolicy] = None,
     ) -> "PhysicalExecutor":
@@ -1123,41 +1250,40 @@ class PhysicalExecutor:
                 )
         return measures, keys, orphan_pad, orphan_bytes
 
-    def _dispatch_group(self, ops_g: List[PhysOp], resolve, xcaps):
-        """Phase B: the group's payload dispatch at the capacities
-        ``_measure_stage`` resolved.  Returns (outputs, per-instance
-        stats, claimed rounds, measure_padded, measure_bytes) — the last
-        two being the wire cells (and byte-true size) the group's count
-        slices shipped, charged to the round alongside the payload."""
+    def prepare_group(
+        self, ops_g: List[PhysOp], resolve, xcaps, key
+    ) -> GroupWork:
+        """Bind one measured group to a dispatchable ``GroupWork``:
+        resolve the operand tables, pre-floor managed capacities the
+        measurement proves too small (the round that would have aborted
+        never runs short), and compute the cross-request ``merge_key``."""
         seeds = [op.seed for op in ops_g]
         lhs = [resolve(op.a) for op in ops_g]
         kind = ops_g[0].kind
         rhs = None if kind == "dedup" else [resolve(op.b) for op in ops_g]
         if xcaps is not None:
-            # pre-floor managed capacities the measurement proves too
-            # small: the round that would have aborted never runs short
             need = max(xcaps.out_recv or 0, xcaps.out_need or 0)
             if need:
                 for op in ops_g:
                     self.capman.floor(op.cap_nodes, need)
-        mpad = xcaps.padded if xcaps is not None else 0
-        mbytes = xcaps.wire_bytes if xcaps is not None else 0
         cap = self.capman.cap_for(ops_g[0].cap_nodes)
-        if kind == "dedup":
-            return (*self.engine.dedup_many(lhs, cap, seeds, xcaps), mpad, mbytes)
-        if kind == "semijoin":
-            return (
-                *self.engine.semijoin_many(lhs, rhs, cap, seeds, xcaps),
-                mpad, mbytes,
-            )
-        if kind == "join":
-            return (*self.engine.join_many(lhs, rhs, cap, seeds, xcaps), mpad, mbytes)
-        if kind == "intersect":
-            return (
-                *self.engine.intersect_many(lhs, rhs, cap, seeds, xcaps),
-                mpad, mbytes,
-            )
-        raise ValueError(f"unknown physical op kind {kind}")
+        return GroupWork(
+            kind=kind, ops=list(ops_g), lhs=lhs, rhs=rhs, seeds=seeds,
+            cap=cap, xcaps=xcaps, key=key, engine=self.engine,
+            mpad=xcaps.padded if xcaps is not None else 0,
+            mbytes=xcaps.wire_bytes if xcaps is not None else 0,
+            merge_key=B.cross_request_key(
+                kind, self.engine, cap, lhs, rhs, xcaps
+            ),
+        )
+
+    def _dispatch_group(self, ops_g: List[PhysOp], resolve, xcaps):
+        """Phase B for one group (legacy shape): prepare + dispatch.
+        Returns (outputs, per-instance stats, claimed rounds,
+        measure_padded, measure_bytes)."""
+        w = self.prepare_group(ops_g, resolve, xcaps, None)
+        res = dispatch_work(w)
+        return res.outs, res.stats, res.rounds, w.mpad, w.mbytes
 
     # -- one schedule round ------------------------------------------------
     def execute_round(
@@ -1170,13 +1296,47 @@ class PhysicalExecutor:
         Dict[int, DTable], Dict[int, DTable],
         int, int, int, int, int, int, int, int,
     ]:
-        """Run one logical round (with abort-retry).  Returns
+        """Run one logical round (with abort-retry) to completion: the
+        standalone driver of ``round_steps`` — every yielded group is
+        dispatched solo, immediately.  Returns
         (new_tables, new_acc, comm, padded, heavy, claimed_rounds,
         dispatches, measure_dispatches, payload_bytes, useful_bytes) —
         dispatches including any prefetched measure dispatch launched on
         this round's behalf, and the byte pair being what the wire
         actually shipped (dense or packed, pre-pass included) vs the
         dense-int32 bytes of the useful tuples inside it."""
+        gen = self.round_steps(rnd, tables, acc, ledger)
+        try:
+            works = next(gen)
+            while True:
+                works = gen.send([dispatch_work(w) for w in works])
+        except StopIteration as stop:
+            return stop.value
+
+    def round_steps(
+        self,
+        rnd: Round,
+        tables: Dict[int, DTable],
+        acc: Dict[int, DTable],
+        ledger: Ledger,
+    ):
+        """Reentrant round execution: a generator that YIELDS each stage's
+        prepared ``GroupWork`` list and RECEIVES the matching
+        ``GroupResult`` list (same order) via ``send``.  The caller owns
+        the dispatch — ``execute_round`` runs each group solo; the
+        serving layer (``serve.join_server``) collects works from MANY
+        concurrent queries and answers with merged dispatches
+        (``dispatch_merged``).  Return value (via ``StopIteration``) is
+        ``execute_round``'s tuple.
+
+        Everything data-dependent — seeds, retry decisions, capacity
+        growth, caps-cache fills — stays inside the generator, so a
+        round driven one-group-at-a-time is bit-identical to the fused
+        standalone path.  Dispatch accounting is incremental (measured
+        around the measure stage, carried per-result by the dispatcher,
+        and around the retry pre-size), never a round-level counter
+        delta: many executors interleaving on one ``SPMD`` each see only
+        their own dispatches."""
         stages, writes = lower_round(rnd)
         # slot liveness: tmp slots die after their last reading stage (the
         # written results live on); dropping them frees the device buffers
@@ -1188,15 +1348,13 @@ class PhysicalExecutor:
                     if nm is not None and nm.startswith("tmp:"):
                         last_use[nm] = i
         keep = {slot for _, _, slot in writes}
-        d0 = self.spmd.dispatch_count
-        md0 = self.spmd.measure_dispatch_count
         # the prefetched combined count pre-pass for this round (launched
         # behind the previous round's payloads); its dispatch deltas were
         # held back then and are charged to THIS round's accounting
         pending = self._pending
         self._pending = None
-        pend_disp = pending["dispatches"] if pending is not None else 0
-        pend_meas = pending["measure_dispatches"] if pending is not None else 0
+        disp_total = pending["dispatches"] if pending is not None else 0
+        meas_total = pending["measure_dispatches"] if pending is not None else 0
         attempt = 0
         comm_total = 0
         padded_total = 0
@@ -1238,20 +1396,33 @@ class PhysicalExecutor:
                 # the prefetched counts can only match attempt 1's stage 0
                 # (later stages read tmp slots; retries reseed)
                 use_pending = pending if (i == 0 and attempt == 1) else None
+                d0 = self.spmd.dispatch_count
+                md0 = self.spmd.measure_dispatch_count
                 measures, keys, orphan_pad, orphan_b = self._measure_stage(
                     groups, resolve, use_pending
                 )
+                disp_total += self.spmd.dispatch_count - d0
+                meas_total += self.spmd.measure_dispatch_count - md0
                 padded += orphan_pad
                 wireb += orphan_b
-                for ops_g, xcaps, key in zip(groups, measures, keys):
-                    outs, stats, rounds, mpad, mbytes = self._dispatch_group(
-                        ops_g, resolve, xcaps
-                    )
-                    padded += mpad
-                    wireb += mbytes
-                    stage_claimed = max(stage_claimed, rounds)
+                works = [
+                    self.prepare_group(ops_g, resolve, xcaps, key)
+                    for ops_g, xcaps, key in zip(groups, measures, keys)
+                ]
+                results = yield works
+                assert results is not None and len(results) == len(works), (
+                    "round_steps: send() one GroupResult per yielded GroupWork"
+                )
+                for w, res in zip(works, results):
+                    padded += w.mpad
+                    wireb += w.mbytes
+                    disp_total += res.dispatches
+                    meas_total += res.measure_dispatches
+                    stage_claimed = max(stage_claimed, res.rounds)
                     g_sent, g_drop = 0, False
-                    for op, out, st in zip(ops_g, outs, stats):
+                    for oi, (op, out, st) in enumerate(
+                        zip(w.ops, res.outs, res.stats)
+                    ):
                         slots[op.out] = out
                         comm += st["sent"]
                         padded += st.get("padded", 0)
@@ -1265,9 +1436,11 @@ class PhysicalExecutor:
                                 dropped_by_logical.get(op.logical, 0) + st["dropped"]
                             )
                             if op.kind == "join" and self.engine.exact_join_presize:
-                                blown_joins.append((op, resolve(op.a), resolve(op.b)))
-                    if self.caps_cache is not None and key is not None:
-                        f = fills.setdefault(key, [0, False])
+                                blown_joins.append(
+                                    (op, w.lhs[oi], w.rhs[oi])
+                                )
+                    if self.caps_cache is not None and w.key is not None:
+                        f = fills.setdefault(w.key, [0, False])
                         f[0] = max(f[0], g_sent)
                         f[1] = f[1] or g_drop
                 claimed += stage_claimed
@@ -1295,20 +1468,22 @@ class PhysicalExecutor:
             for j, d in dropped_by_logical.items():
                 lop = rnd.ops[j]
                 self.capman.grow((lop.target, *lop.args), d)
+            d0 = self.spmd.dispatch_count
+            md0 = self.spmd.measure_dispatch_count
             for op, a, b in blown_joins:
                 lop = rnd.ops[op.logical]
                 self.capman.floor(
                     (lop.target, *lop.args), self.capman.presize_join(a, b, op.seed)
                 )
+            disp_total += self.spmd.dispatch_count - d0
+            meas_total += self.spmd.measure_dispatch_count - md0
         new_tab: Dict[int, DTable] = {}
         new_acc: Dict[int, DTable] = {}
         for store, node, slot in writes:
             (new_tab if store == "tab" else new_acc)[node] = slots[slot]
         return (
             new_tab, new_acc, comm_total, padded_total, heavy_total,
-            max(1, claimed),
-            self.spmd.dispatch_count - d0 + pend_disp,
-            self.spmd.measure_dispatch_count - md0 + pend_meas,
+            max(1, claimed), disp_total, meas_total,
             bytes_total, ubytes_total,
         )
 

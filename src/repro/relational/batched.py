@@ -238,6 +238,94 @@ class GroupMeasure:
     swap_spread: bool = False
 
 
+# ------------------------------------------------- cross-request batching
+def cross_request_key(kind, engine, cap, lhs, rhs, xcaps) -> Optional[Tuple]:
+    """Cross-REQUEST bucketing key of one prepared op group — the serving
+    layer's merge key.  Groups from *different queries* with equal keys
+    can run as ONE stacked dispatch: the k axis of the ``dist_*_many``
+    operators spans requests instead of one query's op group, and the
+    uniformity contract above is exactly this key — engine strategy +
+    local backend, op kind, managed output capacity, per-side shard
+    shapes, and shared-key-column count (key positions and seeds already
+    ride as per-instance data, so they may differ freely).
+
+    The measured pow2 exchange caps are PART of the key: merging riders
+    with unequal calibrated caps would run every rider at the
+    elementwise max (sound, but the tighter riders ship pure padding),
+    turning the dispatch savings into wire cost.  Requiring equal
+    buckets makes a merge free by construction — identical hot queries
+    (the zipf serving head) always collide, heterogeneous stragglers
+    dispatch solo.
+
+    None = dispatch solo: packed wire formats are per-query (their bit
+    widths come from that query's base-relation value ranges, so a merged
+    group would re-encode every rider), and hybrid-routed payloads carry
+    per-instance heavy-destination flags whose spread/broadcast roles are
+    not mergeable across measures."""
+    if engine.wire_policy is not None:
+        return None
+    if xcaps is not None and xcaps.hybrid_routed:
+        return None
+    key: Tuple = (
+        engine.name, engine.local_backend, kind, int(cap),
+        lhs[0].cap, lhs[0].arity,
+    )
+    if xcaps is None:
+        key += (None,)
+    else:
+        key += (
+            xcaps.lhs, xcaps.rhs, xcaps.out_recv, xcaps.out_need,
+        )
+    if rhs is not None:
+        n_shared = sum(1 for x in lhs[0].schema if x in set(rhs[0].schema))
+        key += (rhs[0].cap, rhs[0].arity, n_shared)
+    return key
+
+
+def merge_measures(
+    ms: Sequence[Optional[GroupMeasure]],
+) -> Optional[GroupMeasure]:
+    """Elementwise-max merge of the measures of same-key groups for a
+    cross-request fused dispatch.  Wider capacities are always sound (an
+    instance merely ships more padding than its solo measure required —
+    rows, ``sent`` and drops are unaffected), so the merged dispatch runs
+    every rider at the max of the measured pow2 buckets.  Returns None
+    when ANY measure is missing — then the merged dispatch must run at
+    the group defaults, because a measured instance's tight caps say
+    nothing about an unmeasured rider's arrival.
+
+    The measures' own wire charges (``padded``/``wire_bytes``) are NOT
+    merged: each request already accounts for its pre-pass traffic in its
+    own ledger (``GroupWork.mpad``/``mbytes``)."""
+    if any(m is None for m in ms):
+        return None
+    assert not any(m.hybrid_routed for m in ms), "hybrid measures don't merge"
+    if len(ms) == 1:
+        return ms[0]
+
+    def side(sel) -> Optional[SideCaps]:
+        sides = [sel(m) for m in ms]
+        if any(s is None for s in sides):
+            return None
+        assert all(s.fmt is None for s in sides), "packed fmts don't merge"
+        return SideCaps(
+            max(s.c_out for s in sides), max(s.cap_recv for s in sides)
+        )
+
+    def opt_max(sel) -> Optional[int]:
+        vals = [sel(m) for m in ms if sel(m) is not None]
+        return max(vals) if vals else None
+
+    return GroupMeasure(
+        lhs=side(lambda m: m.lhs),
+        rhs=side(lambda m: m.rhs),
+        out_recv=opt_max(lambda m: m.out_recv),
+        out_need=opt_max(lambda m: m.out_need),
+        padded=0,
+        wire_bytes=0,
+    )
+
+
 def _take(data: jax.Array, cols: jax.Array) -> jax.Array:
     return jnp.take(data, cols, axis=1)
 

@@ -1,1 +1,2 @@
 from .decode import generate, generate_whisper, sample
+from .join_server import JoinServer, JoinTicket

@@ -2,8 +2,9 @@
 ``examples/gym_fault_tolerance.py`` have drifted silently across past
 refactors because CI never executed them.  Running them in-process (they
 end in asserts of their own) pins the public API surface they exercise —
-``gym()``, ``GymConfig``, ``GymDriver`` save/load, ``shares_join`` —
-against exactly the code paths the docs tell users to copy."""
+``gym()``, ``GymConfig``, ``GymDriver`` save/load, ``shares_join``,
+``JoinServer`` — against exactly the code paths the docs tell users to
+copy."""
 from __future__ import annotations
 
 import os
@@ -14,7 +15,9 @@ import pytest
 EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
 
 
-@pytest.mark.parametrize("script", ["quickstart.py", "gym_fault_tolerance.py"])
+@pytest.mark.parametrize(
+    "script", ["quickstart.py", "gym_fault_tolerance.py", "serve_joins.py"]
+)
 def test_example_runs_clean(script, capsys):
     path = os.path.abspath(os.path.join(EXAMPLES, script))
     runpy.run_path(path, run_name="__main__")

@@ -1,0 +1,257 @@
+"""Multi-tenant join serving (``serve.join_server``).
+
+Pins the serving layer's contract:
+
+- every served query's rows and ``comm_tuples`` are bit-identical to a
+  standalone ``gym()`` run — cross-request fusion changes how work packs
+  into SPMD programs, never what each query computes or ships;
+- the ``ServerLedger`` aggregate is exactly the per-tenant ledger sum,
+  and the fusion counters show real dispatch savings on a homogeneous
+  mix (``fused_riders > fused_dispatches``);
+- admission control: at most ``max_in_flight`` queries step at once,
+  equal priorities admit FIFO, and aging lets a long-waiting
+  low-priority ticket outrank an urgent newcomer (no starvation);
+- the shared ``CapsCache``: tenants with equal group signatures warm
+  each other, different signatures never cross-contaminate, and
+  interleaved ``step()`` sequences stay bit-identical to isolated runs;
+- ``GymConfig`` rejects unknown registry knobs at construction with an
+  actionable message naming the valid options.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.caps_cache import CapsCache
+from repro.core.gym import GymConfig, GymDriver, gym
+from repro.core.queries import chain_ghd, chain_query, star_ghd, star_query
+from repro.data.synthetic import chain_data_sparse, star_data_sparse
+from repro.relational.spmd import SPMD
+from repro.serve.join_server import JoinServer
+
+P = 4
+
+
+def star_case():
+    return (
+        star_query(4),
+        star_ghd(4),
+        star_data_sparse(4, domain=32, hub_rows=64, spoke_extra=16, seed=7),
+    )
+
+
+def chain_case():
+    return (
+        chain_query(4),
+        chain_ghd(4),
+        chain_data_sparse(4, domain=64, ident=16, extra=48, seed=9),
+    )
+
+
+def rowset(rows) -> set:
+    return {tuple(r) for r in np.asarray(rows)}
+
+
+# ------------------------------------------------------------- parity
+def test_served_queries_bit_identical_to_standalone():
+    spmd = SPMD(P)
+    sq, sg, sdata = star_case()
+    cq, cg, cdata = chain_case()
+    srv = JoinServer(spmd, max_in_flight=4)
+    t1 = srv.submit("alice", sq, sg, sdata, GymConfig(seed=3))
+    t2 = srv.submit("bob", sq, sg, sdata, GymConfig(seed=3))
+    t3 = srv.submit("carol", cq, cg, cdata, GymConfig(seed=3))
+    led = srv.drain()
+    assert t1.done and t2.done and t3.done
+
+    rs, _, ls = gym(sq, sdata, ghd=sg, spmd=spmd, config=GymConfig(seed=3))
+    rc, _, lc = gym(cq, cdata, ghd=cg, spmd=spmd, config=GymConfig(seed=3))
+    assert rowset(t1.rows()) == rowset(rs)
+    assert rowset(t2.rows()) == rowset(rs)
+    assert rowset(t3.rows()) == rowset(rc)
+    assert t1.ledger.comm_tuples == ls.comm_tuples
+    assert t2.ledger.comm_tuples == ls.comm_tuples
+    assert t3.ledger.comm_tuples == lc.comm_tuples
+    assert led.retries == 0
+
+    # cross-request fusion actually happened on the homogeneous pair
+    assert led.fused_dispatches > 0
+    assert led.fused_riders > led.fused_dispatches
+    assert led.dispatches_saved > 0
+
+
+def test_server_aggregate_is_tenant_sum():
+    spmd = SPMD(P)
+    sq, sg, sdata = star_case()
+    cq, cg, cdata = chain_case()
+    srv = JoinServer(spmd, max_in_flight=3)
+    srv.submit("a", sq, sg, sdata, GymConfig(seed=1))
+    srv.submit("a", cq, cg, cdata, GymConfig(seed=1))
+    srv.submit("b", sq, sg, sdata, GymConfig(seed=1))
+    led = srv.drain()
+    tenants = [l for leds in led.tenants.values() for l in leds]
+    assert led.queries == 3 and len(tenants) == 3
+    assert led.comm_tuples == sum(l.comm_tuples for l in tenants)
+    assert led.padded_slots == sum(l.padded_slots for l in tenants)
+    assert led.payload_bytes == sum(l.payload_bytes for l in tenants)
+    assert led.measured_dispatches == sum(l.measured_dispatches for l in tenants)
+    ts = led.tenant_summary("a")
+    assert ts["queries"] == 2
+    s = led.summary()
+    assert s["queries"] == 3 and set(s["tenants"]) == {"a", "b"}
+
+
+# -------------------------------------------------- admission control
+def test_max_in_flight_and_fifo_admission():
+    spmd = SPMD(P)
+    sq, sg, sdata = star_case()
+    srv = JoinServer(spmd, max_in_flight=1)
+    ts = [
+        srv.submit(f"t{i}", sq, sg, sdata, GymConfig(seed=3))
+        for i in range(3)
+    ]
+    while srv.step():
+        assert srv.in_flight <= 1
+    # equal priorities: admitted (and finished) in arrival order
+    admits = [t.admit_tick for t in ts]
+    assert admits == sorted(admits) and len(set(admits)) == 3
+    finishes = [t.finish_tick for t in ts]
+    assert finishes == sorted(finishes) and len(set(finishes)) == 3
+    for t in ts:
+        assert t.latency_ticks >= t.wait_ticks >= 0
+
+
+def test_priority_and_aging():
+    spmd = SPMD(P)
+    sq, sg, sdata = star_case()
+    # urgent (lower value) newcomer beats a same-tick normal submission
+    srv = JoinServer(spmd, max_in_flight=1, aging=1.0)
+    normal = srv.submit("n", sq, sg, sdata, GymConfig(seed=3))
+    urgent = srv.submit("u", sq, sg, sdata, GymConfig(seed=3), priority=-5.0)
+    srv.drain()
+    assert urgent.admit_tick < normal.admit_tick
+
+    # aging: a low-priority ticket that has waited long enough outranks a
+    # fresh normal arrival — effective = priority - aging * wait_ticks
+    srv2 = JoinServer(spmd, max_in_flight=1, aging=1.0)
+    straggler = srv2.submit("s", sq, sg, sdata, GymConfig(seed=3), priority=10.0)
+    srv2.tick += 20  # the straggler has now waited 20 ticks
+    fresh = srv2.submit("f", sq, sg, sdata, GymConfig(seed=3), priority=0.0)
+    srv2.drain()
+    assert straggler.admit_tick < fresh.admit_tick
+
+
+def test_pending_groups_exposes_mergeable_buckets():
+    spmd = SPMD(P)
+    sq, sg, sdata = star_case()
+    srv = JoinServer(spmd, max_in_flight=2)
+    srv.submit("a", sq, sg, sdata, GymConfig(seed=3))
+    srv.submit("b", sq, sg, sdata, GymConfig(seed=3))
+    # step past materialization until both tickets suspend on round work
+    for _ in range(20):
+        if any(len(ws) > 1 for ws in srv.pending_groups().values()):
+            break
+        if not srv.step():
+            break
+    buckets = srv.pending_groups()
+    assert any(
+        key is not None and len(ws) > 1 for key, ws in buckets.items()
+    ), "identical concurrent queries must expose a >1-rider merge bucket"
+    srv.drain()
+
+
+# ------------------------------------------------- shared caps cache
+def test_shared_cache_warms_across_drivers():
+    spmd = SPMD(P)
+    sq, sg, sdata = star_case()
+    shared = CapsCache()
+    d1 = GymDriver(sq, sg, sdata, spmd, GymConfig(seed=3), caps_cache=shared)
+    d1.run()
+    h1 = shared.hits
+    d2 = GymDriver(sq, sg, sdata, spmd, GymConfig(seed=3), caps_cache=shared)
+    out2 = d2.run()
+    assert d1.executor.caps_cache is shared and d2.executor.caps_cache is shared
+    # the second driver hits signatures the first confirmed
+    assert shared.hits > h1
+    # ... and computes exactly the standalone result
+    solo = GymDriver(sq, sg, sdata, spmd, GymConfig(seed=3))
+    out_solo = solo.run()
+    assert rowset(out2.to_numpy()) == rowset(out_solo.to_numpy())
+    assert d2.ledger.comm_tuples == solo.ledger.comm_tuples
+
+
+def test_shared_cache_no_cross_contamination():
+    spmd = SPMD(P)
+    sq, sg, sdata = star_case()
+    cq, cg, cdata = chain_case()
+    shared = CapsCache()
+    ds = GymDriver(sq, sg, sdata, spmd, GymConfig(seed=3), caps_cache=shared)
+    out_s = ds.run()
+    dc = GymDriver(cq, cg, cdata, spmd, GymConfig(seed=3), caps_cache=shared)
+    out_c = dc.run()
+    solo_s = GymDriver(sq, sg, sdata, spmd, GymConfig(seed=3))
+    solo_c = GymDriver(cq, cg, cdata, spmd, GymConfig(seed=3))
+    assert rowset(out_s.to_numpy()) == rowset(solo_s.run().to_numpy())
+    assert rowset(out_c.to_numpy()) == rowset(solo_c.run().to_numpy())
+    assert ds.ledger.comm_tuples == solo_s.ledger.comm_tuples
+    assert dc.ledger.comm_tuples == solo_c.ledger.comm_tuples
+    assert ds.ledger.retries == 0 and dc.ledger.retries == 0
+
+
+def test_interleaved_steps_bit_identical_to_isolated():
+    spmd = SPMD(P)
+    sq, sg, sdata = star_case()
+    cq, cg, cdata = chain_case()
+    shared = CapsCache()
+    a = GymDriver(sq, sg, sdata, spmd, GymConfig(seed=3), caps_cache=shared)
+    b = GymDriver(cq, cg, cdata, spmd, GymConfig(seed=3), caps_cache=shared)
+    more_a, more_b = True, True
+    while more_a or more_b:  # strict alternation
+        if more_a:
+            more_a = a.step()
+        if more_b:
+            more_b = b.step()
+    iso_a = GymDriver(sq, sg, sdata, spmd, GymConfig(seed=3))
+    iso_b = GymDriver(cq, cg, cdata, spmd, GymConfig(seed=3))
+    ra, rb = iso_a.run(), iso_b.run()
+    assert rowset(a.result.to_numpy()) == rowset(ra.to_numpy())
+    assert rowset(b.result.to_numpy()) == rowset(rb.to_numpy())
+    assert a.ledger.comm_tuples == iso_a.ledger.comm_tuples
+    assert b.ledger.comm_tuples == iso_b.ledger.comm_tuples
+
+
+def test_caps_cache_merge_load_keeps_live_entries():
+    c1 = CapsCache()
+    from repro.relational.batched import GroupMeasure, SideCaps
+
+    def gm(c_out, cap_recv):
+        return GroupMeasure(lhs=SideCaps(c_out, cap_recv))
+
+    c1.store(("shared-sig",), gm(8, 16))
+    c1.store(("shared-sig",), gm(8, 16))  # confirm
+    snap = CapsCache()
+    snap.store(("shared-sig",), gm(2, 2))
+    snap.store(("other-sig",), gm(4, 4))
+    # merge: the live confirmed entry survives, fresh signatures load
+    c1.load_json(snap.to_json(), merge=True)
+    assert c1.entry(("shared-sig",)).lhs == (8, 16)
+    assert c1.entry(("other-sig",)) is not None
+    # replace (default): the snapshot wins wholesale
+    c1.load_json(snap.to_json())
+    assert c1.entry(("shared-sig",)).lhs == (2, 2)
+
+
+# ------------------------------------------------- config validation
+def test_gymconfig_rejects_unknown_strategy():
+    with pytest.raises(ValueError, match=r"unknown strategy.*'grid'"):
+        GymConfig(strategy="quantum")
+
+
+def test_gymconfig_rejects_unknown_wire_format():
+    with pytest.raises(ValueError, match=r"unknown wire_format.*dense"):
+        GymConfig(wire_format="zipped")
+
+
+def test_gymconfig_rejects_unknown_local_backend():
+    with pytest.raises(ValueError, match=r"unknown local_backend.*'jnp'"):
+        GymConfig(local_backend="cuda")
