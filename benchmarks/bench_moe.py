@@ -1,0 +1,160 @@
+"""MoE dispatch routes on a zipf-hot expert mix: the dense Switch-style
+capacity scatter vs the calibrated routed-exchange path (PR 10).
+
+Workload: tokens are noisy copies of per-expert prototype directions,
+with prototype popularity zipf-distributed — the skewed
+popular-expert-dominates traffic a real MoE sees, and exactly the
+heavy-hitter shape the join engines' skew machinery handles.  On this
+mix the dense scatter (capacity factor 1.25) drops over-capacity tokens
+SILENTLY; the calibrated route measures per-expert counts, flags hot
+experts into the heavy split, and provably drops nothing.
+
+Reported per route: step wall time (min-of-N on a jitted forward),
+dropped (token, choice) pairs, and the byte-true payload/padded-slot
+accounting (``dense_scatter_bytes`` vs ``calibrated_dispatch_bytes`` —
+the same ledger formulas both customers share).
+
+Acceptance asserted here:
+- numerical parity dense == calibrated on a no-drop input (capacity
+  factor ``e``), atol 2e-5;
+- on the zipf-hot mix: dense drops > 0, calibrated drops == 0;
+- exact conservation: routed pairs == t*k on the calibrated route.
+
+``BENCH_MOE_SMOKE=1`` (the CI lane) shrinks the batch and rep count and
+writes ``BENCH_moe.partial.json`` so it never clobbers the committed
+full baseline ``BENCH_moe.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._io import write_json_atomic
+from repro.configs import CONFIGS, reduced_config
+from repro.models.common import rms_norm
+from repro.models.mlp import init_moe, moe_forward_stats
+from repro.models.moe_routing import (
+    apply_plan,
+    calibrate_moe,
+    calibrated_dispatch_bytes,
+    dense_scatter_bytes,
+    record_dense_round,
+    record_moe_round,
+)
+from repro.relational import Ledger
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_moe.json")
+PARTIAL_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_moe.partial.json"
+)
+
+
+def zipf_hot_batch(cfg, b, s, *, zs: float = 1.5, seed: int = 0):
+    """(b, s, d) tokens whose router traffic is zipf-skewed: each token
+    is a noisy copy of one of ``e`` prototype directions, prototypes
+    drawn ~ 1/rank^zs — so one expert's arrivals dominate."""
+    e, d = cfg.n_experts, cfg.d_model
+    rng = np.random.default_rng(seed)
+    protos = rng.standard_normal((e, d)).astype(np.float32) * 2.0
+    w = np.array([1.0 / (r + 1) ** zs for r in range(e)])
+    pick = rng.choice(e, size=b * s, p=w / w.sum())
+    x = protos[pick] + 0.05 * rng.standard_normal((b * s, d)).astype(np.float32)
+    return jnp.asarray(x.reshape(b, s, d), jnp.float32)
+
+
+def _timed(fn, *args, reps: int):
+    fn(*args)[0].block_until_ready()  # compile
+    best = None
+    for _ in range(reps):
+        t0 = time.time()
+        fn(*args)[0].block_until_ready()
+        dt = time.time() - t0
+        best = dt if best is None else min(best, dt)
+    return best
+
+
+def run() -> list:
+    smoke = bool(os.environ.get("BENCH_MOE_SMOKE"))
+    b, s = (2, 32) if smoke else (8, 128)
+    reps = 2 if smoke else 5
+
+    cfg = reduced_config(CONFIGS["kimi-k2-1t-a32b"])  # e=4, top-2, f32
+    t, d = b * s, cfg.d_model
+    p = init_moe(jax.random.PRNGKey(0), cfg)
+    x = zipf_hot_batch(cfg, b, s)
+    xf = rms_norm(x, p["ln"], cfg.norm_eps).reshape(t, d)
+
+    # ---- parity gate on a no-drop input (capacity factor e: dense can't
+    # drop, so the two routes must agree numerically)
+    ucfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    ux = jax.random.normal(jax.random.PRNGKey(1), (b, s, d), jnp.float32)
+    uxf = rms_norm(ux, p["ln"], ucfg.norm_eps).reshape(t, d)
+    uplan, _ = calibrate_moe(p, uxf, ucfg)
+    yd, sd = moe_forward_stats(p, ux, ucfg)
+    yc, sc = moe_forward_stats(p, ux, apply_plan(ucfg, uplan))
+    assert int(sd["dropped"]) == 0 and int(sc["dropped"]) == 0
+    np.testing.assert_allclose(
+        np.asarray(yd), np.asarray(yc), atol=2e-5, rtol=2e-5
+    )
+
+    # ---- the zipf-hot mix: dense (cf=1.25) vs calibrated (measured)
+    plan, info = calibrate_moe(p, xf, cfg, threshold=1.5)
+    ccfg = apply_plan(cfg, plan)
+
+    dense_fn = jax.jit(lambda p, x: moe_forward_stats(p, x, cfg))
+    calib_fn = jax.jit(lambda p, x: moe_forward_stats(p, x, ccfg))
+    dense_secs = _timed(dense_fn, p, x, reps=reps)
+    calib_secs = _timed(calib_fn, p, x, reps=reps)
+    _, sdn = dense_fn(p, x)
+    _, scl = calib_fn(p, x)
+    sdn = {k: int(v) for k, v in sdn.items()}
+    scl = {k: int(v) for k, v in scl.items()}
+
+    # acceptance: the dense route drops on this mix, the calibrated route
+    # does not — and conservation is exact
+    assert sdn["dropped"] > 0, sdn
+    assert scl["dropped"] == 0, scl
+    assert scl["routed"] == t * cfg.topk, scl
+
+    # byte-true accounting, both routes in one ledger
+    led = Ledger()
+    record_dense_round(led, sdn, cfg=cfg, t=t, d=d, note="zipf-hot")
+    record_moe_round(led, scl, plan=plan, d=d, note="zipf-hot")
+    dense_pb, dense_pad = dense_scatter_bytes(cfg, t, d)
+    calib_pb, calib_pad = calibrated_dispatch_bytes(plan, d)
+
+    rec = dict(
+        bench="moe",
+        experts=cfg.n_experts,
+        topk=cfg.topk,
+        d_model=d,
+        tokens=t,
+        zipf_s=1.5,
+        arrivals=[int(a) for a in info["arrivals"]],
+        heavy_experts=list(plan.heavy),
+        plan=dict(
+            tpp=plan.tpp, cap_send=plan.cap_send, cap_recv=plan.cap_recv
+        ),
+        dense_secs=round(dense_secs, 5),
+        calibrated_secs=round(calib_secs, 5),
+        dense_dropped=sdn["dropped"],
+        calibrated_dropped=scl["dropped"],
+        routed_pairs=scl["routed"],
+        heavy_routed=scl["heavy"],
+        dense_payload_bytes=dense_pb,
+        calibrated_payload_bytes=calib_pb,
+        dense_padded_slots=dense_pad,
+        calibrated_padded_slots=calib_pad,
+        ledger_dropped=led.dropped_tuples,
+        ledger_heavy_dests=led.heavy_dests,
+    )
+    write_json_atomic(
+        OUT_PATH if not smoke else PARTIAL_PATH,
+        {"bench": "moe", "results": [rec]},
+    )
+    return [rec]

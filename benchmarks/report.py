@@ -55,6 +55,17 @@ PREDICTED_COLUMNS = [
      "repro.core.costs.shuffle_pad_factor(wire_gain=...) +"
      " repro.relational.wire.wire_gain",
      "pad factor deflated by the packed format's mean row compression"),
+    ("moe", "dense_dropped / calibrated_dropped",
+     "repro.models.mlp.moe_forward_stats +"
+     " repro.models.moe_routing.calibrate_moe",
+     "expert dispatch as a skewed exchange: measured SideCaps-style"
+     " capacities + Lemma-8 heavy split make drops exactly zero where"
+     " the Switch-style capacity factor silently loses tokens"),
+    ("moe", "dense_payload_bytes / calibrated_payload_bytes",
+     "repro.models.moe_routing.dense_scatter_bytes /"
+     " .calibrated_dispatch_bytes",
+     "the same dense-cell byte formula (wire.dense_wire_bytes) priced"
+     " over both dispatch routes — one ledger vocabulary, two customers"),
 ]
 
 

@@ -20,6 +20,7 @@ from . import (
     bench_kernels,
     bench_lemmas,
     bench_lm,
+    bench_moe,
     bench_optimizer,
     bench_serve,
     bench_shuffle,
@@ -44,6 +45,7 @@ ALL = {
     "serve": bench_serve,
     "skew": bench_skew,
     "lm": bench_lm,
+    "moe": bench_moe,
 }
 
 

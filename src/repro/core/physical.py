@@ -64,6 +64,7 @@ from ..relational import ops as R
 from ..relational.batched import GroupMeasure
 from ..relational.ledger import Ledger
 from .caps_cache import CapsCache
+from ..relational.routed import RoutePolicy
 from ..relational.shuffle import pow2
 from ..relational.skew import DEFAULT_SKEW_THRESHOLD
 from ..relational.spmd import SPMD
@@ -141,61 +142,42 @@ class Engine:
     ):
         self.spmd = spmd
         self.local_backend = local_backend
-        self.skew_threshold = (
-            DEFAULT_SKEW_THRESHOLD if skew_threshold is None else skew_threshold
-        )
-        # packed wire format policy (None = dense exchanges).  Derived by
+        # the extracted routing policy (relational.routed): wire encoding
+        # + heavy-hitter sensitivity, shared by every exchange of the
+        # query.  The wire policy (None = dense exchanges) is derived by
         # the driver from the base relations' value ranges, so any format
         # built from it is sound for every intermediate of the query.
-        self.wire_policy = wire_policy
-
-    # -- packed wire formats -----------------------------------------------
-    def _fmt_for(self, schemas) -> Optional[WireFormat]:
-        """Group-uniform packed format of one exchange side: the widest-
-        per-column union over the group's instances (wider is sound)."""
-        if self.wire_policy is None:
-            return None
-        return WireFormat.union(
-            [self.wire_policy.format_for(s) for s in schemas]
+        self.route = RoutePolicy(
+            wire_policy=wire_policy,
+            skew_threshold=(
+                DEFAULT_SKEW_THRESHOLD
+                if skew_threshold is None
+                else skew_threshold
+            ),
         )
 
+    @property
+    def skew_threshold(self) -> float:
+        return self.route.skew_threshold
+
+    @property
+    def wire_policy(self) -> Optional[WirePolicy]:
+        return self.route.wire_policy
+
+    # -- packed wire formats (delegates to the routing policy) --------------
+    def _fmt_for(self, schemas) -> Optional[WireFormat]:
+        return self.route.fmt_for(schemas)
+
     def _pair_fmts(self, lhs, rhs, xcaps, rhs_keys_only: bool = False):
-        """Formats of a two-sided exchange group, recorded per-exchange
-        in the measurement's ``SideCaps``.  ``rhs_keys_only``: the rhs
-        ships its deduplicated shared-key projection (semijoins), so its
-        format covers the key columns only.  Returns (fmts, xcaps)."""
-        if self.wire_policy is None:
-            return None, xcaps
-        fmt_l = self._fmt_for([t.schema for t in lhs])
-        if rhs_keys_only:
-            rschemas = [
-                tuple(x for x in l.schema if x in set(r.schema))
-                for l, r in zip(lhs, rhs)
-            ]
-        else:
-            rschemas = [r.schema for r in rhs]
-        fmt_r = self._fmt_for(rschemas)
-        if xcaps is not None:
-            xcaps = dataclasses.replace(
-                xcaps,
-                lhs=dataclasses.replace(xcaps.lhs, fmt=fmt_l),
-                rhs=None
-                if xcaps.rhs is None
-                else dataclasses.replace(xcaps.rhs, fmt=fmt_r),
-            )
-        return (fmt_l, fmt_r), xcaps
+        return self.route.pair_fmts(
+            [t.schema for t in lhs],
+            [t.schema for t in rhs],
+            xcaps,
+            rhs_keys_only=rhs_keys_only,
+        )
 
     def _single_fmt(self, ts, xcaps):
-        """Format of a one-sided exchange group (dedup), recorded in the
-        measurement's ``SideCaps``.  Returns (fmt, xcaps)."""
-        if self.wire_policy is None:
-            return None, xcaps
-        fmt = self._fmt_for([t.schema for t in ts])
-        if xcaps is not None:
-            xcaps = dataclasses.replace(
-                xcaps, lhs=dataclasses.replace(xcaps.lhs, fmt=fmt)
-            )
-        return fmt, xcaps
+        return self.route.single_fmt([t.schema for t in ts], xcaps)
 
     # -- calibration pre-pass ----------------------------------------------
     def measure_group(

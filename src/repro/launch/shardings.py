@@ -41,6 +41,47 @@ def _fit(mesh: Mesh, dim: int, *candidates):
     return None
 
 
+def abstract_mesh_axes():
+    """The abstract mesh a jit trace is running under (None outside one)
+    plus its axis-name set — mesh-less CPU tests get ``(None, set())`` so
+    best-effort constraints degrade to no-ops."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return None, set()
+        return mesh, set(mesh.axis_names)
+    except Exception:  # noqa: BLE001
+        return None, set()
+
+
+def constrain(x: jax.Array, *spec):
+    """Best-effort ``with_sharding_constraint``: applies only when tracing
+    under a mesh whose axes cover the named ones and only on dims the
+    axis size divides — the activation-side sibling of ``_fit``'s
+    divisibility-checked parameter placement, shared by the MoE dispatch
+    paths in ``models.mlp``/``models.moe_routing``."""
+    mesh, names = abstract_mesh_axes()
+    if not names:
+        return x
+
+    def ok(s, dim):
+        if s is None:
+            return None
+        if isinstance(s, tuple):
+            sub = tuple(a for a in s if a in names)
+            if not sub:
+                return None
+            return sub if dim % _axsize(mesh, sub) == 0 else None
+        if s not in names:
+            return None
+        return s if dim % mesh.shape[s] == 0 else None
+
+    fixed = tuple(ok(s, d) for s, d in zip(spec, x.shape))
+    if all(s is None for s in fixed):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
 def _leaf_name(path) -> str:
     last = path[-1]
     return str(getattr(last, "key", getattr(last, "idx", last)))

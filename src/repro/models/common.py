@@ -43,6 +43,11 @@ class ArchConfig:
     moe_d_ff: int = 0  # per-expert hidden dim (kimi: 2048)
     n_shared_experts: int = 0
     capacity_factor: float = 1.25
+    # MoE dispatch route: "dense" (Switch-style capacity scatter) or
+    # "calibrated" (routed_all_to_all with a measured MoEPlan).  The plan
+    # must be frozen/hashable — it rides this static config into jit.
+    moe_route: str = "dense"
+    moe_plan: Optional[Any] = None
     # SSM / xLSTM
     ssm_state: int = 0
     ssm_heads: int = 0

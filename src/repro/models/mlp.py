@@ -1,29 +1,30 @@
-"""Gated MLP (SwiGLU) and Mixture-of-Experts feed-forward layers."""
+"""Gated MLP (SwiGLU) and Mixture-of-Experts feed-forward layers.
+
+The MoE dispatch has two routes, selected by ``cfg.moe_route``:
+
+- ``"dense"`` (default): the Switch-style capacity scatter into
+  ``(e*cap+1, d)`` slots — over-capacity (token, expert) pairs silently
+  fall through to the residual;
+- ``"calibrated"``: the routed-exchange path (``models.moe_routing``) —
+  the same count-calibrated, heavy-hitter-aware ``routed_all_to_all``
+  primitive the join engines run on, with measured per-expert capacities
+  and EXPLICIT drop accounting (zero when the measure proves capacity
+  sufficient).
+"""
 from __future__ import annotations
 
 from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from ..launch.shardings import abstract_mesh_axes, constrain
 from .common import ArchConfig, init_norm, rms_norm, scaled_init
-
-
-def _mesh_axes():
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or not mesh.axis_names:
-            return None, set()
-        return mesh, set(mesh.axis_names)
-    except Exception:  # noqa: BLE001
-        return None, set()
+from .moe_routing import calibrated_dispatch, router_pairs
 
 
 def _constrain(x: jax.Array, *spec):
-    """Best-effort sharding constraint: applies only when tracing under a
-    mesh whose axes cover the named ones (CPU tests trace mesh-less) and
-    only on dims the axis size divides.
+    """MoE-gated wrapper over ``launch.shardings.constrain``.
 
     [Perf iteration B] When experts cannot be expert-parallel (grok-1: 8
     experts vs a 16-way 'model' axis) XLA replicates the MoE scatter/gather
@@ -37,29 +38,7 @@ def _constrain(x: jax.Array, *spec):
 
     if os.environ.get("REPRO_MOE_CONSTRAIN", "1") == "0":
         return x
-    mesh, names = _mesh_axes()
-    if not names:
-        return x
-
-    def ok(s, dim):
-        if s is None:
-            return None
-        if isinstance(s, tuple):
-            sub = tuple(a for a in s if a in names)
-            if not sub:
-                return None
-            size = 1
-            for a in sub:
-                size *= mesh.shape[a]
-            return sub if dim % size == 0 else None
-        if s not in names:
-            return None
-        return s if dim % mesh.shape[s] == 0 else None
-
-    fixed = tuple(ok(s, d) for s, d in zip(spec, x.shape))
-    if all(s is None for s in fixed):
-        return x
-    return jax.lax.with_sharding_constraint(x, P(*fixed))
+    return constrain(x, *spec)
 
 
 FSDP = ("pod", "data")
@@ -103,27 +82,16 @@ def init_moe(rng, cfg: ArchConfig) -> Dict:
     return p
 
 
-def moe_forward(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
-    """Top-k capacity-based dispatch: compiled FLOPs scale with *active*
-    params (E x C x d x f with C ~ T*topk/E), the property the kimi-k2
-    roofline depends on.  Dropped-over-capacity tokens pass through the
-    residual (standard Switch-style behavior)."""
-    b, s, d = x.shape
-    t = b * s
+def _dense_dispatch(
+    p: Dict, xf: jax.Array, cfg: ArchConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Switch-style capacity scatter.  Over-capacity pairs fall through to
+    the residual; the drop is SILENT in the output but counted in stats."""
+    t, d = xf.shape
     e, k = cfg.n_experts, cfg.topk
     cap = max(1, int(cfg.capacity_factor * t * k / e))
 
-    xin = rms_norm(x, p["ln"], cfg.norm_eps)
-    xf = xin.reshape(t, d)
-    logits = (xf.astype(jnp.float32) @ p["router"])  # (t, e)
-    gates = jax.nn.softmax(logits, axis=-1)
-    topw, tope = jax.lax.top_k(gates, k)  # (t, k)
-    topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
-
-    # flatten (token, choice) pairs and rank them per expert for capacity
-    flat_e = tope.reshape(-1)  # (t*k,)
-    flat_w = topw.reshape(-1)
-    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_e, flat_w, flat_tok = router_pairs(p, xf, cfg)
     # position of each pair within its expert (by arrival order)
     onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (t*k, e)
     pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # rank per expert
@@ -136,7 +104,7 @@ def moe_forward(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     # vs 16-way 'model') run the scatter with the FEATURE dim sharded on
     # 'model' (indices replicated per shard -> fully local scatter) so XLA
     # stops replicating + all-reducing the dispatch buffers.
-    mesh, names = _mesh_axes()
+    mesh, names = abstract_mesh_axes()
     ep = "model" in names and e % mesh.shape["model"] == 0
 
     def C(arr, *spec):
@@ -160,12 +128,45 @@ def moe_forward(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     gathered = out_e.reshape(e * cap, d)
     gathered = jnp.concatenate([gathered, jnp.zeros((1, d), gathered.dtype)], 0)
     per_pair = gathered[slot] * flat_w[:, None].astype(gathered.dtype)
-    combined = jnp.zeros((t, d), x.dtype).at[flat_tok].add(per_pair.astype(x.dtype))
+    combined = jnp.zeros((t, d), xf.dtype).at[flat_tok].add(
+        per_pair.astype(xf.dtype)
+    )
     combined = C(combined, FSDP, "model")
+    stats = {
+        "routed": keep.sum().astype(jnp.int32),
+        "dropped": (~keep).sum().astype(jnp.int32),
+        "heavy": jnp.int32(0),
+    }
+    return combined, stats
 
-    y = combined
+
+def moe_forward_stats(
+    p: Dict, x: jax.Array, cfg: ArchConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """MoE layer with routing stats: (output, {routed, dropped, heavy})
+    int32 scalars.  Route selected by ``cfg.moe_route`` (see module
+    docstring); both routes share ``router_pairs`` so parity comparisons
+    isolate dispatch mechanics."""
+    b, s, d = x.shape
+    t = b * s
+    xin = rms_norm(x, p["ln"], cfg.norm_eps)
+    xf = xin.reshape(t, d)
+    if cfg.moe_route == "calibrated":
+        combined, stats = calibrated_dispatch(p, xf, cfg)
+    else:
+        combined, stats = _dense_dispatch(p, xf, cfg)
+
+    y = combined.astype(x.dtype)
     if "shared" in p:
         sh = p["shared"]
         g = jax.nn.silu((xf @ sh["wg"]).astype(jnp.float32)).astype(xf.dtype)
         y = y + ((g * (xf @ sh["wi"])) @ sh["wo"]).astype(x.dtype)
-    return x + y.reshape(b, s, d)
+    return x + y.reshape(b, s, d), stats
+
+
+def moe_forward(p: Dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Top-k MoE dispatch: compiled FLOPs scale with *active* params
+    (E x C x d x f with C ~ T*topk/E), the property the kimi-k2 roofline
+    depends on.  Stats-free wrapper over ``moe_forward_stats``."""
+    out, _ = moe_forward_stats(p, x, cfg)
+    return out

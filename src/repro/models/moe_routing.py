@@ -1,0 +1,385 @@
+"""MoE expert dispatch as the second customer of the routed exchange.
+
+Expert dispatch IS a skewed hash exchange (ROADMAP open item 2): tokens
+are tuples, experts are destinations, hot experts are heavy hitters, and
+capacity factors are exactly the ``SideCaps`` the join engines measure.
+This module routes (token, choice) pairs through the SAME
+``relational.routed`` primitive the hash/grid/hybrid joins run on:
+
+- **count pre-pass** — ``calibrate_moe`` runs the router once on a
+  calibration batch and ships per-expert bucket counts through
+  ``route_counts`` (the exact (p,)-int ``all_to_all`` of the join
+  engines' measure dispatch), picking tight pow2 send/receive capacities
+  instead of a guessed ``capacity_factor``;
+- **heavy split** — experts whose measured arrival exceeds the balanced
+  share (``skew.heavy_dest_flags``, Joglekar & Ré's degree threshold)
+  have their tokens spread round-robin over ALL expert shards
+  (``split_dests``), each shard applying the hot expert's weights to its
+  slice — Lemma 8's position-partitioned side with the weight table as
+  the broadcast side;
+- **explicit drops** — the dense scatter in ``mlp.moe_forward`` silently
+  drops over-capacity tokens into the residual; the routed path reports
+  the exact dropped-pair count, and a plan whose capacities come from
+  the measure provably drops nothing.
+
+The plan (``MoEPlan``) is frozen/hashable and rides inside ``ArchConfig``
+(``cfg.moe_plan``), so capacities are jit-static: the forward stays one
+compiled program per pow2 capacity bucket, reused across steps — the
+same program-cache story as the join engine's calibrated exchanges.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..relational.ledger import Ledger
+from ..relational.routed import (
+    RoutePolicy,
+    padded_slots,
+    pow2,
+    route_counts,
+    routed_all_to_all,
+)
+from ..relational.skew import DEFAULT_SKEW_THRESHOLD, split_dests
+from ..relational.spmd import AXIS
+from ..relational.wire import count_wire_bytes, dense_wire_bytes
+from .common import ArchConfig
+
+#: payload columns appended to the d activation features of each
+#: (token, choice) pair: [gate weight, token id, expert id].  Float32
+#: carries the int ids exactly (ids < 2^24) so one homogeneous buffer
+#: rides the exchange.
+PAIR_EXTRA = 3
+
+
+# ----------------------------------------------------------------- router
+def router_pairs(
+    p: Dict, xf: jax.Array, cfg: ArchConfig
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k routing decisions shared by BOTH dispatch routes: returns
+    (flat_e, flat_w, flat_tok), each (t*k,), token-major — identical
+    math, so route parity is purely a dispatch-mechanics comparison."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.topk
+    logits = xf.astype(jnp.float32) @ p["router"]  # (t, e)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(gates, k)  # (t, k)
+    topw = topw / (topw.sum(-1, keepdims=True) + 1e-9)
+    flat_e = tope.reshape(-1)
+    flat_w = topw.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    return flat_e, flat_w, flat_tok
+
+
+# ------------------------------------------------------------------- plan
+@dataclasses.dataclass(frozen=True)
+class MoEPlan:
+    """Static routing plan of one calibrated MoE dispatch.
+
+    Frozen + tuple-valued so it is hashable (jit-static inside
+    ``ArchConfig``) and pow2-bucketed so distinct batches reuse compiled
+    programs.  ``e`` expert shards each own ``tpp`` tokens'
+    (token, choice) pairs; ``heavy`` lists the experts the count pre-pass
+    flagged hot (their pairs spread round-robin over all shards)."""
+
+    e: int                      # experts == route shards
+    k: int                      # choices per token
+    tpp: int                    # tokens per shard (pairs per shard = tpp*k)
+    cap_send: int               # dispatch per-destination bucket capacity
+    cap_recv: int               # per-expert receive capacity
+    heavy: Tuple[int, ...] = ()  # statically-known hot experts
+
+    @property
+    def ret_cap_send(self) -> int:
+        """Combine-exchange send buckets: a shard returns at most what it
+        received, and at most one home shard's worth of pairs."""
+        return pow2(min(self.cap_recv, self.tpp * self.k))
+
+    @property
+    def ret_cap_recv(self) -> int:
+        """Combine-exchange receive capacity: a home shard gets back at
+        most its own ``tpp*k`` pairs — exact, so the return trip can
+        never drop when the dispatch did not."""
+        return pow2(self.tpp * self.k)
+
+    @staticmethod
+    def sound(t: int, k: int, e: int) -> "MoEPlan":
+        """Worst-case-sound plan (no measure): capacities cover every
+        pair landing on one expert, so drops are impossible — the
+        fallback for jitted scenarios that cannot run a calibration
+        batch first (e.g. decode serving before traffic exists)."""
+        tpp = -(-t // e)
+        return MoEPlan(
+            e=e, k=k, tpp=tpp,
+            cap_send=pow2(tpp * k), cap_recv=pow2(t * k),
+        )
+
+
+def apply_plan(cfg: ArchConfig, plan: MoEPlan) -> ArchConfig:
+    """Config with the calibrated route + plan installed — the model
+    closes over the returned config, keeping the plan jit-static."""
+    return dataclasses.replace(cfg, moe_route="calibrated", moe_plan=plan)
+
+
+def _heavy_vec(plan: MoEPlan) -> jax.Array:
+    flags = np.zeros((plan.e,), bool)
+    for h in plan.heavy:
+        flags[h] = True
+    return jnp.asarray(flags)
+
+
+def _shard_pairs(plan: MoEPlan, t: int, flat_e, payload_cols):
+    """Pad the token-major pair arrays to ``e * tpp * k`` and fold in the
+    shard axis: shard s owns tokens [s*tpp, (s+1)*tpp), so all k pairs of
+    a token live on one shard and the combine scatter is shard-local."""
+    e, k, tpp = plan.e, plan.k, plan.tpp
+    assert t <= e * tpp, (t, e, tpp, "plan sized for fewer tokens")
+    pad = e * tpp * k - t * k
+    valid = jnp.pad(jnp.ones((t * k,), bool), (0, pad))
+    dest = jnp.pad(flat_e.astype(jnp.int32), (0, pad))
+    payload = jnp.pad(payload_cols, ((0, pad), (0, 0)))
+    npairs = tpp * k
+    return (
+        payload.reshape(e, npairs, payload.shape[1]),
+        valid.reshape(e, npairs),
+        dest.reshape(e, npairs),
+    )
+
+
+# ------------------------------------------------------------ calibration
+def calibrate_moe(
+    p_moe: Dict,
+    xf: jax.Array,
+    cfg: ArchConfig,
+    *,
+    threshold: Optional[float] = None,
+    cap_recv_ceiling: Optional[int] = None,
+) -> Tuple[MoEPlan, Dict]:
+    """Measure a calibration batch and build a tight ``MoEPlan``.
+
+    Runs the router once (host-visible), flags heavy experts from the
+    per-expert arrivals, then ships the ACTUAL per-shard send counts
+    through ``route_counts`` — the identical count pre-pass collective
+    the join engines calibrate with — so ``cap_send``/``cap_recv`` are
+    the measured maxima after heavy spreading, pow2-bucketed.
+
+    ``cap_recv_ceiling`` clips the receive capacity (an M-style memory
+    bound); the dispatch then reports its exact overflow instead of
+    silently truncating.  Returns (plan, measure-info dict)."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.topk
+    policy = RoutePolicy(
+        skew_threshold=DEFAULT_SKEW_THRESHOLD if threshold is None else threshold
+    )
+    flat_e, _, _ = router_pairs(p_moe, xf, cfg)
+    arrivals = np.bincount(np.asarray(flat_e), minlength=e)
+    flags = policy.heavy_flags(arrivals.reshape(1, e), e)
+    heavy = tuple(int(i) for i in np.nonzero(flags)[0])
+    tpp = -(-t // e)
+    probe = MoEPlan(e=e, k=k, tpp=tpp, cap_send=1, cap_recv=1, heavy=heavy)
+    _, valid, dest = _shard_pairs(
+        probe, t, flat_e, jnp.zeros((t * k, 1), jnp.float32)
+    )
+    hv = _heavy_vec(probe)
+
+    def count_fn(dst, val):
+        d2, _ = split_dests(jnp.where(val, dst, e), hv, e)
+        return route_counts(d2, e)
+
+    out_counts, recv_tot = jax.vmap(count_fn, axis_name=AXIS)(dest, valid)
+    cap_send = pow2(int(jax.device_get(out_counts).max()))
+    cap_recv = pow2(int(jax.device_get(recv_tot).max()))
+    if cap_recv_ceiling is not None:
+        cap_recv = min(cap_recv, int(cap_recv_ceiling))
+    plan = MoEPlan(
+        e=e, k=k, tpp=tpp, cap_send=cap_send, cap_recv=cap_recv, heavy=heavy
+    )
+    return plan, {
+        "arrivals": arrivals,
+        "heavy": heavy,
+        "out_counts": np.asarray(jax.device_get(out_counts)),
+    }
+
+
+# --------------------------------------------------------------- dispatch
+def calibrated_dispatch(
+    p: Dict, xf: jax.Array, cfg: ArchConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Route (token, choice) pairs to expert shards via
+    ``routed_all_to_all``, apply the expert FFNs, and route the weighted
+    outputs back — two exchanges, like the production MoE all-to-all pair.
+
+    Per shard: light pairs land on their expert's home shard and run the
+    shard-local expert; pairs of each statically-known heavy expert are
+    spread round-robin (``heavy=`` inside the primitive) and every shard
+    applies that expert's weights to its slice.  The combine exchange
+    returns pairs to the token's home shard (token-contiguous pair
+    sharding), whose capacities are exact — it can never drop when the
+    dispatch did not.
+
+    Returns (combined (t, d) expert mix, stats) with stats =
+    {routed, dropped, heavy} int32 scalars; ``dropped`` is the EXACT
+    pair loss across both exchanges (zero under a measured plan)."""
+    plan: MoEPlan = cfg.moe_plan
+    assert plan is not None, "route='calibrated' needs cfg.moe_plan"
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.topk
+    assert (plan.e, plan.k) == (e, k), (plan, e, k)
+    tpp = plan.tpp
+
+    flat_e, flat_w, flat_tok = router_pairs(p, xf, cfg)
+    payload = jnp.concatenate(
+        [
+            xf[flat_tok].astype(jnp.float32),
+            flat_w[:, None].astype(jnp.float32),
+            flat_tok[:, None].astype(jnp.float32),
+            flat_e[:, None].astype(jnp.float32),
+        ],
+        axis=1,
+    )  # (t*k, d + PAIR_EXTRA)
+    s_payload, s_valid, s_dest = _shard_pairs(plan, t, flat_e, payload)
+    hv = _heavy_vec(plan)
+    wg, wi, wo = p["wg"], p["wi"], p["wo"]
+
+    def ffn(rx, w_g, w_i, w_o):
+        g = jax.nn.silu((rx @ w_g).astype(jnp.float32)).astype(rx.dtype)
+        return (g * (rx @ w_i)) @ w_o
+
+    def shard_fn(pay, val, dst):
+        r = routed_all_to_all(
+            pay, val, dst,
+            p=e, c_out=plan.cap_send, cap_recv=plan.cap_recv, heavy=hv,
+        )
+        rx = r.data[:, :d].astype(wg.dtype)
+        rw = r.data[:, d]
+        rtok = r.data[:, d + 1].astype(jnp.int32)
+        rexp = r.data[:, d + 2].astype(jnp.int32)
+        own = jax.lax.axis_index(AXIS)
+        own_mask = r.valid & (rexp == own)
+        for h in plan.heavy:  # heavy experts are handled below, everywhere
+            own_mask = own_mask & (rexp != h)
+        y = ffn(
+            rx,
+            jnp.take(wg, own, axis=0),
+            jnp.take(wi, own, axis=0),
+            jnp.take(wo, own, axis=0),
+        ) * own_mask[:, None].astype(wg.dtype)
+        for h in plan.heavy:  # static unroll: hot experts run on every shard
+            mh = r.valid & (rexp == h)
+            y = y + ffn(rx, wg[h], wi[h], wo[h]) * mh[:, None].astype(wg.dtype)
+        yw = y.astype(jnp.float32) * rw[:, None]
+        back = jnp.concatenate([yw, rtok.astype(jnp.float32)[:, None]], axis=1)
+        home = jnp.clip(rtok // tpp, 0, e - 1)
+        r2 = routed_all_to_all(
+            back, r.valid, home,
+            p=e, c_out=plan.ret_cap_send, cap_recv=plan.ret_cap_recv,
+        )
+        btok = r2.data[:, d].astype(jnp.int32) - own * tpp
+        idx = jnp.where(r2.valid, btok, tpp)  # tpp == out-of-range -> drop
+        y_blk = jnp.zeros((tpp, d), jnp.float32).at[idx].add(
+            r2.data[:, :d], mode="drop"
+        )
+        dropped = (
+            r.dropped_send + r.dropped_recv + r2.dropped_send + r2.dropped_recv
+        )
+        return y_blk, r.sent, dropped, r.heavy_sent
+
+    y_blocks, sent, dropped, heavy_sent = jax.vmap(shard_fn, axis_name=AXIS)(
+        s_payload, s_valid, s_dest
+    )
+    combined = y_blocks.reshape(e * tpp, d)[:t].astype(xf.dtype)
+    stats = {
+        "routed": sent.sum(),
+        "dropped": dropped.sum(),
+        "heavy": heavy_sent.sum(),
+    }
+    return combined, stats
+
+
+# -------------------------------------------------------------- accounting
+def calibrated_dispatch_bytes(plan: MoEPlan, d: int) -> Tuple[int, int]:
+    """(payload_bytes, padded_slots) the calibrated route's two exchanges
+    ship fleet-wide: dense float32 cells + valid plane, priced by the
+    SAME ``wire.dense_wire_bytes`` formula the join ledger uses."""
+    ar_out, ar_back = d + PAIR_EXTRA, d + 1
+    pb = dense_wire_bytes(plan.e, plan.cap_send, ar_out) + dense_wire_bytes(
+        plan.e, plan.ret_cap_send, ar_back
+    )
+    pad = padded_slots(plan.e, plan.cap_send, ar_out) + padded_slots(
+        plan.e, plan.ret_cap_send, ar_back
+    )
+    return pb, pad
+
+
+def dense_scatter_bytes(cfg: ArchConfig, t: int, d: int) -> Tuple[int, int]:
+    """(payload_bytes, padded_slots) of the dense Switch-style scatter's
+    dispatch buffer — the ``(e*cap+1, d)`` slots every step materializes
+    whether occupied or not (its 'wire' is HBM, but the padding economics
+    are the same accounting question)."""
+    e, k = cfg.n_experts, cfg.topk
+    cap = max(1, int(cfg.capacity_factor * t * k / e))
+    return 4 * (e * cap + 1) * d, (e * cap + 1) * d
+
+
+def record_moe_round(
+    ledger: Ledger,
+    stats: Dict,
+    *,
+    plan: MoEPlan,
+    d: int,
+    note: str = "",
+    measured: bool = True,
+) -> None:
+    """One calibrated MoE layer's dispatch as a ledger round, in the
+    join vocabulary: ``comm`` = pairs routed, ``heavy`` = pair-sends via
+    the heavy spread, ``dropped`` = exact capacity losses, byte-true
+    payload/useful accounting over both exchanges.  ``measured``: charge
+    the calibration count pre-pass (one measure dispatch + its (e,)-int
+    count vectors) to this round."""
+    routed = int(stats["routed"])
+    dropped = int(stats["dropped"])
+    pb, pad = calibrated_dispatch_bytes(plan, d)
+    measure_pb = count_wire_bytes(plan.e) if measured else 0
+    delivered = max(routed - dropped, 0)
+    ledger.add_round(
+        "moe",
+        [f"moe_dispatch[e={plan.e},k={plan.k},cap={plan.cap_recv}]"],
+        comm=routed,
+        note=note,
+        n_rounds=2,  # dispatch + combine exchanges
+        dispatches=1,
+        measure_dispatches=1 if measured else 0,
+        padded=pad + (plan.e * plan.e if measured else 0),
+        heavy=int(stats["heavy"]),
+        payload_bytes=pb + measure_pb,
+        useful_bytes=4 * (routed * (d + PAIR_EXTRA) + delivered * (d + 1)),
+        dropped=dropped,
+        heavy_dests=len(plan.heavy),
+    )
+
+
+def record_dense_round(
+    ledger: Ledger, stats: Dict, *, cfg: ArchConfig, t: int, d: int,
+    note: str = "",
+) -> None:
+    """The dense scatter route in the same vocabulary, so one ledger
+    compares both dispatches: ``dropped`` is the silent over-capacity
+    loss the dense path never used to report."""
+    routed = int(stats["routed"])
+    pb, pad = dense_scatter_bytes(cfg, t, d)
+    ledger.add_round(
+        "moe",
+        [f"moe_dense[e={cfg.n_experts},k={cfg.topk}]"],
+        comm=routed,
+        note=note,
+        n_rounds=1,
+        dispatches=1,
+        padded=pad,
+        payload_bytes=pb,
+        useful_bytes=4 * routed * d,
+        dropped=int(stats["dropped"]),
+    )

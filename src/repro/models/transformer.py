@@ -30,7 +30,7 @@ from .common import (
     stack_init,
     unembed,
 )
-from .mlp import init_mlp, init_moe, mlp_forward, moe_forward
+from .mlp import init_mlp, init_moe, mlp_forward, moe_forward, moe_forward_stats
 from .ssm import (
     init_mamba,
     mamba_decode,
@@ -191,8 +191,9 @@ class DecoderLM:
             pos = jnp.broadcast_to(pos[None], (3, b, s))
         return pos
 
-    def _backbone(self, params, x, pos, remat: bool):
+    def _backbone(self, params, x, pos, remat: bool, collect_moe: bool = False):
         cfg = self.cfg
+        totals = {k: jnp.int32(0) for k in ("routed", "dropped", "heavy")}
         for (kind, count), seg in zip(cfg.segments(), params["segments"]):
             if kind == "shared_attn":
                 sp = params["shared_attn"]
@@ -200,22 +201,42 @@ class DecoderLM:
                     x = _fwd_block(kind, sp, x, cfg, pos)
                 continue
 
-            def layer(xc, pl, k=kind):
-                return _fwd_block(k, pl, xc, cfg, pos), None
+            want_stats = collect_moe and kind == "moe"
+            if want_stats:
+
+                def layer(xc, pl):
+                    xa = attn_forward(pl["attn"], xc, cfg, pos=pos, causal=True)
+                    return moe_forward_stats(pl["moe"], xa, cfg)
+
+            else:
+
+                def layer(xc, pl, k=kind):
+                    return _fwd_block(k, pl, xc, cfg, pos), None
 
             if remat:
                 layer = jax.checkpoint(layer)  # noqa: B023
-            x, _ = jax.lax.scan(layer, x, seg)
-        return x
+            x, ys = jax.lax.scan(layer, x, seg)
+            if want_stats:
+                totals = {k: totals[k] + ys[k].sum() for k in totals}
+        return (x, totals) if collect_moe else x
 
-    def logits(self, params, tokens, pos=None, remat: bool = False):
+    def logits(
+        self, params, tokens, pos=None, remat: bool = False,
+        collect_moe: bool = False,
+    ):
         cfg = self.cfg
         b, s = tokens.shape
         x = embed(tokens, params["embed"]["table"])
-        x = self._backbone(params, x, self._pos(pos, b, s), remat)
+        x = self._backbone(
+            params, x, self._pos(pos, b, s), remat, collect_moe=collect_moe
+        )
+        moe_stats = None
+        if collect_moe:
+            x, moe_stats = x
         x = rms_norm(x, params["final_ln"], cfg.norm_eps)
         table = params.get("unembed", params["embed"])["table"]
-        return unembed(x, table, cfg.logit_softcap)
+        out = unembed(x, table, cfg.logit_softcap)
+        return (out, moe_stats) if collect_moe else out
 
     # --------------------------------------------------------------- train
     def loss(self, params, batch: Dict, remat: bool = True) -> jax.Array:
@@ -223,6 +244,16 @@ class DecoderLM:
             params, batch["tokens"], batch.get("pos"), remat=remat
         )
         return softmax_xent(logits, batch["targets"])
+
+    def loss_and_stats(self, params, batch: Dict, remat: bool = True):
+        """Loss plus per-step MoE routing stats summed over moe layers:
+        {routed, dropped, heavy} int32 — the aux the train step surfaces
+        as metrics when ``TrainConfig.moe_metrics`` is on."""
+        logits, moe = self.logits(
+            params, batch["tokens"], batch.get("pos"), remat=remat,
+            collect_moe=True,
+        )
+        return softmax_xent(logits, batch["targets"]), moe
 
     # --------------------------------------------------------------- serve
     def prefill(self, params, batch: Dict, s_cache: Optional[int] = None):

@@ -9,5 +9,9 @@ the per-shard code is identical (collectives via a named axis).
 from .table import Table, DTable, schema_join
 from .spmd import SPMD, AXIS
 from .ledger import Ledger
+from .routed import RoutePolicy, RoutedResult, route_counts, routed_all_to_all
 
-__all__ = ["Table", "DTable", "schema_join", "SPMD", "AXIS", "Ledger"]
+__all__ = [
+    "Table", "DTable", "schema_join", "SPMD", "AXIS", "Ledger",
+    "RoutePolicy", "RoutedResult", "route_counts", "routed_all_to_all",
+]

@@ -40,6 +40,14 @@ class RoundRecord:
     # tuples inside them.  Defaulted so pre-wire snapshots keep loading.
     payload_bytes: int = 0
     useful_bytes: int = 0
+    # routed-exchange stats shared with the MoE customer of
+    # ``relational.routed``: tuples (token pairs) the round dropped at a
+    # capacity — always 0 on join rounds, which abort-retry instead of
+    # dropping — and the number of destinations (experts) the round's
+    # count pre-pass flagged heavy.  Defaulted so pre-MoE snapshots
+    # (``RoundRecord(**r)``) keep loading.
+    dropped_tuples: int = 0
+    heavy_dests: int = 0
 
 
 class Ledger:
@@ -116,6 +124,24 @@ class Ledger:
         return self.shuffle_tuples - self.heavy_tuples
 
     @property
+    def dropped_tuples(self) -> int:
+        """Tuples lost to a capacity across all rounds.  The join engines
+        hold this at 0 by construction (overflow aborts and retries with
+        doubled capacities); the MoE customer reports it explicitly —
+        calibrated dispatch proves 0 when the measured counts fit, and
+        capacity-ceilinged dispatch surfaces the exact overflow instead
+        of the dense scatter's silent truncation."""
+        return sum(r.dropped_tuples for r in self.records)
+
+    @property
+    def heavy_dests(self) -> int:
+        """Destinations (reducers / experts) the count pre-pass flagged
+        heavy, summed over rounds — the routed-exchange sibling of
+        ``heavy_tuples`` (which counts the tuple-sends those destinations
+        attracted)."""
+        return sum(r.heavy_dests for r in self.records)
+
+    @property
     def payload_bytes(self) -> int:
         """Bytes the wire actually shipped across all exchanges — the
         byte-true sibling of ``padded_slots``.  Unlike the slot metric
@@ -165,13 +191,15 @@ class Ledger:
         measure_dispatches: int = 0,
         payload_bytes: int = 0,
         useful_bytes: int = 0,
+        dropped: int = 0,
+        heavy_dests: int = 0,
     ) -> None:
         self.records.append(
             RoundRecord(
                 len(self.records), phase, list(ops), int(comm), note, n_rounds,
                 int(dispatches), int(padded), int(heavy),
                 int(measure_dispatches), int(payload_bytes),
-                int(useful_bytes),
+                int(useful_bytes), int(dropped), int(heavy_dests),
             )
         )
 
@@ -214,6 +242,8 @@ class Ledger:
             "payload_bytes": int(self.payload_bytes),
             "useful_bytes": int(self.useful_bytes),
             "payload_efficiency_bytes": float(self.payload_efficiency_bytes),
+            "measured_dropped": int(self.dropped_tuples),
+            "measured_heavy_dests": int(self.heavy_dests),
             "output_tuples": int(self.output_tuples),
             "retries": int(self.retries),
         }
@@ -232,6 +262,8 @@ class Ledger:
                     "heavy": 0,
                     "payload_bytes": 0,
                     "useful_bytes": 0,
+                    "dropped": 0,
+                    "heavy_dests": 0,
                 },
             )
             ph["rounds"] += r.n_rounds
@@ -242,6 +274,8 @@ class Ledger:
             ph["heavy"] += r.heavy_tuples
             ph["payload_bytes"] += r.payload_bytes
             ph["useful_bytes"] += r.useful_bytes
+            ph["dropped"] += r.dropped_tuples
+            ph["heavy_dests"] += r.heavy_dests
         return {
             "rounds": self.rounds,
             "measured_dispatches": self.measured_dispatches,
@@ -252,6 +286,8 @@ class Ledger:
             "padded_slots": self.padded_slots,
             "heavy_tuples": self.heavy_tuples,
             "light_tuples": self.light_tuples,
+            "dropped_tuples": self.dropped_tuples,
+            "heavy_dests": self.heavy_dests,
             "payload_efficiency": round(self.payload_efficiency, 4),
             "payload_bytes": self.payload_bytes,
             "useful_bytes": self.useful_bytes,
@@ -264,6 +300,10 @@ class Ledger:
     def __repr__(self) -> str:
         s = self.summary()
         heavy = f", heavy={s['heavy_tuples']}" if s["heavy_tuples"] else ""
+        if s["heavy_dests"]:
+            heavy += f", heavy_dests={s['heavy_dests']}"
+        if s["dropped_tuples"]:
+            heavy += f", dropped={s['dropped_tuples']}"
         lines = [
             f"Ledger(rounds={s['rounds']}, dispatches={s['measured_dispatches']}, "
             f"comm={s['comm_tuples']}, out={s['output_tuples']}, "

@@ -1,0 +1,386 @@
+"""The routed all-to-all exchange primitive — the workload-agnostic core of
+the calibrated, skew-resilient, packed-wire shuffle.
+
+PRs 4-7 grew the exchange stack (count pre-pass -> pow2 capacities,
+heavy-hitter split/broadcast routing, bit-packed wire codec, split-phase
+start/ship/finish for fused groups) inside the join-specific modules.
+This module carves it out: anything that is "rows with destinations over
+the named reducer axis" can route through here.  Two customers today:
+
+- **joins** — ``shuffle.exchange`` / ``exchange_multi`` and the
+  hash/grid/hybrid engines in ``core.physical`` are thin consumers
+  (bit-identical rows/comm/retries to the pre-extraction paths);
+- **MoE expert dispatch** — ``models.moe_routing`` routes (token, choice)
+  pairs to expert shards: tokens are tuples, experts are destinations,
+  hot experts are heavy hitters, and capacity factors are measured
+  ``SideCaps`` (ROADMAP open item 2).
+
+The primitive is dtype-generic: ``_bucketize``'s single-sort scatter and
+``localops.compact`` never inspect row contents, so int32 relational
+tuples and float32 token activations ride the same code.
+
+``routed_all_to_all(data, valid, dests, ...)`` dispatches on the shape
+of ``dests``: ``(n,)`` is a single-destination send (optionally with
+heavy-hitter round-robin spreading via ``heavy=``), ``(n, g)`` is a
+replicated send (grid offsets / hypercube wildcards / heavy broadcast).
+Overflow anywhere is reported, never silently dropped — callers either
+abort-retry with doubled capacities (the join engine) or surface the
+exact dropped count in their stats (the MoE customer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .localops import compact
+from .skew import DEFAULT_SKEW_THRESHOLD, heavy_dest_flags, heavy_dest_flags_many, split_dests
+from .spmd import AXIS
+from .wire import (
+    WireFormat,
+    WirePolicy,
+    get_codec,
+    pack_segments,
+    split_segments,
+    wire_decode,
+    wire_encode,
+)
+
+
+def pow2(x: int) -> int:
+    """Round capacities up to powers of two (min 4): distinct shapes
+    collapse, so the per-op jit cache is reused across nodes, rounds,
+    retries, and calibrated occupancies — and uniform shapes are what make
+    op groups batchable at all."""
+    return 1 << max(2, int(x - 1).bit_length())
+
+
+def padded_slots(p: int, c_out: int, arity: int = 1) -> int:
+    """int32 cells a fleet-wide exchange ships for one ``all_to_all``:
+    each of the ``p`` shards sends the dense ``(p, c_out, arity)`` bucket
+    buffer whether the buckets are full or empty.  Counting CELLS (slot
+    rows x row width) rather than rows keeps keys-only exchanges (the
+    semijoin R projection, the join measure pre-pass) honestly cheaper
+    than full-payload ones.  This is the denominator of the ledger's
+    payload-efficiency metric."""
+    return p * p * c_out * max(1, arity)
+
+
+def _bucketize(
+    data: jax.Array, valid_dest: jax.Array, p: int, c_out: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Scatter rows into per-destination buckets.
+
+    ``valid_dest``: (n,) int32 in [0,p) for live rows, == p for dead rows.
+    Returns (buf (p,c_out,ar), buf_valid (p,c_out), sent, dropped).
+
+    One sort total: rows are argsorted by destination, each sorted slot's
+    in-bucket position is its distance to the last bucket boundary (a
+    cummax of boundary indices), and the positions are scattered back to
+    original row order — so the full-width row data is scattered into
+    ``buf`` directly, with no second search over the sorted copy and no
+    (n, ar) gather of a sorted row array."""
+    n, ar = data.shape
+    order = jnp.argsort(valid_dest, stable=True)
+    sdest = valid_dest[order]
+    idx = jnp.arange(n)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sdest[1:] != sdest[:-1]]
+    )
+    bucket_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    pos_sorted = idx - bucket_start
+    # rank of original row ``order[i]`` within its bucket is pos_sorted[i]
+    pos = jnp.zeros((n,), pos_sorted.dtype).at[order].set(pos_sorted)
+    live = valid_dest < p
+    ok = live & (pos < c_out)
+    d_idx = jnp.where(ok, valid_dest, p)  # p == out-of-bounds -> dropped
+    pos_c = jnp.clip(pos, 0, c_out - 1)
+    buf = jnp.zeros((p, c_out, ar), data.dtype).at[d_idx, pos_c].set(
+        data, mode="drop"
+    )
+    buf_valid = jnp.zeros((p, c_out), bool).at[d_idx, pos_c].set(ok, mode="drop")
+    sent = ok.sum()
+    dropped = (live & ~ok).sum()
+    return buf, buf_valid, sent, dropped
+
+
+def _multi_flatten(
+    data: jax.Array, valid: jax.Array, dests: jax.Array, p: int
+) -> Tuple[jax.Array, jax.Array]:
+    """The map-side row tiling of a replicated send: dedupe each row's
+    destination list to the skip slot, then flatten to one (n*g,) send.
+
+    Duplicate destinations WITHIN a row's ``dests`` are deduplicated so a
+    row reaches each reducer at most once — replicated sends can never
+    double-count ``sent`` or double-deliver a tuple (which a local join
+    would then double-join)."""
+    g = dests.shape[1]
+    if g > 1:
+        eq = dests[:, :, None] == dests[:, None, :]  # (n, g, g)
+        earlier = jnp.tril(jnp.ones((g, g), bool), -1)  # [j, k]: k < j
+        dup = (eq & earlier[None]).any(-1)
+        dests = jnp.where(dup, p, dests)
+    tiled_rows = jnp.repeat(data, g, axis=0)  # (n*g, ar)
+    flat_dest = jnp.where(jnp.repeat(valid, g, axis=0), dests.reshape(-1), p)
+    return tiled_rows, flat_dest
+
+
+def _wire_ship(
+    buf: jax.Array, buf_valid: jax.Array, fmt: WireFormat, c_out: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Packed collective: encode the dense buckets + valid plane into one
+    bit-packed uint8 buffer, run ONE ``all_to_all`` (instead of the dense
+    path's data + valid pair), decode back.  The optional codec hook
+    wraps the bytes around the collective."""
+    wire = wire_encode(buf, buf_valid, fmt)
+    enc, dec = get_codec(fmt.codec)
+    payload, aux = enc(wire)
+    rpayload = jax.lax.all_to_all(
+        payload, AXIS, split_axis=0, concat_axis=0, tiled=False
+    )
+    return wire_decode(dec(rpayload, aux), fmt, c_out)
+
+
+def _ship(
+    buf: jax.Array, buf_valid: jax.Array, fmt: Optional[WireFormat], c_out: int
+) -> Tuple[jax.Array, jax.Array]:
+    """The collective of one exchange: dense data + valid pair (two
+    ``all_to_all``s) or one packed uint8 buffer."""
+    if fmt is None:
+        rbuf = jax.lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0, tiled=False)
+        rvalid = jax.lax.all_to_all(
+            buf_valid, AXIS, split_axis=0, concat_axis=0, tiled=False
+        )
+        return rbuf, rvalid
+    return _wire_ship(buf, buf_valid, fmt, c_out)
+
+
+# ------------------------------------------------------ count-only pre-pass
+def bucket_counts(dest: jax.Array, p: int) -> jax.Array:
+    """Per-destination outgoing bucket counts: (n,) or (n, g) destinations
+    (== p for dead/skip slots) -> (p,) int32 counts.  The map-side half of
+    the calibration pre-pass; costs one segment-add, no sort."""
+    flat = dest.reshape(-1)
+    live = (flat >= 0) & (flat < p)
+    return (
+        jnp.zeros((p,), jnp.int32)
+        .at[jnp.clip(flat, 0, p - 1)]
+        .add(live.astype(jnp.int32), mode="drop")
+    )
+
+
+def route_counts(dest: jax.Array, p: int) -> Tuple[jax.Array, jax.Array]:
+    """The count-only pre-pass of a routed exchange: ship per-destination
+    bucket COUNTS (a (p,)-int ``all_to_all``) instead of the payload.
+
+    Returns ``(out_counts (p,), recv_total ())``:
+
+    - ``max(out_counts)`` over all shards is the tight send-bucket
+      capacity ``c_out`` (the payload exchange's per-destination buffer);
+    - ``max(recv_total)`` over all shards is the tight receive capacity
+      ``cap_recv`` (the post-``all_to_all`` compact size).
+
+    Same collective pattern as the payload exchange (split/concat axis 0
+    over the named reducer axis), so it is batchable under the same inner
+    vmap as the operator bodies."""
+    out = bucket_counts(dest, p)
+    recv = jax.lax.all_to_all(out, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    return out, recv.sum()
+
+
+# --------------------------------------------------------------- primitive
+class RoutedResult(NamedTuple):
+    """One routed exchange's received rows + byte-true-auditable stats."""
+
+    data: jax.Array        # (cap_recv, ar) received rows, compacted
+    valid: jax.Array       # (cap_recv,) bool
+    sent: jax.Array        # rows that made it into a send bucket
+    dropped_send: jax.Array  # rows lost to a full send bucket (c_out)
+    dropped_recv: jax.Array  # rows lost to a full receive buffer (cap_recv)
+    heavy_sent: jax.Array  # rows routed via the heavy-hitter spread
+
+
+def routed_all_to_all(
+    data: jax.Array,
+    valid: jax.Array,
+    dests: jax.Array,
+    *,
+    p: int,
+    c_out: int,
+    cap_recv: int,
+    fmt: Optional[WireFormat] = None,
+    heavy: Optional[jax.Array] = None,
+) -> RoutedResult:
+    """Route rows to destination shards over the named reducer axis.
+
+    ``dests`` (n,) int32 in [0,p): single-destination send (the hash
+    exchange / MoE token dispatch).  ``dests`` (n, g): replicated send —
+    each row goes to up to g destinations (grid offsets, hypercube
+    wildcards, heavy broadcast); in-row duplicates are deduplicated.
+
+    ``heavy`` (p,) bool (single-dest only): destinations flagged heavy by
+    the count pre-pass have their rows spread round-robin over all p
+    shards (``skew.split_dests`` — Lemma 8's position-partitioned side,
+    restricted to the heavy keys).  The consumer owns putting the
+    matching state everywhere (joins broadcast the other operand; MoE
+    closes over the replicated expert weights).
+
+    ``fmt=None`` ships the dense buckets + bool valid plane (two
+    collectives); a ``WireFormat`` ships one bit-packed uint8 buffer.
+    Rows out are bit-identical either way.
+    """
+    if dests.ndim == 2:
+        assert heavy is None, "heavy spreading applies to single-dest routes"
+        rows, flat_dest = _multi_flatten(data, valid, dests, p)
+        heavy_sent = jnp.int32(0)
+    else:
+        rows = data
+        flat_dest = jnp.where(valid, dests, p)
+        if heavy is None:
+            heavy_sent = jnp.int32(0)
+        else:
+            flat_dest, is_heavy = split_dests(flat_dest, heavy, p)
+            heavy_sent = (is_heavy & valid).sum()
+    buf, buf_valid, sent, dropped_send = _bucketize(rows, flat_dest, p, c_out)
+    rbuf, rvalid = _ship(buf, buf_valid, fmt, c_out)
+    flat = rbuf.reshape(p * c_out, -1)
+    flatv = rvalid.reshape(p * c_out)
+    rdata, rv, dropped_recv = compact(flat, flatv, cap_recv)
+    return RoutedResult(rdata, rv, sent, dropped_send, dropped_recv, heavy_sent)
+
+
+# ------------------------------------------- segmented (fused-group) exchange
+# An exchange split around its collective: ``routed_start`` buckets +
+# encodes one op's send into a (p, nbytes) segment, ``ship_segments`` runs
+# ONE ``all_to_all`` over every segment of a fused op group concatenated
+# (mixed schemas/arities each keep their own format — arity-aware
+# segmentation instead of padding every op to the widest schema), and
+# ``routed_finish`` decodes + compacts each op's received segment.
+def routed_start(
+    data: jax.Array,
+    valid: jax.Array,
+    dests: jax.Array,
+    *,
+    p: int,
+    c_out: int,
+    fmt: WireFormat,
+    heavy: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Map stage of a packed routed exchange: returns (wire segment
+    (p, nbytes), sent, dropped_send, heavy_sent).  Accepts the same
+    (n,) / (n, g) destination shapes as ``routed_all_to_all``."""
+    if dests.ndim == 2:
+        assert heavy is None, "heavy spreading applies to single-dest routes"
+        rows, flat_dest = _multi_flatten(data, valid, dests, p)
+        heavy_sent = jnp.int32(0)
+    else:
+        rows = data
+        flat_dest = jnp.where(valid, dests, p)
+        if heavy is None:
+            heavy_sent = jnp.int32(0)
+        else:
+            flat_dest, is_heavy = split_dests(flat_dest, heavy, p)
+            heavy_sent = (is_heavy & valid).sum()
+    buf, buf_valid, sent, dropped_send = _bucketize(rows, flat_dest, p, c_out)
+    return wire_encode(buf, buf_valid, fmt), sent, dropped_send, heavy_sent
+
+
+def ship_segments(wires: Sequence[jax.Array]) -> List[jax.Array]:
+    """ONE ``all_to_all`` for a whole fused group: concatenate each
+    exchange's (p, nbytes_i) segment, ship, split back."""
+    seg = pack_segments(wires)
+    rseg = jax.lax.all_to_all(seg, AXIS, split_axis=0, concat_axis=0, tiled=False)
+    return split_segments(rseg, [w.shape[-1] for w in wires])
+
+
+def routed_finish(
+    rwire: jax.Array, *, p: int, c_out: int, cap_recv: int, fmt: WireFormat
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Reduce stage of a packed routed exchange: decode the received
+    segment and compact.  Returns (rdata, rvalid, dropped_recv)."""
+    rbuf, rvalid = wire_decode(rwire, fmt, c_out)
+    flat = rbuf.reshape(p * c_out, -1)
+    flatv = rvalid.reshape(p * c_out)
+    return compact(flat, flatv, cap_recv)
+
+
+# ----------------------------------------------------------------- policy
+@dataclasses.dataclass(frozen=True)
+class RoutePolicy:
+    """Per-consumer routing configuration: the wire encoding and the
+    heavy-hitter sensitivity.  One instance is shared by every exchange
+    of a query (join engines) or a model (MoE dispatch), so format
+    soundness and skew decisions are consistent across rounds.
+
+    ``wire_policy``: column-range-derived packed formats (None = dense
+    exchanges).  ``skew_threshold``: a destination is heavy when its
+    measured arrival exceeds this multiple of the balanced share."""
+
+    wire_policy: Optional[WirePolicy] = None
+    skew_threshold: float = DEFAULT_SKEW_THRESHOLD
+
+    # -- packed wire formats ------------------------------------------------
+    def fmt_for(self, schemas: Sequence[Sequence[str]]) -> Optional[WireFormat]:
+        """Group-uniform packed format of one exchange side: the widest-
+        per-column union over the group's instances (wider is sound)."""
+        if self.wire_policy is None:
+            return None
+        return WireFormat.union(
+            [self.wire_policy.format_for(s) for s in schemas]
+        )
+
+    def pair_fmts(
+        self,
+        lhs_schemas: Sequence[Sequence[str]],
+        rhs_schemas: Sequence[Sequence[str]],
+        xcaps,
+        rhs_keys_only: bool = False,
+    ):
+        """Formats of a two-sided exchange group, recorded per-exchange
+        in the measurement's ``SideCaps``.  ``rhs_keys_only``: the rhs
+        ships its deduplicated shared-key projection (semijoins), so its
+        format covers the key columns only.  Returns (fmts, xcaps)."""
+        if self.wire_policy is None:
+            return None, xcaps
+        fmt_l = self.fmt_for(lhs_schemas)
+        if rhs_keys_only:
+            rschemas = [
+                tuple(x for x in l if x in set(r))
+                for l, r in zip(lhs_schemas, rhs_schemas)
+            ]
+        else:
+            rschemas = list(rhs_schemas)
+        fmt_r = self.fmt_for(rschemas)
+        if xcaps is not None:
+            xcaps = dataclasses.replace(
+                xcaps,
+                lhs=dataclasses.replace(xcaps.lhs, fmt=fmt_l),
+                rhs=None
+                if xcaps.rhs is None
+                else dataclasses.replace(xcaps.rhs, fmt=fmt_r),
+            )
+        return (fmt_l, fmt_r), xcaps
+
+    def single_fmt(self, schemas: Sequence[Sequence[str]], xcaps):
+        """Format of a one-sided exchange group (dedup), recorded in the
+        measurement's ``SideCaps``.  Returns (fmt, xcaps)."""
+        if self.wire_policy is None:
+            return None, xcaps
+        fmt = self.fmt_for(schemas)
+        if xcaps is not None:
+            xcaps = dataclasses.replace(
+                xcaps, lhs=dataclasses.replace(xcaps.lhs, fmt=fmt)
+            )
+        return fmt, xcaps
+
+    # -- heavy-hitter detection ---------------------------------------------
+    def heavy_flags(self, out_counts, p: int):
+        """(shards, p) send-count matrix -> (p,) heavy-destination flags
+        at this policy's threshold."""
+        return heavy_dest_flags(out_counts, p, self.skew_threshold)
+
+    def heavy_flags_many(self, out_counts, p: int):
+        """(shards, k, p) group send counts -> (k, p) flags."""
+        return heavy_dest_flags_many(out_counts, p, self.skew_threshold)

@@ -1,5 +1,9 @@
 """The MapReduce shuffle as a per-shard function over the named reducer axis.
 
+Thin join-facing veneer over the ``relational.routed`` exchange primitive
+(which owns bucketing, the count pre-pass, heavy-hitter routing, the
+packed wire codec, and the split-phase collective):
+
 ``exchange``: hash-partitioned repartitioning (map stage: bucket rows by
 destination; network: one ``lax.all_to_all``; reduce stage: compact).
 ``exchange_multi``: each row goes to ``g`` destinations (the replicated
@@ -31,127 +35,31 @@ different occupancies instead of recompiled per capacity.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from .localops import compact
-from .spmd import AXIS
-from .wire import (
-    WireFormat,
-    get_codec,
-    pack_segments,
-    split_segments,
-    wire_decode,
-    wire_encode,
+from .routed import (  # noqa: F401  (re-exported: the join data plane's names)
+    _bucketize,
+    _multi_flatten,
+    _wire_ship,
+    bucket_counts,
+    padded_slots,
+    pow2,
+    route_counts,
+    routed_all_to_all,
+    routed_finish,
+    routed_start,
+    ship_segments,
 )
-
-
-def pow2(x: int) -> int:
-    """Round capacities up to powers of two (min 4): distinct shapes
-    collapse, so the per-op jit cache is reused across nodes, rounds,
-    retries, and calibrated occupancies — and uniform shapes are what make
-    op groups batchable at all."""
-    return 1 << max(2, int(x - 1).bit_length())
-
-
-def padded_slots(p: int, c_out: int, arity: int = 1) -> int:
-    """int32 cells a fleet-wide exchange ships for one ``all_to_all``:
-    each of the ``p`` shards sends the dense ``(p, c_out, arity)`` bucket
-    buffer whether the buckets are full or empty.  Counting CELLS (slot
-    rows x row width) rather than rows keeps keys-only exchanges (the
-    semijoin R projection, the join measure pre-pass) honestly cheaper
-    than full-payload ones.  This is the denominator of the ledger's
-    payload-efficiency metric."""
-    return p * p * c_out * max(1, arity)
-
-
-def _bucketize(
-    data: jax.Array, valid_dest: jax.Array, p: int, c_out: int
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Scatter rows into per-destination buckets.
-
-    ``valid_dest``: (n,) int32 in [0,p) for live rows, == p for dead rows.
-    Returns (buf (p,c_out,ar), buf_valid (p,c_out), sent, dropped).
-
-    One sort total: rows are argsorted by destination, each sorted slot's
-    in-bucket position is its distance to the last bucket boundary (a
-    cummax of boundary indices), and the positions are scattered back to
-    original row order — so the full-width row data is scattered into
-    ``buf`` directly, with no second search over the sorted copy and no
-    (n, ar) gather of a sorted row array."""
-    n, ar = data.shape
-    order = jnp.argsort(valid_dest, stable=True)
-    sdest = valid_dest[order]
-    idx = jnp.arange(n)
-    is_start = jnp.concatenate(
-        [jnp.ones((1,), bool), sdest[1:] != sdest[:-1]]
-    )
-    bucket_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
-    pos_sorted = idx - bucket_start
-    # rank of original row ``order[i]`` within its bucket is pos_sorted[i]
-    pos = jnp.zeros((n,), pos_sorted.dtype).at[order].set(pos_sorted)
-    live = valid_dest < p
-    ok = live & (pos < c_out)
-    d_idx = jnp.where(ok, valid_dest, p)  # p == out-of-bounds -> dropped
-    pos_c = jnp.clip(pos, 0, c_out - 1)
-    buf = jnp.zeros((p, c_out, ar), data.dtype).at[d_idx, pos_c].set(
-        data, mode="drop"
-    )
-    buf_valid = jnp.zeros((p, c_out), bool).at[d_idx, pos_c].set(ok, mode="drop")
-    sent = ok.sum()
-    dropped = (live & ~ok).sum()
-    return buf, buf_valid, sent, dropped
-
-
-def _wire_ship(
-    buf: jax.Array, buf_valid: jax.Array, fmt: WireFormat, c_out: int
-) -> Tuple[jax.Array, jax.Array]:
-    """Packed collective: encode the dense buckets + valid plane into one
-    bit-packed uint8 buffer, run ONE ``all_to_all`` (instead of the dense
-    path's data + valid pair), decode back.  The optional codec hook
-    wraps the bytes around the collective."""
-    wire = wire_encode(buf, buf_valid, fmt)
-    enc, dec = get_codec(fmt.codec)
-    payload, aux = enc(wire)
-    rpayload = jax.lax.all_to_all(
-        payload, AXIS, split_axis=0, concat_axis=0, tiled=False
-    )
-    return wire_decode(dec(rpayload, aux), fmt, c_out)
-
-
-# ------------------------------------------------------ count-only pre-pass
-def bucket_counts(dest: jax.Array, p: int) -> jax.Array:
-    """Per-destination outgoing bucket counts: (n,) or (n, g) destinations
-    (== p for dead/skip slots) -> (p,) int32 counts.  The map-side half of
-    the calibration pre-pass; costs one segment-add, no sort."""
-    flat = dest.reshape(-1)
-    live = (flat >= 0) & (flat < p)
-    return (
-        jnp.zeros((p,), jnp.int32)
-        .at[jnp.clip(flat, 0, p - 1)]
-        .add(live.astype(jnp.int32), mode="drop")
-    )
+from .wire import WireFormat
 
 
 def exchange_counts(dest: jax.Array, p: int) -> Tuple[jax.Array, jax.Array]:
-    """The count-only pre-pass of an exchange: ship per-destination bucket
-    COUNTS (a (p,)-int ``all_to_all``) instead of the payload.
-
-    Returns ``(out_counts (p,), recv_total ())``:
-
-    - ``max(out_counts)`` over all shards is the tight send-bucket
-      capacity ``c_out`` (the payload exchange's per-destination buffer);
-    - ``max(recv_total)`` over all shards is the tight receive capacity
-      ``cap_recv`` (the post-``all_to_all`` compact size).
-
-    Same collective pattern as the payload exchange (split/concat axis 0
-    over the named reducer axis), so it is batchable under the same inner
-    vmap as the operator bodies."""
-    out = bucket_counts(dest, p)
-    recv = jax.lax.all_to_all(out, AXIS, split_axis=0, concat_axis=0, tiled=False)
-    return out, recv.sum()
+    """The count-only pre-pass of an exchange (``routed.route_counts``):
+    ship per-destination bucket COUNTS instead of the payload.  Returns
+    ``(out_counts (p,), recv_total ())``."""
+    return route_counts(dest, p)
 
 
 def exchange(
@@ -172,18 +80,10 @@ def exchange(
 
     Returns (rdata (cap_recv, ar), rvalid, sent, dropped_send, dropped_recv).
     """
-    buf, buf_valid, sent, dropped_send = _bucketize(
-        data, jnp.where(valid, dest, p), p, c_out
+    r = routed_all_to_all(
+        data, valid, dest, p=p, c_out=c_out, cap_recv=cap_recv, fmt=fmt
     )
-    if fmt is None:
-        rbuf = jax.lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0, tiled=False)
-        rvalid = jax.lax.all_to_all(buf_valid, AXIS, split_axis=0, concat_axis=0, tiled=False)
-    else:
-        rbuf, rvalid = _wire_ship(buf, buf_valid, fmt, c_out)
-    flat = rbuf.reshape(p * c_out, -1)
-    flatv = rvalid.reshape(p * c_out)
-    rdata, rv, dropped_recv = compact(flat, flatv, cap_recv)
-    return rdata, rv, sent, dropped_send, dropped_recv
+    return r.data, r.valid, r.sent, r.dropped_send, r.dropped_recv
 
 
 def exchange_multi(
@@ -199,50 +99,19 @@ def exchange_multi(
     """Replicated send: each row goes to up to g destinations.
 
     Duplicate destinations WITHIN a row's ``dests`` are deduplicated to
-    the skip slot ``p`` before bucketing: a row reaches each reducer at
-    most once, so replicated sends can never double-count ``sent`` or
-    double-deliver a tuple (which a local join would then double-join).
+    the skip slot ``p`` before bucketing (see ``routed._multi_flatten``).
     Today's callers construct distinct destinations (grid offsets are
     distinct even with size-1 dimensions, hypercube wildcard offsets are
     a product of distinct coordinates, hybrid broadcast is ``arange``),
     so this is defense-in-depth; the regression tests pin both the
     construction-site distinctness and this dedupe."""
-    tiled_rows, flat_dest = _multi_flatten(data, valid, dests, p)
-    buf, buf_valid, sent, dropped_send = _bucketize(tiled_rows, flat_dest, p, c_out)
-    if fmt is None:
-        rbuf = jax.lax.all_to_all(buf, AXIS, split_axis=0, concat_axis=0, tiled=False)
-        rvalid = jax.lax.all_to_all(buf_valid, AXIS, split_axis=0, concat_axis=0, tiled=False)
-    else:
-        rbuf, rvalid = _wire_ship(buf, buf_valid, fmt, c_out)
-    flat = rbuf.reshape(p * c_out, -1)
-    flatv = rvalid.reshape(p * c_out)
-    rdata, rv, dropped_recv = compact(flat, flatv, cap_recv)
-    return rdata, rv, sent, dropped_send, dropped_recv
-
-
-def _multi_flatten(
-    data: jax.Array, valid: jax.Array, dests: jax.Array, p: int
-) -> Tuple[jax.Array, jax.Array]:
-    """The map-side row tiling of ``exchange_multi``: dedupe each row's
-    destination list to the skip slot, then flatten to one (n*g,) send."""
-    g = dests.shape[1]
-    if g > 1:
-        eq = dests[:, :, None] == dests[:, None, :]  # (n, g, g)
-        earlier = jnp.tril(jnp.ones((g, g), bool), -1)  # [j, k]: k < j
-        dup = (eq & earlier[None]).any(-1)
-        dests = jnp.where(dup, p, dests)
-    tiled_rows = jnp.repeat(data, g, axis=0)  # (n*g, ar)
-    flat_dest = jnp.where(jnp.repeat(valid, g, axis=0), dests.reshape(-1), p)
-    return tiled_rows, flat_dest
+    r = routed_all_to_all(
+        data, valid, dests, p=p, c_out=c_out, cap_recv=cap_recv, fmt=fmt
+    )
+    return r.data, r.valid, r.sent, r.dropped_send, r.dropped_recv
 
 
 # ------------------------------------------- segmented (fused-group) exchange
-# An exchange split around its collective: ``*_start`` buckets + encodes
-# one op's send into a (p, nbytes) segment, ``ship_segments`` runs ONE
-# ``all_to_all`` over every segment of a fused op group concatenated
-# (mixed schemas/arities each keep their own format — arity-aware
-# segmentation instead of padding every op to the widest schema), and
-# ``exchange_finish`` decodes + compacts each op's received segment.
 def exchange_start(
     data: jax.Array,
     valid: jax.Array,
@@ -254,10 +123,10 @@ def exchange_start(
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Map stage of a packed exchange: returns (wire segment (p, nbytes),
     sent, dropped_send)."""
-    buf, buf_valid, sent, dropped_send = _bucketize(
-        data, jnp.where(valid, dest, p), p, c_out
+    wire, sent, dropped_send, _ = routed_start(
+        data, valid, dest, p=p, c_out=c_out, fmt=fmt
     )
-    return wire_encode(buf, buf_valid, fmt), sent, dropped_send
+    return wire, sent, dropped_send
 
 
 def exchange_multi_start(
@@ -270,17 +139,10 @@ def exchange_multi_start(
     fmt: WireFormat,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Map stage of a packed replicated send (``exchange_multi``)."""
-    tiled_rows, flat_dest = _multi_flatten(data, valid, dests, p)
-    buf, buf_valid, sent, dropped_send = _bucketize(tiled_rows, flat_dest, p, c_out)
-    return wire_encode(buf, buf_valid, fmt), sent, dropped_send
-
-
-def ship_segments(wires: Sequence[jax.Array]) -> List[jax.Array]:
-    """ONE ``all_to_all`` for a whole fused group: concatenate each
-    exchange's (p, nbytes_i) segment, ship, split back."""
-    seg = pack_segments(wires)
-    rseg = jax.lax.all_to_all(seg, AXIS, split_axis=0, concat_axis=0, tiled=False)
-    return split_segments(rseg, [w.shape[-1] for w in wires])
+    wire, sent, dropped_send, _ = routed_start(
+        data, valid, dests, p=p, c_out=c_out, fmt=fmt
+    )
+    return wire, sent, dropped_send
 
 
 def exchange_finish(
@@ -288,7 +150,4 @@ def exchange_finish(
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Reduce stage of a packed exchange: decode the received segment and
     compact.  Returns (rdata, rvalid, dropped_recv)."""
-    rbuf, rvalid = wire_decode(rwire, fmt, c_out)
-    flat = rbuf.reshape(p * c_out, -1)
-    flatv = rvalid.reshape(p * c_out)
-    return compact(flat, flatv, cap_recv)
+    return routed_finish(rwire, p=p, c_out=c_out, cap_recv=cap_recv, fmt=fmt)

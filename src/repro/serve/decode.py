@@ -25,8 +25,13 @@ def generate(
     temperature: float = 0.0,
     rng=None,
     pos=None,
-) -> jax.Array:
-    """Returns (B, steps) generated tokens (greedy if temperature=0)."""
+    return_logits: bool = False,
+):
+    """Returns (B, steps) generated tokens (greedy if temperature=0).
+
+    ``return_logits``: also return the per-step logits (B, steps, V) —
+    the handle serving-route parity tests compare (token ids alone can
+    mask near-tie divergence between dispatch implementations)."""
     b, s = prompt.shape
     s_cache = s_cache or (s + steps + 1)
     batch = {"tokens": prompt}
@@ -37,14 +42,19 @@ def generate(
 
     step_fn = jax.jit(model.decode_step)
     toks = []
+    lgts = [logits]
     tok = sample(logits, rng, temperature)
     toks.append(tok)
     for i in range(steps - 1):
         rng, k = jax.random.split(rng)
         logits, caches = step_fn(params, caches, tok)
+        lgts.append(logits)
         tok = sample(logits, k, temperature)
         toks.append(tok)
-    return jnp.stack(toks, axis=1)
+    out = jnp.stack(toks, axis=1)
+    if return_logits:
+        return out, jnp.stack(lgts, axis=1)
+    return out
 
 
 def generate_whisper(

@@ -20,22 +20,45 @@ class TrainConfig:
     accum: int = 1  # microbatches per step
     remat: bool = True
     compress_grads: bool = False  # int8 codec at the accumulation boundary
+    moe_metrics: bool = False  # surface MoE routing stats (moe_* metrics)
 
 
 def make_train_step(model, tcfg: TrainConfig) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics).  ``batch`` leading dim = global batch; accumulation splits it
     into ``accum`` microbatches via lax.scan (keeps peak activation memory
-    at 1/accum)."""
+    at 1/accum).
 
-    def loss_fn(params, mb):
-        return model.loss(params, mb, remat=tcfg.remat)
+    ``moe_metrics``: the loss runs via ``loss_and_stats`` (has_aux grad)
+    and metrics grow ``moe_routed`` / ``moe_dropped`` / ``moe_heavy`` —
+    exact per-step pair counts summed over MoE layers (and microbatches),
+    so a capacity drop in production is a visible metric, not silence."""
 
-    grad_fn = jax.value_and_grad(loss_fn)
+    _MOE_KEYS = ("routed", "dropped", "heavy")
+
+    if tcfg.moe_metrics:
+        def loss_fn(params, mb):
+            return model.loss_and_stats(params, mb, remat=tcfg.remat)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    else:
+        def loss_fn(params, mb):
+            return model.loss(params, mb, remat=tcfg.remat)
+
+        grad_fn = jax.value_and_grad(loss_fn)
+
+    def run_grad(params, mb):
+        """Uniform (loss, aux, grads) regardless of moe_metrics."""
+        if tcfg.moe_metrics:
+            (loss, aux), grads = grad_fn(params, mb)
+        else:
+            loss, grads = grad_fn(params, mb)
+            aux = {k: jnp.int32(0) for k in _MOE_KEYS}
+        return loss, aux, grads
 
     def train_step(params, opt_state, batch):
         if tcfg.accum == 1:
-            loss, grads = grad_fn(params, batch)
+            loss, moe, grads = run_grad(params, batch)
         else:
             def split(x):
                 b = x.shape[0] if x.ndim else 1
@@ -58,17 +81,21 @@ def make_train_step(model, tcfg: TrainConfig) -> Callable:
             mbs = split_batch(batch)
 
             def acc_step(carry, mb):
-                gsum, lsum = carry
-                l, g = grad_fn(params, mb)
+                gsum, lsum, msum = carry
+                l, aux, g = run_grad(params, mb)
                 gsum = jax.tree_util.tree_map(
                     lambda a, b: a + b.astype(a.dtype), gsum, g
                 )
-                return (gsum, lsum + l), None
+                msum = {k: msum[k] + aux[k] for k in _MOE_KEYS}
+                return (gsum, lsum + l, msum), None
 
             zeros = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            (gsum, lsum), _ = jax.lax.scan(acc_step, (zeros, 0.0), mbs)
+            mzero = {k: jnp.int32(0) for k in _MOE_KEYS}
+            (gsum, lsum, moe), _ = jax.lax.scan(
+                acc_step, (zeros, 0.0, mzero), mbs
+            )
             grads = jax.tree_util.tree_map(lambda g: g / tcfg.accum, gsum)
             loss = lsum / tcfg.accum
 
@@ -81,6 +108,8 @@ def make_train_step(model, tcfg: TrainConfig) -> Callable:
             "grad_norm": gnorm,
             "step": opt_state["step"],
         }
+        if tcfg.moe_metrics:
+            metrics.update({f"moe_{k}": moe[k] for k in _MOE_KEYS})
         return params, opt_state, metrics
 
     return train_step

@@ -16,7 +16,13 @@ EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
 
 
 @pytest.mark.parametrize(
-    "script", ["quickstart.py", "gym_fault_tolerance.py", "serve_joins.py"]
+    "script",
+    [
+        "quickstart.py",
+        "gym_fault_tolerance.py",
+        "serve_joins.py",
+        "moe_routing.py",
+    ],
 )
 def test_example_runs_clean(script, capsys):
     path = os.path.abspath(os.path.join(EXAMPLES, script))

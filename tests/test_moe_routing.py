@@ -1,0 +1,246 @@
+"""MoE token dispatch as the routed exchange's second customer (PR 10).
+
+Pins the contract the issue demands: ``moe_forward(route="calibrated")``
+is numerically equivalent to the dense scatter whenever the dense path
+does not drop, and on a planted hot-expert input where the dense path
+PROVABLY drops, the calibrated path (measured capacities + heavy split)
+drops nothing — with dropped counts exact, never estimated, in both
+routes.  Plus the two end-to-end scenarios (train step on a launch mesh,
+decode serving) and the jit-static plan discipline."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CONFIGS, get_model, make_smoke_batch, reduced_config
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.shardings import named, param_specs
+from repro.models.common import rms_norm
+from repro.models.mlp import init_moe, moe_forward, moe_forward_stats
+from repro.models.moe_routing import (
+    MoEPlan,
+    apply_plan,
+    calibrate_moe,
+    router_pairs,
+)
+from repro.relational import Ledger
+from repro.serve.decode import generate
+from repro.train import OptConfig, TrainConfig, init_train_state, make_train_step
+
+
+def _moe_cfg(**kw):
+    """Reduced kimi (4 experts, top-2, float32) with a capacity factor of
+    ``e`` so the dense route cannot drop — parity inputs by construction."""
+    cfg = reduced_config(CONFIGS["kimi-k2-1t-a32b"])
+    return dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts), **kw)
+
+
+def _layer_setup(seed=0, b=2, s=16, cfg=None):
+    cfg = cfg or _moe_cfg()
+    p = init_moe(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(
+        jax.random.PRNGKey(seed + 1), (b, s, cfg.d_model), jnp.float32
+    )
+    xf = rms_norm(x, p["ln"], cfg.norm_eps).reshape(b * s, cfg.d_model)
+    return cfg, p, x, xf
+
+
+def _hot_input(cfg, b, s, seed=99):
+    """Near-identical tokens: every token's top-k picks the SAME k
+    experts, so those experts' arrivals are ~t each — far past the dense
+    capacity ``1.25*t*k/e`` whenever k < e.  The planted skew input."""
+    kb, kn = jax.random.split(jax.random.PRNGKey(seed))
+    base = jax.random.normal(kb, (1, 1, cfg.d_model), jnp.float32)
+    noise = 0.01 * jax.random.normal(kn, (b, s, cfg.d_model), jnp.float32)
+    return jnp.broadcast_to(base, (b, s, cfg.d_model)) + noise
+
+
+def _dense_expected_drops(p, xf, cfg):
+    """Exact pair count the dense scatter must drop: arrivals beyond
+    ``cap`` per expert, from the SAME router math the layer runs."""
+    t = xf.shape[0]
+    e, k = cfg.n_experts, cfg.topk
+    cap = max(1, int(cfg.capacity_factor * t * k / e))
+    flat_e, _, _ = router_pairs(p, xf, cfg)
+    arr = np.bincount(np.asarray(flat_e), minlength=e)
+    return int(np.maximum(arr - cap, 0).sum()), arr
+
+
+# ---------------------------------------------------------------- parity
+def test_calibrated_matches_dense_when_no_drop():
+    cfg, p, x, xf = _layer_setup()
+    yd, sd = moe_forward_stats(p, x, cfg)
+    assert int(sd["dropped"]) == 0  # capacity_factor=e: dense can't drop
+    plan, _ = calibrate_moe(p, xf, cfg)
+    yc, sc = moe_forward_stats(p, x, apply_plan(cfg, plan))
+    assert int(sc["dropped"]) == 0
+    assert int(sc["routed"]) == int(sd["routed"]) == x.shape[0] * x.shape[1] * cfg.topk
+    np.testing.assert_allclose(
+        np.asarray(yd), np.asarray(yc), atol=2e-5, rtol=2e-5
+    )
+    # moe_forward (stats-free wrapper) is the same computation
+    np.testing.assert_array_equal(
+        np.asarray(moe_forward(p, x, apply_plan(cfg, plan))), np.asarray(yc)
+    )
+
+
+def test_sound_plan_needs_no_measure():
+    cfg, p, x, _ = _layer_setup(seed=3)
+    t = x.shape[0] * x.shape[1]
+    plan = MoEPlan.sound(t, cfg.topk, cfg.n_experts)
+    yd, _ = moe_forward_stats(p, x, cfg)
+    yc, sc = moe_forward_stats(p, x, apply_plan(cfg, plan))
+    assert int(sc["dropped"]) == 0  # sound caps: drops impossible
+    np.testing.assert_allclose(
+        np.asarray(yd), np.asarray(yc), atol=2e-5, rtol=2e-5
+    )
+
+
+# ------------------------------------------------------- planted hot expert
+def test_hot_expert_dense_drops_calibrated_does_not():
+    """The acceptance scenario: an input where the dense scatter loses
+    tokens over capacity (exact count asserted) while the calibrated
+    route — capacities measured, hot expert heavy-split — drops zero."""
+    cfg = reduced_config(CONFIGS["kimi-k2-1t-a32b"])  # capacity_factor 1.25
+    p = init_moe(jax.random.PRNGKey(5), cfg)
+    x = _hot_input(cfg, b=2, s=32)
+    xf = rms_norm(x, p["ln"], cfg.norm_eps).reshape(64, cfg.d_model)
+
+    want_drop, arrivals = _dense_expected_drops(p, xf, cfg)
+    assert want_drop > 0, arrivals  # the plant worked: dense MUST drop
+
+    _, sd = moe_forward_stats(p, x, cfg)
+    assert int(sd["dropped"]) == want_drop  # exact, not approximate
+    assert int(sd["routed"]) == xf.shape[0] * cfg.topk - want_drop
+
+    plan, info = calibrate_moe(p, xf, cfg, threshold=1.5)
+    assert plan.heavy, info  # the hot experts were flagged
+    _, sc = moe_forward_stats(p, x, apply_plan(cfg, plan))
+    assert int(sc["dropped"]) == 0  # measured caps: provably no drop
+    assert int(sc["routed"]) == xf.shape[0] * cfg.topk
+    assert int(sc["heavy"]) >= int(arrivals[plan.heavy[0]])
+
+
+def test_recv_ceiling_reports_exact_drops():
+    """Clipping the receive capacity (an M-style memory bound) makes the
+    calibrated route drop — and the count must equal the host-side
+    arrivals-over-capacity computation, not a bound."""
+    cfg, p, x, xf = _layer_setup(seed=7)
+    # no heavy spreading: drops land per-expert and are exactly predictable
+    plan, _ = calibrate_moe(p, xf, cfg, threshold=1e9, cap_recv_ceiling=16)
+    assert plan.cap_recv == 16 and not plan.heavy
+    flat_e, _, _ = router_pairs(p, xf, cfg)
+    arr = np.bincount(np.asarray(flat_e), minlength=cfg.n_experts)
+    want = int(np.maximum(arr - plan.cap_recv, 0).sum())
+    assert want > 0, arr
+    _, sc = moe_forward_stats(p, x, apply_plan(cfg, plan))
+    assert int(sc["dropped"]) == want
+
+
+# ------------------------------------------------------------- train step
+def test_train_step_scenario_parity_and_metrics():
+    """Full train step on a launch mesh: the calibrated route trains —
+    same loss as dense (no-drop input), grads flow through both
+    exchanges, and moe_* metrics report the exact pair counts."""
+    cfg = _moe_cfg()
+    model = get_model(cfg)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-2, warmup=1), moe_metrics=True)
+    params, opt_state = init_train_state(model, tcfg, jax.random.PRNGKey(0))
+    batch = make_smoke_batch(cfg, jax.random.PRNGKey(1), b=4, s=16)
+
+    mesh = make_debug_mesh(1, 1)
+    params = jax.device_put(params, named(mesh, param_specs(params, mesh)))
+
+    # a sound plan covers every layer's routing without a per-layer measure
+    plan = MoEPlan.sound(4 * 16, cfg.topk, cfg.n_experts)
+    ccfg = apply_plan(cfg, plan)
+    cmodel = get_model(ccfg)
+
+    dstep = jax.jit(make_train_step(model, tcfg))
+    cstep = jax.jit(make_train_step(cmodel, tcfg))
+    pd, od, md = dstep(params, opt_state, batch)
+    pc, oc, mc = cstep(params, opt_state, batch)
+    np.testing.assert_allclose(
+        float(md["loss"]), float(mc["loss"]), rtol=1e-5
+    )
+    n_moe = sum(1 for k in cfg.blocks() if k == "moe")
+    assert int(mc["moe_routed"]) == 4 * 16 * cfg.topk * n_moe
+    assert int(mc["moe_dropped"]) == 0
+    for a, b in zip(jax.tree_util.tree_leaves(pd), jax.tree_util.tree_leaves(pc)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=5e-5, rtol=5e-3,
+        )
+    # accumulation path carries the aux through the scan too
+    t4 = TrainConfig(opt=OptConfig(lr=1e-2, warmup=1), accum=4, moe_metrics=True)
+    _, _, m4 = jax.jit(make_train_step(cmodel, t4))(params, opt_state, batch)
+    assert int(m4["moe_routed"]) == int(mc["moe_routed"])
+
+
+# ------------------------------------------------------------ decode serve
+def test_decode_serve_scenario_parity():
+    """Serving: one MoEPlan covers prefill (t=b*s) AND per-token decode
+    (t=b); generated tokens and per-step logits match the dense route."""
+    cfg = _moe_cfg()
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, cfg.vocab)
+
+    plan = MoEPlan.sound(2 * 8, cfg.topk, cfg.n_experts)
+    cmodel = get_model(apply_plan(cfg, plan))
+
+    td, ld = generate(model, params, prompt, steps=4, return_logits=True)
+    tc, lc = generate(cmodel, params, prompt, steps=4, return_logits=True)
+    np.testing.assert_array_equal(np.asarray(td), np.asarray(tc))
+    np.testing.assert_allclose(
+        np.asarray(ld), np.asarray(lc), atol=5e-5, rtol=5e-4
+    )
+
+
+# ------------------------------------------------------------------ plan
+def test_plan_is_hashable_and_jit_static():
+    plan = MoEPlan(e=4, k=2, tpp=8, cap_send=8, cap_recv=32, heavy=(1,))
+    assert hash(plan) == hash(
+        MoEPlan(e=4, k=2, tpp=8, cap_send=8, cap_recv=32, heavy=(1,))
+    )
+    cfg = apply_plan(_moe_cfg(), plan)
+    hash(cfg)  # the whole config stays a valid static argument
+    assert plan.ret_cap_recv == 16 and plan.ret_cap_send == 16
+
+    # pow2-bucketed capacities: one compiled program across batches
+    cfg, p, x, xf = _layer_setup(seed=11)
+    plan, _ = calibrate_moe(p, xf, cfg)
+    traces = []
+
+    @jax.jit
+    def fwd(p, x):
+        traces.append(1)
+        return moe_forward_stats(p, x, apply_plan(cfg, plan))
+
+    fwd(p, x)
+    fwd(p, x + 1.0)
+    assert len(traces) == 1
+
+
+def test_calibration_ledger_record():
+    from repro.models.moe_routing import record_dense_round, record_moe_round
+
+    cfg, p, x, xf = _layer_setup(seed=13)
+    plan, _ = calibrate_moe(p, xf, cfg)
+    _, sc = moe_forward_stats(p, x, apply_plan(cfg, plan))
+    _, sd = moe_forward_stats(p, x, cfg)
+    led = Ledger()
+    record_moe_round(led, {k: int(v) for k, v in sc.items()}, plan=plan,
+                     d=cfg.d_model, note="calibrated")
+    record_dense_round(led, {k: int(v) for k, v in sd.items()}, cfg=cfg,
+                       t=xf.shape[0], d=cfg.d_model, note="dense")
+    s = led.summary()
+    assert s["comm_tuples"] == int(sc["routed"]) + int(sd["routed"])
+    assert s["dropped_tuples"] == 0
+    assert s["payload_bytes"] > 0 and s["useful_bytes"] > 0
+    assert "heavy_dests" in s
+    assert "Ledger(" in repr(led)

@@ -1,0 +1,254 @@
+"""The extracted ``routed_all_to_all`` primitive (PR 10).
+
+The refactor moved the exchange machinery (count pre-pass, heavy split,
+wire packing, split-phase) out of ``shuffle``/``physical`` into
+``relational.routed``; these tests pin the primitive's semantics
+directly — delivery against a numpy oracle, dtype-generality (float
+payloads, the MoE customer's requirement), heavy-hitter spreading
+conservation, split-phase equivalence, and the ``RoutePolicy`` facade
+the engines now consume."""
+from __future__ import annotations
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.relational import shuffle as S
+from repro.relational.routed import (
+    RoutePolicy,
+    route_counts,
+    routed_all_to_all,
+    routed_finish,
+    routed_start,
+    ship_segments,
+)
+from repro.relational.spmd import AXIS
+from repro.relational.wire import WirePolicy
+
+P, N, AR = 4, 12, 3
+
+
+def _mk(seed=0, dom=7, frac_valid=0.8):
+    rng = np.random.RandomState(seed)
+    data = rng.randint(0, dom, size=(P, N, AR)).astype(np.int32)
+    valid = rng.rand(P, N) < frac_valid
+    dest = rng.randint(0, P, size=(P, N)).astype(np.int32)
+    return jnp.asarray(data), jnp.asarray(valid), jnp.asarray(dest)
+
+
+def _run(fn, *args):
+    return jax.vmap(fn, axis_name=AXIS)(*args)
+
+
+def _sent_rows(data, valid, dest, want=None):
+    """Multiset (sorted array) of rows sent (optionally to one dest)."""
+    data, valid, dest = map(np.asarray, (data, valid, dest))
+    rows = []
+    for s in range(P):
+        for i in range(N):
+            if valid[s, i] and (want is None or dest[s, i] == want):
+                rows.append(data[s, i])
+    if not rows:
+        return np.zeros((0, data.shape[-1]), np.int32)
+    r = np.stack(rows)
+    return r[np.lexsort(r.T[::-1])]
+
+
+def _recv_rows(rdata, rvalid, shard=None):
+    rdata, rvalid = np.asarray(rdata), np.asarray(rvalid)
+    sel = rdata[rvalid] if shard is None else rdata[shard][rvalid[shard]]
+    if not len(sel):
+        return np.zeros((0, rdata.shape[-1]), rdata.dtype)
+    return sel[np.lexsort(sel.T[::-1])]
+
+
+# ------------------------------------------------------------- delivery
+def test_delivery_matches_oracle():
+    data, valid, dest = _mk(1)
+    r = _run(
+        lambda d, v, t: routed_all_to_all(d, v, t, p=P, c_out=8, cap_recv=64),
+        data, valid, dest,
+    )
+    assert int(r.dropped_send.sum()) == 0 and int(r.dropped_recv.sum()) == 0
+    assert int(r.sent.sum()) == int(np.asarray(valid).sum())
+    for s in range(P):
+        np.testing.assert_array_equal(
+            _recv_rows(r.data, r.valid, s), _sent_rows(data, valid, dest, s)
+        )
+
+
+def test_packed_wire_bit_identical_to_dense():
+    data, valid, dest = _mk(2)
+    fmt = WirePolicy((("a", 3), ("b", 3), ("c", 3))).format_for(("a", "b", "c"))
+    args = dict(p=P, c_out=8, cap_recv=64)
+    rd = _run(lambda d, v, t: routed_all_to_all(d, v, t, **args), data, valid, dest)
+    rp = _run(
+        lambda d, v, t: routed_all_to_all(d, v, t, fmt=fmt, **args),
+        data, valid, dest,
+    )
+    for s in range(P):
+        np.testing.assert_array_equal(
+            _recv_rows(rd.data, rd.valid, s), _recv_rows(rp.data, rp.valid, s)
+        )
+    np.testing.assert_array_equal(np.asarray(rd.sent), np.asarray(rp.sent))
+
+
+def test_float_payload_roundtrip():
+    """The MoE customer ships float32 activation rows — the primitive must
+    be dtype-generic, not int32-only like the join tables."""
+    rng = np.random.RandomState(3)
+    data = rng.randn(P, N, AR).astype(np.float32)
+    valid = jnp.asarray(rng.rand(P, N) < 0.7)
+    dest = jnp.asarray(rng.randint(0, P, size=(P, N)).astype(np.int32))
+    r = _run(
+        lambda d, v, t: routed_all_to_all(d, v, t, p=P, c_out=8, cap_recv=64),
+        jnp.asarray(data), valid, dest,
+    )
+    assert np.asarray(r.data).dtype == np.float32
+    for s in range(P):
+        got = np.sort(_recv_rows(r.data, r.valid, s), axis=0)
+        want = np.sort(_sent_rows(data, valid, dest, s), axis=0)
+        np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------- heavy split
+def test_heavy_spread_conserves_and_balances():
+    """All rows aimed at one hot destination: the heavy split must deliver
+    every row exactly once, spread them ~evenly over all shards, and
+    report the spread count in ``heavy_sent``."""
+    rng = np.random.RandomState(4)
+    data = rng.randint(0, 9, size=(P, N, AR)).astype(np.int32)
+    valid = np.ones((P, N), bool)
+    dest = np.zeros((P, N), np.int32)  # everyone hits shard 0
+    heavy = jnp.asarray(np.arange(P) == 0)
+    r = _run(
+        lambda d, v, t: routed_all_to_all(
+            d, v, t, p=P, c_out=16, cap_recv=64, heavy=heavy
+        ),
+        jnp.asarray(data), jnp.asarray(valid), jnp.asarray(dest),
+    )
+    assert int(r.dropped_send.sum()) == 0 and int(r.dropped_recv.sum()) == 0
+    assert int(r.heavy_sent.sum()) == P * N  # every row went via the spread
+    np.testing.assert_array_equal(  # union of deliveries == all rows
+        _recv_rows(r.data, r.valid), _sent_rows(data, valid, dest)
+    )
+    per_shard = np.asarray(r.valid).sum(axis=1)
+    assert per_shard.max() - per_shard.min() <= 1  # round-robin balance
+
+
+def test_heavy_light_mix_keeps_light_local():
+    rng = np.random.RandomState(5)
+    data = rng.randint(0, 9, size=(P, N, AR)).astype(np.int32)
+    valid = np.ones((P, N), bool)
+    dest = rng.randint(0, P, size=(P, N)).astype(np.int32)
+    heavy_id = 2
+    heavy = jnp.asarray(np.arange(P) == heavy_id)
+    r = _run(
+        lambda d, v, t: routed_all_to_all(
+            d, v, t, p=P, c_out=16, cap_recv=64, heavy=heavy
+        ),
+        jnp.asarray(data), jnp.asarray(valid), jnp.asarray(dest),
+    )
+    assert int(r.heavy_sent.sum()) == int((dest == heavy_id).sum())
+    for s in range(P):  # light rows still land on their destination
+        if s == heavy_id:
+            continue
+        want = _sent_rows(data, valid, dest, s)
+        got = _recv_rows(r.data, r.valid, s)
+        # shard s also receives its round-robin slice of heavy rows:
+        # every light row must be a subset of what landed there
+        wset = {tuple(x) for x in want}
+        gl = [tuple(x) for x in got]
+        for w in wset:
+            assert w in gl
+
+
+# ----------------------------------------------------------- split phase
+def test_split_phase_equals_fused():
+    data, valid, dest = _mk(6)
+    fmt = WirePolicy((("a", 3), ("b", 3), ("c", 3))).format_for(("a", "b", "c"))
+    fused = _run(
+        lambda d, v, t: routed_all_to_all(
+            d, v, t, p=P, c_out=8, cap_recv=64, fmt=fmt
+        ),
+        data, valid, dest,
+    )
+
+    def split(d, v, t):
+        wire, sent, dsend, hs = routed_start(d, v, t, p=P, c_out=8, fmt=fmt)
+        (rwire,) = ship_segments([wire])
+        rdata, rvalid, drecv = routed_finish(
+            rwire, p=P, c_out=8, cap_recv=64, fmt=fmt
+        )
+        return rdata, rvalid, sent, dsend, drecv, hs
+
+    sp = _run(split, data, valid, dest)
+    for s in range(P):
+        np.testing.assert_array_equal(
+            _recv_rows(fused.data, fused.valid, s), _recv_rows(sp[0], sp[1], s)
+        )
+    np.testing.assert_array_equal(np.asarray(fused.sent), np.asarray(sp[2]))
+
+
+# ----------------------------------------------------------- multi-dest
+def test_multi_dest_matches_exchange_multi():
+    rng = np.random.RandomState(7)
+    data = rng.randint(0, 7, size=(P, N, AR)).astype(np.int32)
+    valid = rng.rand(P, N) < 0.8
+    dests = rng.randint(0, P, size=(P, N, 2)).astype(np.int32)
+    args = dict(p=P, c_out=16, cap_recv=128)
+    r = _run(
+        lambda d, v, t: routed_all_to_all(d, v, t, **args),
+        jnp.asarray(data), jnp.asarray(valid), jnp.asarray(dests),
+    )
+    old = _run(
+        lambda d, v, t: S.exchange_multi(d, v, t, **args),
+        jnp.asarray(data), jnp.asarray(valid), jnp.asarray(dests),
+    )
+    for s in range(P):
+        np.testing.assert_array_equal(
+            _recv_rows(r.data, r.valid, s), _recv_rows(old[0], old[1], s)
+        )
+    np.testing.assert_array_equal(np.asarray(r.sent), np.asarray(old[2]))
+
+
+# ------------------------------------------------------------ veneer pin
+def test_shuffle_exchange_is_thin_veneer():
+    """``shuffle.exchange`` (the join engines' entry) must return exactly
+    the primitive's fields minus ``heavy_sent`` — same arrays, same order."""
+    data, valid, dest = _mk(8)
+    args = dict(p=P, c_out=8, cap_recv=64)
+    r = _run(
+        lambda d, v, t: routed_all_to_all(d, v, t, **args), data, valid, dest
+    )
+    old = _run(lambda d, v, t: S.exchange(d, v, t, **args), data, valid, dest)
+    np.testing.assert_array_equal(np.asarray(r.data), np.asarray(old[0]))
+    np.testing.assert_array_equal(np.asarray(r.valid), np.asarray(old[1]))
+    np.testing.assert_array_equal(np.asarray(r.sent), np.asarray(old[2]))
+
+
+def test_route_counts_is_exchange_counts():
+    data, valid, dest = _mk(9)
+    flat = jnp.where(valid, dest, P)
+    a = _run(lambda t: route_counts(t, P), flat)
+    b = _run(lambda t: S.exchange_counts(t, P), flat)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+# -------------------------------------------------------------- policy
+def test_route_policy_heavy_flags_and_fmt():
+    pol = RoutePolicy(
+        wire_policy=WirePolicy((("a", 3), ("b", 3), ("c", 3))),
+        skew_threshold=2.0,
+    )
+    fmt = pol.fmt_for([("a", "b"), ("b", "c")])
+    assert fmt is not None and fmt.arity == 2
+    counts = np.zeros((P, P), np.int64)
+    counts[:, 0] = 100  # shard 0 is hammered
+    counts[:, 1:] = 1
+    flags = pol.heavy_flags(counts, P)
+    assert bool(flags[0]) and not flags[1:].any()
+    assert RoutePolicy().fmt_for([("a",)]) is None  # no policy -> dense
